@@ -1,0 +1,38 @@
+"""Paper Table III + Figs 5-8: per-routine CP-ALS runtime breakdown.
+
+Runs 20 ALS iterations at rank 35 (the paper's setting) on YELP- and
+NELL-2-shaped synthetic tensors (CPU-scaled) and reports seconds per routine
+(sort / mttkrp / ata / inverse / norm / fit), for the naive and optimized
+MTTKRP paths.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import cp_als, paper_dataset
+
+from .common import emit
+
+
+def run(scale: float = 0.002, rank: int = 35, niters: int = 20):
+    key = jax.random.PRNGKey(3)
+    rows = []
+    for name in ("yelp", "nell-2"):
+        t = paper_dataset(name, key, scale=scale)
+        for impl in ("gather_scatter", "segment"):
+            # warm every jit cache so per-routine timers measure execution,
+            # not first-call compilation
+            cp_als(t, rank=rank, niters=2, impl=impl, key=key, timers={})
+            timers: dict = {}
+            dec = cp_als(t, rank=rank, niters=niters, impl=impl, key=key,
+                         timers=timers)
+            row = {"bench": "cpals_routines", "dataset": name, "impl": impl,
+                   "nnz": t.nnz, "fit": round(float(dec.fit), 4)}
+            for k in ("sort", "mttkrp", "ata", "inverse", "norm", "fit"):
+                row[f"{k}_s"] = round(timers.get(k, 0.0), 4)
+            rows.append(row)
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

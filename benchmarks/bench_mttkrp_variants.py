@@ -1,0 +1,63 @@
+"""Paper Figs 2/3/9/10: MTTKRP implementation-strategy ablation.
+
+Variants map the paper's progression:
+  rowloop        = Chapel-initial (slicing, row-at-a-time)    [tiny size only]
+  gather_scatter = 2D-indexing / atomic-collision regime
+  segment        = pointer+sort no-lock regime (CSF-flat)
+  pallas         = the TPU kernel (interpret mode on CPU — structural, slow
+                   in absolute terms here; its wall-clock is reported for
+                   completeness, its real target is the dry-run)
+
+Data sets: YELP-shaped (skewed -> collisions) and NELL-2-shaped (uniform),
+scaled to CPU size, per paper Table I.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (build_csf, build_csf_tiled, init_factors, mttkrp,
+                        paper_dataset)
+
+from .common import emit, timeit
+
+
+def run(scale: float = 0.004, rank: int = 35, *, with_rowloop: bool = False):
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for name in ("yelp", "nell-2"):
+        t = paper_dataset(name, key, scale=scale)
+        factors = init_factors(t.dims, rank, key)
+        mode = 0
+        csf = build_csf(t, mode, block=512)
+        csft = build_csf_tiled(t, mode, block=256, row_tile=128)
+
+        fns = {
+            "gather_scatter": jax.jit(partial(mttkrp, impl="gather_scatter",
+                                              mode=mode)),
+            "segment": jax.jit(partial(mttkrp, impl="segment", mode=mode)),
+            "pallas": jax.jit(partial(mttkrp, impl="pallas", mode=mode)),
+        }
+        args = {"gather_scatter": t, "segment": csf, "pallas": csft}
+        for impl, fn in fns.items():
+            sec = timeit(fn, args[impl], factors)
+            rows.append({"bench": "mttkrp_variants", "dataset": name,
+                         "impl": impl, "nnz": t.nnz, "rank": rank,
+                         "ms": round(sec * 1e3, 3)})
+        if with_rowloop:
+            # Chapel-initial analogue: O(nnz) sequential — tiny slice only
+            from repro.core.coo import SparseTensor
+            small = SparseTensor(inds=t.inds[:2000], vals=t.vals[:2000],
+                                 dims=t.dims, nnz=2000)
+            fn = jax.jit(partial(mttkrp, impl="rowloop", mode=mode))
+            sec = timeit(fn, small, factors, iters=1)
+            rows.append({"bench": "mttkrp_variants", "dataset": name,
+                         "impl": "rowloop(2k nnz)", "nnz": 2000, "rank": rank,
+                         "ms": round(sec * 1e3, 3)})
+    return rows
+
+
+if __name__ == "__main__":
+    emit(run())

@@ -1,0 +1,29 @@
+"""Shared benchmark utilities: timed jit calls, CSV output."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3, **kwargs) -> float:
+    """Median wall-clock seconds of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kwargs))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kwargs))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(rows: list[dict], *, header: bool = True) -> None:
+    if not rows:
+        return
+    keys = list(rows[0].keys())
+    if header:
+        print(",".join(keys))
+    for r in rows:
+        print(",".join(str(r[k]) for k in keys))

@@ -1,0 +1,46 @@
+"""Benchmark aggregator: one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # all, CPU-scaled
+  PYTHONPATH=src python -m benchmarks.run --quick    # smaller still
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from . import (bench_conflict, bench_cpals_routines, bench_mttkrp_variants,
+               bench_scaling, bench_sort_build)
+from .common import emit
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--skip-scaling", action="store_true")
+    args = ap.parse_args()
+    q = args.quick
+
+    t0 = time.time()
+    print("# bench_mttkrp_variants (paper Figs 2/3/9/10)")
+    emit(bench_mttkrp_variants.run(scale=0.002 if q else 0.004,
+                                   with_rowloop=not q))
+    print()
+    print("# bench_sort_build (paper Fig 1)")
+    emit(bench_sort_build.run(scale=0.0008 if q else 0.0015))
+    print()
+    print("# bench_conflict (paper Fig 4)")
+    emit(bench_conflict.run(nnz=60_000 if q else 200_000))
+    print()
+    print("# bench_cpals_routines (paper Table III / Figs 5-8)")
+    emit(bench_cpals_routines.run(scale=0.001 if q else 0.002,
+                                  niters=5 if q else 20))
+    print()
+    if not args.skip_scaling:
+        print("# bench_scaling (paper Figs 9/10 analogue: host devices)")
+        emit(bench_scaling.run())
+        print()
+    print(f"# total wall: {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Batched serving example: prefill a batch of prompts, then decode with the
+per-arch cache (KV cache / RWKV state / RG-LRU state).
+
+  PYTHONPATH=src python examples/serve_lm.py --arch rwkv6-3b
+  PYTHONPATH=src python examples/serve_lm.py --arch recurrentgemma-9b
+"""
+import argparse
+
+from repro import configs
+from repro.launch.serve import serve
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="llama3.2-3b", choices=configs.ARCH_NAMES)
+ap.add_argument("--batch", type=int, default=4)
+ap.add_argument("--prompt-len", type=int, default=32)
+ap.add_argument("--gen", type=int, default=16)
+args = ap.parse_args()
+
+out = serve(args.arch, smoke=True, batch=args.batch,
+            prompt_len=args.prompt_len, gen=args.gen)
+print(f"arch={args.arch}  prefill={out['prefill_s']:.2f}s  "
+      f"decode={out['decode_s']:.2f}s  ({out['decode_tok_s']:,.0f} tok/s)")
+for i in range(min(2, args.batch)):
+    print(f"  request {i}: generated {out['tokens'][i][:10].tolist()} ...")

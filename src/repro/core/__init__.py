@@ -1,0 +1,16 @@
+"""repro.core — the paper's contribution: sparse CP-ALS (SPLATT) in JAX."""
+from .coo import SparseTensor, random_sparse, from_factors, paper_dataset, read_tns, write_tns, PAPER_DATASETS, dedupe
+from .csf import CSFFlat, CSFTiled, build_csf, build_csf_tiled, build_all_modes
+from .mttkrp import mttkrp, mttkrp_dense, mttkrp_gather_scatter, mttkrp_segment, mttkrp_rowloop, IMPLS
+from .gram import gram, hadamard_grams, solve_cholesky, normalize, kruskal_fit, kruskal_norm_sq, kruskal_inner
+from .cpals import cp_als, CPDecomp, CPALSState, build_workspace, init_factors
+
+__all__ = [
+    "SparseTensor", "random_sparse", "from_factors", "paper_dataset", "read_tns",
+    "write_tns", "PAPER_DATASETS", "CSFFlat", "CSFTiled", "build_csf",
+    "build_csf_tiled", "build_all_modes", "mttkrp", "mttkrp_dense",
+    "mttkrp_gather_scatter", "mttkrp_segment", "mttkrp_rowloop", "IMPLS",
+    "gram", "hadamard_grams", "solve_cholesky", "normalize", "kruskal_fit",
+    "kruskal_norm_sq", "kruskal_inner", "cp_als", "CPDecomp", "CPALSState",
+    "build_workspace", "init_factors",
+]

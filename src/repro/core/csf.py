@@ -1,0 +1,328 @@
+"""CSF-flat: the TPU adaptation of SPLATT's compressed sparse fiber layout.
+
+SPLATT stores one CSF tree per mode (``ALLMODE``) so that the MTTKRP for mode
+``n`` walks fibers rooted at mode-``n`` slices: every thread owns a range of
+output rows and (on the no-lock path) never collides. The pointer tree itself
+does not map to a TPU, but the *schedule* does: sorting the non-zeros by the
+output-row index gives
+
+  * contiguous output-row tiles per non-zero block (the Pallas kernel writes
+    one VMEM-resident row tile per grid step),
+  * SPLATT's "no-lock" property between blocks (a row never spans two tiles'
+    ownership — collisions exist only *inside* a block where the kernel
+    resolves them with a one-hot MXU matmul).
+
+``build_csf`` is the analogue of the paper's "Sort" pre-processing stage
+(Table III) and is what the sort-optimization benchmark (paper Fig. 1) times.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .coo import SparseTensor
+
+Array = jax.Array
+
+# Default non-zero block: 8 sublanes x 128 lanes is the fp32 VMEM tile; 1024
+# nnz per block keeps the one-hot segment matrix (ROWS x BLOCK) MXU-friendly.
+DEFAULT_BLOCK = 1024
+# Output rows owned by one grid step of the Pallas kernel.
+DEFAULT_ROW_TILE = 128
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class CSFFlat:
+    """Per-mode sorted, block-padded sparse layout.
+
+    mode:      the output mode this replica is sorted by (static).
+    row_ids:   (pnnz,) int32, non-decreasing; == dims[mode] for padding.
+    other_ids: (pnnz, order-1) int32 indices of the remaining modes, in
+               ascending mode order (static ``other_modes`` gives the map).
+    vals:      (pnnz,) values, 0 for padding.
+    block_first_row / block_last_row: (pnnz/block,) int32 — first/last logical
+               row touched by each block (drives the kernel's row-tile map).
+    """
+
+    mode: int
+    row_ids: Array
+    other_ids: Array
+    vals: Array
+    block_first_row: Array
+    block_last_row: Array
+    dims: tuple[int, ...]
+    nnz: int
+    block: int
+
+    def tree_flatten(self):
+        children = (
+            self.row_ids,
+            self.other_ids,
+            self.vals,
+            self.block_first_row,
+            self.block_last_row,
+        )
+        aux = (self.mode, self.dims, self.nnz, self.block)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        mode, dims, nnz, block = aux
+        row_ids, other_ids, vals, bfr, blr = children
+        return cls(
+            mode=mode,
+            row_ids=row_ids,
+            other_ids=other_ids,
+            vals=vals,
+            block_first_row=bfr,
+            block_last_row=blr,
+            dims=dims,
+            nnz=nnz,
+            block=block,
+        )
+
+    @property
+    def order(self) -> int:
+        return len(self.dims)
+
+    @property
+    def other_modes(self) -> tuple[int, ...]:
+        return tuple(m for m in range(self.order) if m != self.mode)
+
+    @property
+    def num_rows(self) -> int:
+        return self.dims[self.mode]
+
+    @property
+    def padded_nnz(self) -> int:
+        return int(self.vals.shape[0])
+
+    @property
+    def num_blocks(self) -> int:
+        return self.padded_nnz // self.block
+
+
+def build_csf(
+    t: SparseTensor, mode: int, *, block: int = DEFAULT_BLOCK
+) -> CSFFlat:
+    """Sort non-zeros by ``mode`` (then remaining modes) and block-pad.
+
+    Vectorized build: a single ``lexsort`` + flat gathers, host-side numpy
+    (pre-processing runs on the host, like SPLATT's sort).  This is the
+    optimized analogue of the paper's §V-C finding — the initial Chapel sort
+    was slow because of per-call array allocation and slice copies, fixed by
+    flat pointer-style operations; here the whole build is a handful of
+    vectorized array ops (the slow path lives in
+    benchmarks/bench_sort_build.py for contrast).
+    """
+    order = t.order
+    if not 0 <= mode < order:
+        raise ValueError(f"mode {mode} out of range for order-{order} tensor")
+    other = tuple(m for m in range(order) if m != mode)
+    inds = np.asarray(t.inds[: t.nnz])
+    in_vals = np.asarray(t.vals[: t.nnz])
+
+    # lexsort: primary key = mode index, then other modes for fiber locality.
+    keys = tuple(inds[:, m] for m in reversed(other)) + (inds[:, mode],)
+    perm = np.lexsort(keys)
+    row_ids = inds[perm, mode].astype(np.int32)
+    other_ids = inds[perm][:, list(other)].astype(np.int32)
+    vals = in_vals[perm]
+
+    # Block padding: padding rows get row == dims[mode] (a dummy row that the
+    # MTTKRP output slices off) and value 0.
+    n = int(vals.shape[0])
+    pnnz = ((n + block - 1) // block) * block
+    pad = pnnz - n
+    if pad:
+        row_ids = np.concatenate(
+            [row_ids, np.full((pad,), t.dims[mode], dtype=np.int32)])
+        other_ids = np.concatenate(
+            [other_ids, np.zeros((pad, order - 1), dtype=np.int32)])
+        vals = np.concatenate([vals, np.zeros((pad,), dtype=vals.dtype)])
+
+    blocks = row_ids.reshape(pnnz // block, block)
+    # padding rows sort to the end; clamp so block row ranges stay in-bounds.
+    clamped = np.minimum(blocks, t.dims[mode] - 1)
+    block_first_row = clamped[:, 0].astype(np.int32)
+    block_last_row = clamped[:, -1].astype(np.int32)
+
+    return CSFFlat(
+        mode=mode,
+        row_ids=jnp.asarray(row_ids),
+        other_ids=jnp.asarray(other_ids),
+        vals=jnp.asarray(vals),
+        block_first_row=jnp.asarray(block_first_row),
+        block_last_row=jnp.asarray(block_last_row),
+        dims=t.dims,
+        nnz=t.nnz,
+        block=block,
+    )
+
+
+def build_all_modes(
+    t: SparseTensor, *, block: int = DEFAULT_BLOCK
+) -> list[CSFFlat]:
+    """One sorted replica per mode — SPLATT's ALLMODE storage policy."""
+    return [build_csf(t, m, block=block) for m in range(t.order)]
+
+
+# ---------------------------------------------------------------------------
+# Tile-aligned layout for the Pallas kernel
+# ---------------------------------------------------------------------------
+#
+# The kernel wants the stronger invariant "every non-zero block writes exactly
+# one row_tile-row output tile".  We get it at build time: group non-zeros by
+# output row-tile (row // row_tile) and pad each group to a block multiple.
+# Empty row-tiles get one all-padding block so every output tile is visited
+# (Pallas output buffers are not zero-initialised).  ``block_tile`` is the
+# non-decreasing block -> output-tile map consumed via scalar prefetch.
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class CSFTiled:
+    """Per-mode sorted, row-tile-aligned, block-padded sparse layout."""
+
+    mode: int
+    row_ids: Array        # (pnnz,) int32; padding rows point at their tile's
+                          # first row (value 0 makes them no-ops)
+    other_ids: Array      # (pnnz, order-1) int32
+    vals: Array           # (pnnz,) values, 0 for padding
+    block_tile: Array     # (pnnz/block,) int32, non-decreasing
+    dims: tuple[int, ...]
+    nnz: int
+    block: int
+    row_tile: int
+
+    def tree_flatten(self):
+        children = (self.row_ids, self.other_ids, self.vals, self.block_tile)
+        aux = (self.mode, self.dims, self.nnz, self.block, self.row_tile)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        mode, dims, nnz, block, row_tile = aux
+        row_ids, other_ids, vals, block_tile = children
+        return cls(mode, row_ids, other_ids, vals, block_tile, dims, nnz, block, row_tile)
+
+    @property
+    def order(self) -> int:
+        return len(self.dims)
+
+    @property
+    def other_modes(self) -> tuple[int, ...]:
+        return tuple(m for m in range(self.order) if m != self.mode)
+
+    @property
+    def num_rows(self) -> int:
+        return self.dims[self.mode]
+
+    @property
+    def num_row_tiles(self) -> int:
+        return -(-self.dims[self.mode] // self.row_tile)
+
+    @property
+    def padded_nnz(self) -> int:
+        return int(self.vals.shape[0])
+
+    @property
+    def num_blocks(self) -> int:
+        return self.padded_nnz // self.block
+
+    @property
+    def padding_overhead(self) -> float:
+        """Fraction of entries that are padding (the layout's cost)."""
+        return 1.0 - self.nnz / max(1, self.padded_nnz)
+
+
+def build_csf_tiled(
+    t: SparseTensor,
+    mode: int,
+    *,
+    block: int = 512,
+    row_tile: int = 128,
+) -> CSFTiled:
+    """Numpy host-side build (pre-processing, like SPLATT's sort stage)."""
+    order = t.order
+    other = tuple(m for m in range(order) if m != mode)
+    inds = np.asarray(t.inds[: t.nnz])
+    vals = np.asarray(t.vals[: t.nnz])
+
+    keys = tuple(inds[:, m] for m in reversed(other)) + (inds[:, mode],)
+    perm = np.lexsort(keys)
+    rows = inds[perm, mode].astype(np.int32)
+    oth = inds[perm][:, list(other)].astype(np.int32)
+    v = vals[perm]
+
+    n_tiles = -(-t.dims[mode] // row_tile)
+    tile_of = rows // row_tile
+    counts = np.bincount(tile_of, minlength=n_tiles)
+    # blocks per tile: at least 1 so every output tile is initialised
+    blocks_per = np.maximum(1, -(-counts // block))
+    starts = np.concatenate([[0], np.cumsum(counts)])[:-1]
+
+    pnnz = int(blocks_per.sum()) * block
+    out_rows = np.empty(pnnz, dtype=np.int32)
+    out_oth = np.zeros((pnnz, order - 1), dtype=np.int32)
+    out_vals = np.zeros(pnnz, dtype=v.dtype)
+    block_tile = np.empty(int(blocks_per.sum()), dtype=np.int32)
+
+    wpos = 0
+    bpos = 0
+    for tile in range(n_tiles):
+        c = int(counts[tile])
+        s = int(starts[tile])
+        width = int(blocks_per[tile]) * block
+        out_rows[wpos : wpos + width] = tile * row_tile  # padding default
+        if c:
+            out_rows[wpos : wpos + c] = rows[s : s + c]
+            out_oth[wpos : wpos + c] = oth[s : s + c]
+            out_vals[wpos : wpos + c] = v[s : s + c]
+        block_tile[bpos : bpos + int(blocks_per[tile])] = tile
+        wpos += width
+        bpos += int(blocks_per[tile])
+
+    return CSFTiled(
+        mode=mode,
+        row_ids=jnp.asarray(out_rows),
+        other_ids=jnp.asarray(out_oth),
+        vals=jnp.asarray(out_vals),
+        block_tile=jnp.asarray(block_tile),
+        dims=t.dims,
+        nnz=t.nnz,
+        block=block,
+        row_tile=row_tile,
+    )
+
+
+def build_csf_loop_reference(t: SparseTensor, mode: int) -> CSFFlat:
+    """Deliberately naive numpy build (argsort per key, python loops) —
+    the 'Chapel-initial' analogue used by the sort benchmark (paper Fig. 1).
+    Semantically identical to build_csf for unpadded entries."""
+    inds = np.asarray(t.inds)
+    vals = np.asarray(t.vals)
+    order = t.order
+    other = [m for m in range(order) if m != mode]
+    # repeated stable argsorts, copying whole arrays each time (slice-copy
+    # behaviour the paper calls out).
+    perm = np.arange(inds.shape[0])
+    for m in reversed(other):
+        perm = perm[np.argsort(inds[perm, m], kind="stable")]
+    perm = perm[np.argsort(inds[perm, mode], kind="stable")]
+    rows, oth, v = [], [], []
+    for p in perm:  # per-element copy loop (allocation-per-iteration analogue)
+        rows.append(int(inds[p, mode]))
+        oth.append([int(inds[p, m]) for m in other])
+        v.append(float(vals[p]))
+    # Assemble the same container the fast path produces (the loops above are
+    # the timed part; the final blocking/padding is shared plumbing).
+    permuted = SparseTensor(
+        inds=jnp.asarray(inds[perm]), vals=jnp.asarray(vals[perm]),
+        dims=t.dims, nnz=t.nnz,
+    )
+    return build_csf(permuted, mode)

@@ -1,0 +1,343 @@
+"""Medium-grained distributed CP-ALS (shard_map over the production mesh).
+
+This implements the paper's named future work — SPLATT's medium-grained
+distributed algorithm [Smith & Karypis, IPDPS'16] — on the TPU mesh:
+
+  * the (I x J x K) tensor is partitioned over the 2-D logical grid
+    (rows of mode-0 over the 'data' axis x rows of mode-1 over 'model'):
+    device (d, t) owns non-zeros with i in I-block_d and j in J-block_t;
+  * factor A is row-sharded over 'data', B over 'model', C replicated;
+  * each mode-n update does a LOCAL MTTKRP on owned non-zeros, then a psum
+    over the mesh axes whose devices hold partial rows (mode-0: 'model';
+    mode-1: 'data'; mode-2: both) — the all-reduce that SPLATT does with
+    MPI rides the ICI torus here;
+  * Gram matrices / column norms / fit are tiny (R x R, R) psums.
+
+Multi-pod: the 'pod' axis joins 'data' as the mode-0 row axis, so the same
+spec expresses reduce within the pod + all-reduce across pods over DCN.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from .coo import SparseTensor
+from .gram import (column_norms, gram, hadamard_grams, kruskal_fit,
+                   solve_cholesky, normalize)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# host-side partitioner
+# ---------------------------------------------------------------------------
+
+def partition_tensor(t: SparseTensor, n_row: int, n_col: int,
+                     *, pad_factor: float = 1.05):
+    """Partition non-zeros over an (n_row x n_col) grid by (mode-0 block,
+    mode-1 block).  Returns (inds (n_row, n_col, L, 3), vals (n_row, n_col, L),
+    padded dims).  Padding entries have val 0 and point at the block's first
+    local rows."""
+    assert t.order == 3, "medium-grained partitioner is 3rd-order (like SPLATT)"
+    inds = np.asarray(t.inds[: t.nnz])
+    vals = np.asarray(t.vals[: t.nnz])
+    i_p = -(-t.dims[0] // n_row) * n_row
+    j_p = -(-t.dims[1] // n_col) * n_col
+    bi, bj = i_p // n_row, j_p // n_col
+    di = inds[:, 0] // bi
+    dj = inds[:, 1] // bj
+
+    counts = np.zeros((n_row, n_col), dtype=np.int64)
+    np.add.at(counts, (di, dj), 1)
+    cap = int(np.ceil(counts.max() * pad_factor)) if counts.max() else 1
+
+    out_i = np.zeros((n_row, n_col, cap, 3), dtype=np.int32)
+    out_v = np.zeros((n_row, n_col, cap), dtype=vals.dtype)
+    # default padding coordinates: block-local row 0 of each mode block
+    for r in range(n_row):
+        out_i[r, :, :, 0] = r * bi
+    for c in range(n_col):
+        out_i[:, c, :, 1] = c * bj
+
+    fill = np.zeros((n_row, n_col), dtype=np.int64)
+    order = np.lexsort((dj, di))
+    for idx in order:
+        r, c = di[idx], dj[idx]
+        k = fill[r, c]
+        out_i[r, c, k] = inds[idx]
+        out_v[r, c, k] = vals[idx]
+        fill[r, c] += 1
+
+    return jnp.asarray(out_i), jnp.asarray(out_v), (i_p, j_p, t.dims[2])
+
+
+# ---------------------------------------------------------------------------
+# one distributed ALS iteration (shard_map body)
+# ---------------------------------------------------------------------------
+
+def _local_mttkrp(inds, vals, rows_local, fa, fb, fc, num_rows: int):
+    """Scatter-add MTTKRP over this device's non-zeros.
+    rows_local: which column of inds indexes the OUTPUT rows (local ids);
+    fa/fb/fc are the gather sources for the three modes (local or global)."""
+    prod = vals[:, None].astype(fa.dtype)
+    sources = (fa, fb, fc)
+    for m in range(3):
+        if m == rows_local:
+            continue
+        prod = prod * sources[m][inds[:, m]]
+    out = jnp.zeros((num_rows, prod.shape[1]), dtype=prod.dtype)
+    return out.at[inds[:, rows_local]].add(prod, mode="drop")
+
+
+def make_dist_iteration(mesh: Mesh, dims_p, rank: int, *, norm_kind: str = "2",
+                        shard_c: bool = False):
+    """Builds the jitted shard_map'd single-iteration function.
+
+    Row axes: mode-0 over ('pod','data') [or ('data',)], mode-1 over 'model'.
+
+    ``shard_c``: the optimized mode-2 layout (EXPERIMENTS.md §Perf).  The
+    baseline replicates C and its dense solve/gram on every device (faithful
+    to SPLATT's medium-grained layout for the shortest mode, but ~20x
+    redundant per-device dense work at 256 chips); shard_c row-shards C over
+    the WHOLE mesh, replaces the mode-2 psum with a psum_scatter (half the
+    wire), solves only local rows, and all-gathers C once per iteration.
+    """
+    axes = mesh.axis_names
+    row_ax = tuple(a for a in axes if a != "model")  # ('data',) or ('pod','data')
+    col_ax = "model"
+    all_ax = row_ax + (col_ax,)
+    n_row = int(np.prod([mesh.shape[a] for a in row_ax]))
+    n_col = mesh.shape[col_ax]
+    n_all = n_row * n_col
+    i_p, j_p, k_dim = dims_p
+    bi, bj = i_p // n_row, j_p // n_col
+    if shard_c:
+        assert k_dim % n_all == 0, (k_dim, n_all)
+
+    in_specs = (
+        P(row_ax, col_ax),       # inds (n_row, n_col, L, 3)
+        P(row_ax, col_ax),       # vals (n_row, n_col, L)
+        P(row_ax),               # A (i_p, R) row-sharded
+        P(col_ax),               # B (j_p, R) row-sharded over model
+        P(all_ax) if shard_c else P(),   # C rows
+        P(),                     # norm_x_sq scalar
+    )
+    out_specs = (P(row_ax), P(col_ax), P(all_ax) if shard_c else P(), P(), P())
+
+    def body(inds, vals, a_blk, b_blk, c_in, norm_x_sq):
+        if shard_c:
+            # rebuild the full C for the mode-0/1 gathers (10s of MB).
+            # P(('data','model')) lays blocks out data-major (block id =
+            # r*n_col + c), so gather model first, then data — the exact
+            # inverse of the scatter order below.
+            c_full = jax.lax.all_gather(c_in, col_ax, axis=0, tiled=True)
+            c_full = jax.lax.all_gather(c_full, row_ax, axis=0, tiled=True)
+        else:
+            c_full = c_in
+        inds = inds[0, 0]
+        vals = vals[0, 0]
+        # localize indices into the block-sharded factors
+        row_id = jax.lax.axis_index(row_ax)
+        col_id = jax.lax.axis_index(col_ax)
+        li = inds[:, 0] - row_id * bi
+        lj = inds[:, 1] - col_id * bj
+        lk = inds[:, 2]
+        linds = jnp.stack([li, lj, lk], axis=1)
+
+        def grams_all(a, b, c):
+            ga = jax.lax.psum(a.T @ a, row_ax)
+            gb = jax.lax.psum(b.T @ b, col_ax)
+            if shard_c:
+                gc = jax.lax.psum(c_in.T @ c_in, all_ax)
+            else:
+                gc = c.T @ c
+            return ga, gb, gc
+
+        def col_normalize(mat, *, axis_names):
+            if norm_kind == "max":
+                lam = jax.lax.pmax(jnp.max(jnp.abs(mat), axis=0), axis_names)
+                lam = jnp.maximum(lam, 1.0)
+            else:
+                lam = jnp.sqrt(jax.lax.psum(jnp.sum(mat * mat, axis=0),
+                                            axis_names))
+            safe = jnp.where(lam == 0.0, 1.0, lam)
+            return mat / safe[None, :], lam
+
+        ga, gb, gc = grams_all(a_blk, b_blk, c_full)
+
+        # ---- mode 0: partials summed over the 'model' axis ----
+        v0 = gb * gc
+        m0 = _local_mttkrp(linds, vals, 0, a_blk, b_blk, c_full, bi)
+        m0 = jax.lax.psum(m0, col_ax)
+        a_new = solve_cholesky(m0, v0)
+        a_new, lam = col_normalize(a_new, axis_names=row_ax)
+        ga = jax.lax.psum(a_new.T @ a_new, row_ax)
+
+        # ---- mode 1: partials summed over the row axes ----
+        v1 = ga * gc
+        m1 = _local_mttkrp(linds, vals, 1, a_new, b_blk, c_full, bj)
+        m1 = jax.lax.psum(m1, row_ax)
+        b_new = solve_cholesky(m1, v1)
+        b_new, lam = col_normalize(b_new, axis_names=col_ax)
+        gb = jax.lax.psum(b_new.T @ b_new, col_ax)
+
+        # ---- mode 2 ----
+        v2 = ga * gb
+        m2 = _local_mttkrp(linds, vals, 2, a_new, b_new, c_full, k_dim)
+        if shard_c:
+            # optimized: half-wire reduce+scatter, local dense solve
+            m2_blk = jax.lax.psum_scatter(m2, row_ax, scatter_dimension=0,
+                                          tiled=True)
+            m2_blk = jax.lax.psum_scatter(m2_blk, col_ax, scatter_dimension=0,
+                                          tiled=True)
+            c_new = solve_cholesky(m2_blk, v2)
+            if norm_kind == "max":
+                lam = jax.lax.pmax(jnp.max(jnp.abs(c_new), axis=0), all_ax)
+                lam = jnp.maximum(lam, 1.0)
+            else:
+                lam = jnp.sqrt(jax.lax.psum(jnp.sum(c_new * c_new, axis=0),
+                                            all_ax))
+            safe = jnp.where(lam == 0.0, 1.0, lam)
+            c_new = c_new / safe[None, :]
+            gc = jax.lax.psum(c_new.T @ c_new, all_ax)
+            # blockwise fit: <X,Xhat> from local rows, summed over the mesh
+            from .gram import kruskal_norm_sq
+            inner = jax.lax.psum(
+                jnp.sum(jnp.sum(m2_blk * c_new, axis=0) * lam), all_ax)
+            norm_z_sq = kruskal_norm_sq(lam, (ga, gb, gc))
+            resid = jnp.maximum(norm_x_sq + norm_z_sq - 2.0 * inner, 0.0)
+            fit = 1.0 - jnp.sqrt(resid) / jnp.sqrt(norm_x_sq)
+            return a_new, b_new, c_new, lam, fit
+
+        m2 = jax.lax.psum(m2, row_ax + (col_ax,))
+        c_new = solve_cholesky(m2, v2)
+        lam_c = column_norms(c_new, kind=norm_kind)
+        safe = jnp.where(lam_c == 0.0, 1.0, lam_c)
+        c_new, lam = c_new / safe[None, :], lam_c
+        gc = c_new.T @ c_new
+
+        fit = kruskal_fit(norm_x_sq, lam, (ga, gb, gc), m2, c_new)
+        return a_new, b_new, c_new, lam, fit
+
+    smapped = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs)
+    return jax.jit(smapped)
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def dist_cp_als(t: SparseTensor, rank: int, mesh: Mesh, *, niters: int = 10,
+                key: Array | None = None, verbose: bool = False,
+                shard_c: bool = False, init: tuple | None = None,
+                mode_order: str = "natural"):
+    """Distributed CP-ALS; numerically equivalent to the shared-memory path
+    (modulo f32 reduction order).  Returns (factors, lmbda, fit).
+
+    ``mode_order='auto'``: partition the two LONGEST modes over the grid and
+    exchange the SHORTEST (the mode-2 scatter/gather wire is proportional to
+    its length) — EXPERIMENTS.md §Perf, cpals hillclimb."""
+    from .cpals import init_factors
+
+    if mode_order == "auto":
+        perm = tuple(int(m) for m in np.argsort(t.dims)[::-1])
+        tp = SparseTensor(inds=t.inds[:, list(perm)], vals=t.vals,
+                          dims=tuple(t.dims[m] for m in perm), nnz=t.nnz)
+        if init is not None:
+            init = tuple(init[m] for m in perm)
+        factors, lam, fit = dist_cp_als(
+            tp, rank, mesh, niters=niters, key=key, verbose=verbose,
+            shard_c=shard_c, init=init, mode_order="natural")
+        inv = [0] * 3
+        for pos, m in enumerate(perm):
+            inv[m] = pos
+        return tuple(factors[inv[m]] for m in range(3)), lam, fit
+
+    axes = mesh.axis_names
+    row_ax = tuple(a for a in axes if a != "model")
+    n_row = int(np.prod([mesh.shape[a] for a in row_ax]))
+    n_col = mesh.shape["model"]
+    n_all = n_row * n_col
+
+    inds, vals, dims_p = partition_tensor(t, n_row, n_col)
+    i_p, j_p, k_dim = dims_p
+    if shard_c:
+        k_dim = -(-k_dim // n_all) * n_all
+        dims_p = (i_p, j_p, k_dim)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    if init is not None:
+        full = tuple(
+            jnp.zeros((dp, rank), t.vals.dtype).at[: f.shape[0]].set(f)
+            for f, dp in zip(init, (i_p, j_p, k_dim)))
+    else:
+        full = init_factors((i_p, j_p, k_dim), rank, key, dtype=t.vals.dtype)
+    # zero padded factor rows so grams match the unpadded computation
+    a0 = full[0].at[t.dims[0]:].set(0.0)
+    b0 = full[1].at[t.dims[1]:].set(0.0)
+    c0 = full[2].at[t.dims[2]:].set(0.0)
+    norm_x_sq = jnp.sum(t.vals.astype(jnp.float32) ** 2)
+
+    it_first = make_dist_iteration(mesh, dims_p, rank, norm_kind="max",
+                                   shard_c=shard_c)
+    it_rest = make_dist_iteration(mesh, dims_p, rank, norm_kind="2",
+                                  shard_c=shard_c)
+
+    a, b, c = a0, b0, c0
+    lam = jnp.ones((rank,), dtype=t.vals.dtype)
+    fit = jnp.array(0.0)
+    for i in range(niters):
+        fn = it_first if i == 0 else it_rest
+        a, b, c, lam, fit = fn(inds, vals, a, b, c, norm_x_sq)
+        if verbose:
+            print(f"  dist its={i + 1} fit={float(fit):.6f}")
+    factors = (a[: t.dims[0]], b[: t.dims[1]], c[: t.dims[2]])
+    return factors, lam, fit
+
+
+def build_dist_cpals_lowered(workload: str, mesh: Mesh, *,
+                             shard_c: bool = False,
+                             mode_order: str = "natural"):
+    """Abstract (ShapeDtypeStruct) lowering of one distributed ALS iteration
+    for a paper workload — the CP-ALS entry of the dry-run matrix."""
+    from repro.configs import CPALS_WORKLOADS
+
+    dims, nnz, rank = CPALS_WORKLOADS[workload]
+    if mode_order == "auto":
+        dims = tuple(sorted(dims, reverse=True))
+    axes = mesh.axis_names
+    row_ax = tuple(a for a in axes if a != "model")
+    n_row = int(np.prod([mesh.shape[a] for a in row_ax]))
+    n_col = mesh.shape["model"]
+    i_p = -(-dims[0] // n_row) * n_row
+    j_p = -(-dims[1] // n_col) * n_col
+    n_all = n_row * n_col
+    cap = int(np.ceil(nnz / (n_row * n_col) * 1.2))
+    k_p = -(-dims[2] // n_all) * n_all if shard_c else dims[2]
+    dims_p = (i_p, j_p, k_p)
+
+    from jax.sharding import NamedSharding
+    sds = jax.ShapeDtypeStruct
+    sh = lambda spec: NamedSharding(mesh, spec)
+    inds = sds((n_row, n_col, cap, 3), jnp.int32, sharding=sh(P(row_ax, "model")))
+    vals = sds((n_row, n_col, cap), jnp.float32, sharding=sh(P(row_ax, "model")))
+    a = sds((i_p, rank), jnp.float32, sharding=sh(P(row_ax)))
+    b = sds((j_p, rank), jnp.float32, sharding=sh(P("model")))
+    c_spec = P(row_ax + ("model",)) if shard_c else P()
+    c = sds((k_p, rank), jnp.float32, sharding=sh(c_spec))
+    nx = sds((), jnp.float32)
+
+    fn = make_dist_iteration(mesh, dims_p, rank, shard_c=shard_c)
+    lowered = fn.lower(inds, vals, a, b, c, nx)
+    # MTTKRP flops: ~5 R nnz per mode (2R gather-products, R scatter-add,
+    # 2R for the Khatri-Rao partial) x 3 modes, plus small dense terms.
+    info = {"workload": workload, "dims": dims, "nnz": nnz, "rank": rank,
+            "local_cap": cap, "shard_c": shard_c, "mode_order": mode_order,
+            "model_flops": 3 * 5.0 * rank * nnz}
+    return lowered, info

@@ -1,0 +1,102 @@
+"""Dense rank-R linear algebra for CP-ALS.
+
+These are the paper's non-MTTKRP routines from Table III:
+
+  * ``gram``            — A^T A             ("Mat A^TA", BLAS syrk)
+  * ``hadamard_grams``  — V = hadamard of other modes' Grams
+  * ``solve_cholesky``  — A = M V^-1        ("Inverse", LAPACK potrf/potrs)
+  * ``normalize``       — column norms -> lambda ("Mat norm")
+  * ``kruskal_fit``     — decomposition fit  ("CPD fit")
+
+All matrices here are I x R or R x R with small R (paper uses R=35), so these
+are jnp-native; the Pallas syrk kernel (kernels/syrk_pallas.py) is an optional
+drop-in for ``gram`` on tall-skinny inputs.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# Ridge added to V's diagonal before Cholesky: SPLATT relies on potrf on a
+# PSD-by-construction matrix; in f32 a tiny jitter keeps cho_factor stable on
+# nearly-rank-deficient iterates without changing converged results.
+CHOLESKY_RIDGE = 1e-12
+
+
+def gram(a: Array, *, impl: str = "jnp") -> Array:
+    """G = A^T A (syrk analogue). impl='pallas' uses the blocked kernel."""
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+
+        return kops.syrk(a)
+    return a.T @ a
+
+
+def hadamard_grams(grams: Sequence[Array], skip_mode: int) -> Array:
+    """V = hadamard_{m != skip_mode} G_m  (lines 4/7/10 of Alg. 1)."""
+    out = None
+    for m, g in enumerate(grams):
+        if m == skip_mode:
+            continue
+        out = g if out is None else out * g
+    assert out is not None
+    return out
+
+
+def solve_cholesky(m_mat: Array, v: Array) -> Array:
+    """A = M V^{-1} via Cholesky (potrf+potrs analogue, not an explicit pinv).
+
+    V is symmetric PSD (hadamard of Gram matrices); solve V X^T = M^T.
+    """
+    r = v.shape[0]
+    v = v + CHOLESKY_RIDGE * jnp.eye(r, dtype=v.dtype)
+    c = jax.scipy.linalg.cho_factor(v, lower=False)
+    return jax.scipy.linalg.cho_solve(c, m_mat.T).T
+
+
+def column_norms(a: Array, *, kind: str) -> Array:
+    """kind='max' (SPLATT's first-iteration norm) or '2' (subsequent)."""
+    if kind == "max":
+        return jnp.maximum(jnp.max(jnp.abs(a), axis=0), 1.0)
+    if kind == "2":
+        return jnp.sqrt(jnp.sum(a * a, axis=0))
+    raise ValueError(f"unknown norm kind {kind!r}")
+
+
+def normalize(a: Array, *, kind: str) -> tuple[Array, Array]:
+    """Column-normalize; returns (A_normalized, lambda). Zero-safe."""
+    lam = column_norms(a, kind=kind)
+    safe = jnp.where(lam == 0.0, 1.0, lam)
+    return a / safe[None, :], lam
+
+
+def kruskal_norm_sq(lmbda: Array, grams: Sequence[Array]) -> Array:
+    """||X_hat||^2 = sum( (lambda lambda^T) . hadamard_m G_m )."""
+    had = None
+    for g in grams:
+        had = g if had is None else had * g
+    return jnp.sum((lmbda[:, None] * lmbda[None, :]) * had)
+
+
+def kruskal_inner(m_last: Array, a_last: Array, lmbda: Array) -> Array:
+    """<X, X_hat> = sum_r lambda_r sum_i M_last[i,r] A_last[i,r].
+
+    ``m_last`` is the final mode's MTTKRP output of this iteration and
+    ``a_last`` the (normalized) updated factor — SPLATT's p_tt_inner trick:
+    the inner product falls out of work already done, no extra pass over X.
+    """
+    return jnp.sum(jnp.sum(m_last * a_last, axis=0) * lmbda)
+
+
+def kruskal_fit(
+    norm_x_sq: Array, lmbda: Array, grams: Sequence[Array], m_last: Array, a_last: Array
+) -> Array:
+    """fit = 1 - sqrt(max(||X||^2 + ||X_hat||^2 - 2<X,X_hat>, 0)) / ||X||."""
+    norm_z_sq = kruskal_norm_sq(lmbda, grams)
+    inner = kruskal_inner(m_last, a_last, lmbda)
+    resid_sq = jnp.maximum(norm_x_sq + norm_z_sq - 2.0 * inner, 0.0)
+    return 1.0 - jnp.sqrt(resid_sq) / jnp.sqrt(norm_x_sq)

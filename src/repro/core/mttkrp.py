@@ -1,0 +1,183 @@
+"""MTTKRP — matricized tensor times Khatri-Rao product — implementation registry.
+
+The paper identifies MTTKRP as the critical kernel of CP-ALS (>90% of runtime,
+Tab. III) and its performance study is, at heart, a study of MTTKRP
+implementation strategies.  This module carries the full registry of our
+analogues:
+
+==================  =========================================================
+impl                what it reproduces
+==================  =========================================================
+``rowloop``         the paper's *Chapel-initial* code: one output row at a
+                    time via dynamic slices (the slicing-overhead regime of
+                    §V-D.1, Figs 2/3).  Benchmark-only — deliberately slow.
+``gather_scatter``  flat vectorized gather + scatter-add with output-row
+                    collisions.  The *mutex/atomic* regime of §V-D.2: XLA's
+                    scatter-add serializes colliding rows exactly where
+                    SPLATT's mutex pool would contend (YELP-like tensors).
+``segment``         sorted-by-output-row segment-sum over the CSF-flat
+                    layout — SPLATT's *no-lock* schedule (NELL-2 path):
+                    row ownership is resolved by the sort, not by locks.
+``pallas``          the TPU-native kernel (kernels/mttkrp_pallas.py): blocked
+                    one-hot segment-matmul on the MXU; collisions inside a
+                    block are reduced by the matmul itself.
+``dense``           dense einsum oracle (tests only).
+==================  =========================================================
+
+All impls support arbitrary tensor order (the paper restricts to 3rd order;
+SPLATT itself and our port support order >= 3 — this is one of the paper's
+"future work" items implemented here).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .coo import SparseTensor
+from .csf import CSFFlat
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# Oracles / references
+# ---------------------------------------------------------------------------
+
+
+def mttkrp_dense(t: SparseTensor, factors: Sequence[Array], mode: int) -> Array:
+    """Dense oracle: densify X and contract. Tests only (small tensors).
+
+    M[i, r] = sum_{j,k,...} X[.., i, ..] * prod_{m != mode} A_m[idx_m, r]
+    """
+    dense = t.to_dense()
+    order = t.order
+    # Move `mode` axis first, contract the rest against the KRP.
+    letters = "abcdefgh"[:order]
+    out_l = letters[mode]
+    terms = []
+    for m in range(order):
+        if m != mode:
+            terms.append(f"{letters[m]}r")
+    eq = f"{letters}," + ",".join(terms) + f"->{out_l}r"
+    others = [factors[m] for m in range(order) if m != mode]
+    return jnp.einsum(eq, dense, *others)
+
+
+# ---------------------------------------------------------------------------
+# rowloop — the deliberately naive "Chapel-initial" analogue (benchmarks only)
+# ---------------------------------------------------------------------------
+
+
+def mttkrp_rowloop(t: SparseTensor, factors: Sequence[Array], mode: int) -> Array:
+    """One non-zero at a time with dynamic slices — the per-row-slice overhead
+    regime the paper measures in §V-D.1.  O(nnz) sequential; benchmark-only."""
+    order = t.order
+    rank = factors[0].shape[1]
+    out = jnp.zeros((t.dims[mode], rank), dtype=factors[0].dtype)
+
+    def body(n, out):
+        row = t.inds[n, mode]
+        acc = t.vals[n] * jnp.ones((rank,), dtype=out.dtype)
+        for m in range(order):
+            if m != mode:
+                # dynamic row slice of the factor — the "slicing" analogue
+                frow = jax.lax.dynamic_slice_in_dim(factors[m], t.inds[n, m], 1, 0)
+                acc = acc * frow[0]
+        cur = jax.lax.dynamic_slice_in_dim(out, row, 1, 0)
+        return jax.lax.dynamic_update_slice_in_dim(out, cur + acc[None], row, 0)
+
+    return jax.lax.fori_loop(0, t.padded_nnz, body, out)
+
+
+# ---------------------------------------------------------------------------
+# gather_scatter — vectorized, unsorted, scatter-add collisions
+# ---------------------------------------------------------------------------
+
+
+def _krp_rows(
+    inds: Array, factors: Sequence[Array], mode: int, vals: Array
+) -> Array:
+    """prod[n, r] = vals[n] * prod_{m != mode} A_m[inds[n, m], r]."""
+    order = len(factors)
+    prod = vals[:, None].astype(factors[0].dtype)
+    for m in range(order):
+        if m != mode:
+            prod = prod * factors[m][inds[:, m]]
+    return prod
+
+
+def mttkrp_gather_scatter(
+    t: SparseTensor, factors: Sequence[Array], mode: int
+) -> Array:
+    """Flat gather of factor rows, elementwise product, scatter-add.
+
+    This is the "atomic variables" regime of the paper: colliding output rows
+    are resolved by the scatter's serialized adds.  Fast when collisions are
+    rare (NELL-2-like), degrades when one row is hot (YELP-like skew)."""
+    rank = factors[0].shape[1]
+    prod = _krp_rows(t.inds, factors, mode, t.vals)
+    out = jnp.zeros((t.dims[mode], rank), dtype=prod.dtype)
+    return out.at[t.inds[:, mode]].add(prod, mode="drop")
+
+
+# ---------------------------------------------------------------------------
+# segment — sorted CSF-flat, conflict-free segment reduction (no-lock path)
+# ---------------------------------------------------------------------------
+
+
+def mttkrp_segment(csf: CSFFlat, factors: Sequence[Array]) -> Array:
+    """Segment-sum over the per-mode sorted layout.
+
+    Sorting by output row is exactly SPLATT's no-lock schedule: each output
+    row's contributions are contiguous, so a segment reduction needs no
+    conflict resolution at all.  Padding entries carry row == dims[mode]
+    (one extra segment, sliced off)."""
+    mode = csf.mode
+    prod = csf.vals[:, None].astype(factors[0].dtype)
+    for i, m in enumerate(csf.other_modes):
+        prod = prod * factors[m][csf.other_ids[:, i]]
+    seg = jax.ops.segment_sum(
+        prod,
+        csf.row_ids,
+        num_segments=csf.dims[mode] + 1,
+        indices_are_sorted=True,
+    )
+    return seg[: csf.dims[mode]]
+
+
+# ---------------------------------------------------------------------------
+# dispatcher
+# ---------------------------------------------------------------------------
+
+IMPLS = ("gather_scatter", "segment", "pallas", "rowloop", "dense")
+
+
+def mttkrp(
+    x,
+    factors: Sequence[Array],
+    mode: int,
+    *,
+    impl: str = "segment",
+) -> Array:
+    """Dispatch on impl; ``x`` is a SparseTensor (gather_scatter/rowloop/dense)
+    or the per-mode prebuilt layout (CSFFlat for segment, CSFTiled for pallas).
+    """
+    if impl == "dense":
+        return mttkrp_dense(x, factors, mode)
+    if impl == "rowloop":
+        return mttkrp_rowloop(x, factors, mode)
+    if impl == "gather_scatter":
+        return mttkrp_gather_scatter(x, factors, mode)
+    if impl == "segment":
+        if not isinstance(x, CSFFlat):
+            raise TypeError("segment impl needs a CSFFlat (build_csf(t, mode))")
+        if x.mode != mode:
+            raise ValueError(f"CSFFlat is sorted for mode {x.mode}, asked {mode}")
+        return mttkrp_segment(x, factors)
+    if impl == "pallas":
+        from repro.kernels import ops as kops  # local import: optional dep
+
+        return kops.mttkrp(x, factors)
+    raise ValueError(f"unknown impl {impl!r}; one of {IMPLS}")

@@ -1,0 +1,3 @@
+from .pipeline import TokenPipeline, make_batch_iterator
+
+__all__ = ["TokenPipeline", "make_batch_iterator"]

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot-spots (MTTKRP, syrk).
+
+Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are validated
+in interpret mode on CPU against the pure-jnp oracles in ref.py.
+"""
+from . import ops, ref
+from .mttkrp_pallas import mttkrp_pallas_call, LANE
+from .syrk_pallas import syrk_pallas_call
+
+__all__ = ["ops", "ref", "mttkrp_pallas_call", "syrk_pallas_call", "LANE"]

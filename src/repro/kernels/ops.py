@@ -1,0 +1,74 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Each wrapper handles the shape plumbing the kernel requires (rank padding to
+the 128-lane width, block reshapes, gathers of factor rows) and slices the
+result back to logical shapes.  ``interpret`` defaults to True — this CPU
+container validates kernels in interpret mode; on a real TPU pass
+``interpret=False`` (the wrappers are the only call sites).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.csf import CSFTiled
+
+from .mttkrp_pallas import LANE, mttkrp_pallas_call
+from .syrk_pallas import syrk_pallas_call
+
+Array = jax.Array
+
+
+def _pad_lanes(a: Array) -> Array:
+    r = a.shape[-1]
+    rp = -(-r // LANE) * LANE
+    if rp == r:
+        return a
+    pad = [(0, 0)] * (a.ndim - 1) + [(0, rp - r)]
+    return jnp.pad(a, pad)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def mttkrp(csf: CSFTiled, factors: Sequence[Array], *, interpret: bool = True) -> Array:
+    """MTTKRP for the mode ``csf`` was built for.  Returns (num_rows, R).
+
+    The factor-row gathers stay in XLA (HBM-bandwidth work XLA does well);
+    the kernel fuses the Khatri-Rao multiply and the conflict-resolving
+    one-hot matmul.  For order > 3 the extra factors' rows are pre-multiplied
+    into the second operand (associativity of the elementwise product).
+    """
+    rank = factors[0].shape[1]
+    om = csf.other_modes
+    brows = _pad_lanes(factors[om[0]][csf.other_ids[:, 0]])
+    crows = _pad_lanes(factors[om[1]][csf.other_ids[:, 1]])
+    for i in range(2, len(om)):
+        crows = crows * _pad_lanes(factors[om[i]][csf.other_ids[:, i]])
+
+    nblocks, block = csf.num_blocks, csf.block
+    rp = brows.shape[-1]
+    out = mttkrp_pallas_call(
+        csf.row_ids.reshape(nblocks, block),
+        csf.vals.reshape(nblocks, block),
+        brows.reshape(nblocks, block, rp),
+        crows.reshape(nblocks, block, rp),
+        csf.block_tile,
+        num_row_tiles=csf.num_row_tiles,
+        row_tile=csf.row_tile,
+        interpret=interpret,
+    )
+    return out[: csf.num_rows, :rank].astype(factors[0].dtype)
+
+
+@partial(jax.jit, static_argnames=("blk", "interpret"))
+def syrk(a: Array, *, blk: int = 512, interpret: bool = True) -> Array:
+    """G = A^T A via the blocked Pallas kernel.  Returns (R, R)."""
+    rows, rank = a.shape
+    ap = _pad_lanes(a)
+    rows_p = -(-rows // blk) * blk
+    if rows_p != rows:
+        ap = jnp.pad(ap, ((0, rows_p - rows), (0, 0)))
+    g = syrk_pallas_call(ap, blk=blk, interpret=interpret)
+    return g[:rank, :rank].astype(a.dtype)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.csf import CSFTiled
+
+Array = jax.Array
+
+
+def mttkrp_ref(csf: CSFTiled, factors: Sequence[Array]) -> Array:
+    """Segment-sum oracle over the tiled layout.
+
+    Padding entries carry val == 0 and point at a valid row inside their
+    tile, so they contribute exact zeros — the oracle needs no masking.
+    (Padding breaks global sortedness — a tile group's trailing pads point
+    back at the tile's first row — so no ``indices_are_sorted`` hint here.)
+    """
+    prod = csf.vals[:, None].astype(jnp.float32)
+    for i, m in enumerate(csf.other_modes):
+        prod = prod * factors[m][csf.other_ids[:, i]].astype(jnp.float32)
+    seg = jax.ops.segment_sum(prod, csf.row_ids, num_segments=csf.num_rows)
+    return seg
+
+
+def syrk_ref(a: Array) -> Array:
+    af = a.astype(jnp.float32)
+    return af.T @ af

@@ -1,0 +1,97 @@
+"""Step builders: train_step / prefill_step / serve_step for any arch config.
+
+These are the functions the dry-run lowers and the real launcher executes.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import Model
+from repro.models.config import ModelConfig
+from repro.optim import Optimizer
+from repro.dist.compress import compress_grads_int8, decompress_grads_int8
+
+Array = jax.Array
+
+
+def _split_micro(batch: dict, m: int) -> dict:
+    """Reshape every batch leaf to a leading microbatch axis of length m."""
+    out = {}
+    for k, v in batch.items():
+        if k == "positions":  # (3, B, S) -> (m, 3, B/m, S)
+            b = v.shape[1]
+            out[k] = jnp.moveaxis(
+                v.reshape(v.shape[0], m, b // m, *v.shape[2:]), 1, 0)
+        else:                 # (B, ...) -> (m, B/m, ...)
+            out[k] = v.reshape(m, v.shape[0] // m, *v.shape[1:])
+    return out
+
+
+def make_train_step(model: Model, optimizer: Optimizer,
+                    *, grad_compress: bool = False, micro_batches: int = 1):
+    """(params, opt_state, batch, step) -> (params, opt_state, metrics).
+
+    ``grad_compress`` applies int8 quantization with error feedback to the
+    gradients before they cross the data axis (the all-reduce), carrying the
+    quantization residual in opt_state['ef'].
+
+    ``micro_batches`` > 1 accumulates gradients over batch splits (same
+    optimizer math, ~1/m peak activation memory — what lets the big train
+    cells fit a 16 GiB v5e)."""
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(model.loss, has_aux=True)(params, batch)
+
+    def train_step(params, opt_state, batch, step):
+        if micro_batches > 1:
+            micro = _split_micro(batch, micro_batches)
+
+            def mb(carry, mbatch):
+                (loss_m, metrics), grads = grads_of(params, mbatch)
+                carry = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / micro_batches,
+                    carry, grads)
+                return carry, metrics
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, metrics_all = jax.lax.scan(
+                mb, zero, micro,
+                unroll=True if model.cfg.unroll_loops else 1)
+            metrics = {k: jnp.mean(v) for k, v in metrics_all.items()}
+        else:
+            (loss, metrics), grads = grads_of(params, batch)
+        if grad_compress:
+            ef = opt_state.get("ef")
+            q, scales, ef = compress_grads_int8(grads, ef)
+            grads = decompress_grads_int8(q, scales)
+        new_params, new_opt = optimizer.update(
+            grads, {k: v for k, v in opt_state.items() if k != "ef"},
+            params, step)
+        if grad_compress:
+            new_opt = dict(new_opt, ef=ef)
+        metrics = dict(metrics, step=step + 1)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(model: Model):
+    def prefill_step(params, batch, cache):
+        logits, new_cache = model.prefill(params, batch, cache)
+        return logits, new_cache
+    return prefill_step
+
+
+def make_serve_step(model: Model):
+    """One decode step: (params, tokens (B,1), cache, pos) -> (logits, cache)."""
+    cfg = model.cfg
+
+    def serve_step(params, tokens, cache, pos, positions=None):
+        return model.decode_step(params, tokens, cache, pos,
+                                 positions=positions)
+    return serve_step

@@ -1,0 +1,6 @@
+"""LM substrate for the assigned architecture pool."""
+from .config import ModelConfig, MoEConfig, ShapeConfig, SHAPES, cell_is_skipped
+from .transformer import Model
+
+__all__ = ["ModelConfig", "MoEConfig", "ShapeConfig", "SHAPES",
+           "cell_is_skipped", "Model"]

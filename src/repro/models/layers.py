@@ -1,0 +1,418 @@
+"""Shared transformer layers: norms, RoPE (std + M-RoPE), GQA attention
+(train / prefill / decode with full, local-window and cross variants), MLPs.
+
+Everything is a pure function over explicit param dicts; specs built by
+``*_specs`` functions carry the logical sharding axes.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .params import ParamSpec
+
+Array = jax.Array
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# activation sharding hook (MaxText-style logical constraints)
+# ---------------------------------------------------------------------------
+# The launch layer installs a callback mapping (array, logical_axes) ->
+# with_sharding_constraint'ed array.  Without it (unit tests, single device)
+# constraints are no-ops.  Constraining activations at layer boundaries is
+# what keeps the SPMD partitioner from replicating attention/MLP internals.
+
+_SHARDING_HOOK = None
+_MESH = None  # set together with the hook; enables shard_map layers (EP MoE)
+
+
+def set_sharding_hook(fn, mesh=None) -> None:
+    global _SHARDING_HOOK, _MESH
+    _SHARDING_HOOK = fn
+    _MESH = mesh
+
+
+def get_mesh():
+    return _MESH
+
+
+def shard_act(x: Array, axes: tuple) -> Array:
+    if _SHARDING_HOOK is None:
+        return x
+    return _SHARDING_HOOK(x, axes)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"w": ParamSpec((d,), ("norm",), "ones"),
+                "b": ParamSpec((d,), ("norm",), "zeros")}
+    return {"w": ParamSpec((d,), ("norm",), "ones")}
+
+
+def apply_norm(p: dict, cfg: ModelConfig, x: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["w"] + p["b"]
+    else:
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * p["w"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def _rope_rotate(x: Array, sin: Array, cos: Array) -> Array:
+    """x: (..., hd) with interleaved halves [x1 | x2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def rope_sincos(positions: Array, head_dim: int, theta: float):
+    """positions (B, S) -> sin/cos (B, S, hd/2), f32."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (B,S,half)
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def mrope_sincos(positions: Array, head_dim: int, theta: float, sections):
+    """M-RoPE (Qwen2-VL): positions (3, B, S) for (t, h, w); the half-dim is
+    split into ``sections`` (sums to hd/2), each section using its own
+    position stream."""
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    # (3, B, S, half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    parts = []
+    start = 0
+    for i, sec in enumerate(sections):
+        parts.append(ang[i, ..., start : start + sec])
+        start += sec
+    ang_sel = jnp.concatenate(parts, axis=-1)  # (B, S, half)
+    return jnp.sin(ang_sel), jnp.cos(ang_sel)
+
+
+def apply_rope(cfg: ModelConfig, q: Array, k: Array, positions: Array):
+    """q (B,S,H,hd), k (B,S,KV,hd); positions (B,S) or (3,B,S) for mrope."""
+    if cfg.rope == "none":
+        return q, k
+    if cfg.rope == "mrope":
+        sin, cos = mrope_sincos(positions, cfg.head_dim, cfg.rope_theta,
+                                cfg.mrope_sections)
+    else:
+        sin, cos = rope_sincos(positions, cfg.head_dim, cfg.rope_theta)
+    sin, cos = sin[:, :, None, :], cos[:, :, None, :]
+    qf, kf = q.astype(jnp.float32), k.astype(jnp.float32)
+    return (_rope_rotate(qf, sin, cos).astype(q.dtype),
+            _rope_rotate(kf, sin, cos).astype(k.dtype))
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attn_specs(cfg: ModelConfig) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    return {
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _sdpa(cfg: ModelConfig, q: Array, k: Array, v: Array, mask: Array) -> Array:
+    """q (B,S,H,hd); k,v (B,T,KV,hd); mask broadcastable to (B,1,1,S,T)."""
+    b, s, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, hd)
+    scale = hd ** -0.5
+    scores = jnp.einsum("bsngd,btnd->bngst", qg, k) * scale
+    scores = jnp.where(mask, scores.astype(jnp.float32), NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bngst,btnd->bsngd", probs, v)
+    return out.reshape(b, s, h, hd)
+
+
+def _train_mask(kind: str, s: int, window: int, dtype=bool) -> Array:
+    """(S, S) mask: causal / bidir / local(causal+window)."""
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    if kind == "bidir":
+        return jnp.ones((s, s), dtype=bool)
+    m = j <= i
+    if kind == "local":
+        m = jnp.logical_and(m, j > i - window)
+    return m
+
+
+# Blockwise (flash-style) attention: never materializes the (S, T) score
+# matrix — running max/sum over KV blocks, vmapped over independent Q blocks.
+# This is what makes the 32k prefill cells lowerable at sane memory; on a
+# real TPU it is also the right compute structure (VMEM-resident tiles).
+FLASH_MIN_SEQ = 4096
+FLASH_QB = 1024
+FLASH_KB = 1024
+
+
+def _flash_attention(cfg: ModelConfig, q: Array, k: Array, v: Array,
+                     mask_kind: str, *, qb: int = FLASH_QB,
+                     kb: int = FLASH_KB,
+                     block_skip: bool = False) -> Array:
+    """q (B,S,H,hd); k,v (B,T,KV,hd) -> (B,S,H,hd).
+
+    ``block_skip``: skip KV blocks that are fully masked (strictly-future
+    causal blocks / outside the local window) — halves causal-prefill
+    compute; a beyond-paper optimization toggled by the perf pass."""
+    b, s, h, hd = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    g = h // kvh
+    # enough q blocks that they can shard over the model axis when the head
+    # count cannot (context-parallel attention: rules override flash_q)
+    qb = min(qb, max(128, s // 16))
+    kb = min(kb, t)
+    nq, nk = s // qb, t // kb
+    scale = hd ** -0.5
+    qr = shard_act(q.reshape(b, nq, qb, h, hd),
+                   ("act_batch", "flash_q", None, "heads", None))
+
+    def one_q(qi, qblk):
+        def inner(carry, ki):
+            m, l, acc = carry
+
+            def compute(args):
+                m, l, acc = args
+                kblk = jax.lax.dynamic_slice(
+                    k, (0, ki * kb, 0, 0), (b, kb, kvh, hd))
+                vblk = jax.lax.dynamic_slice(
+                    v, (0, ki * kb, 0, 0), (b, kb, kvh, hd))
+                kblk = shard_act(jnp.repeat(kblk, g, axis=2),
+                                 ("act_batch", None, "heads", None))
+                vblk = shard_act(jnp.repeat(vblk, g, axis=2),
+                                 ("act_batch", None, "heads", None))
+                sc = jnp.einsum("bqhd,bkhd->bhqk", qblk, kblk).astype(
+                    jnp.float32) * scale
+                qpos = qi * qb + jnp.arange(qb)
+                kpos = ki * kb + jnp.arange(kb)
+                if mask_kind == "bidir":
+                    msk = jnp.ones((qb, kb), dtype=bool)
+                else:
+                    msk = kpos[None, :] <= qpos[:, None]
+                    if mask_kind == "local":
+                        msk = jnp.logical_and(
+                            msk, kpos[None, :] > qpos[:, None] - cfg.window)
+                sc = jnp.where(msk[None, None], sc, NEG_INF)
+                m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+                p = jnp.exp(sc - m_new[..., None])
+                corr = jnp.exp(m - m_new)
+                l_new = l * corr + jnp.sum(p, axis=-1)
+                acc_new = acc * corr[..., None] + jnp.einsum(
+                    "bhqk,bkhd->bhqd", p.astype(vblk.dtype), vblk).astype(
+                        jnp.float32)
+                return m_new, l_new, acc_new
+
+            if block_skip and mask_kind in ("causal", "local"):
+                # fully-masked block iff first kpos > last qpos (causal) or
+                # last kpos <= first qpos - window (local)
+                first_k = ki * kb
+                last_q = qi * qb + qb - 1
+                dead = first_k > last_q
+                if mask_kind == "local":
+                    dead = jnp.logical_or(
+                        dead, (ki * kb + kb - 1) <= qi * qb - cfg.window)
+                m, l, acc = jax.lax.cond(dead, lambda a: a, compute,
+                                         (m, l, acc))
+            else:
+                m, l, acc = compute((m, l, acc))
+            return (m, l, acc), None
+
+        m0 = jnp.full((b, h, qb), -jnp.inf, dtype=jnp.float32)
+        l0 = jnp.zeros((b, h, qb), dtype=jnp.float32)
+        a0 = jnp.zeros((b, h, qb, hd), dtype=jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(inner, (m0, l0, a0), jnp.arange(nk),
+                                      unroll=True if cfg.unroll_loops else 1)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        # downcast INSIDE the block: everything crossing the sharding
+        # boundary (and its cotangent in the backward pass) stays bf16 —
+        # keeping this f32 doubled the boundary all-reduce wire bytes
+        return jnp.transpose(out, (0, 2, 1, 3)).astype(q.dtype)  # (B,qb,H,hd)
+
+    out = jax.vmap(one_q, in_axes=(0, 1), out_axes=1)(jnp.arange(nq), qr)
+    out = shard_act(out, ("act_batch", "flash_q", None, "heads", None))
+    return out.reshape(b, s, h, hd)
+
+
+def attention(
+    p: dict,
+    cfg: ModelConfig,
+    x: Array,
+    *,
+    mask_kind: str,                      # causal | bidir | local
+    positions: Optional[Array] = None,   # (B,S) or (3,B,S)
+    memory: Optional[Array] = None,      # encoder output for cross-attn
+    cache: Optional[dict] = None,        # decode cache for this layer
+    pos: Optional[Array] = None,         # scalar decode position
+):
+    """Returns (out, new_cache). Modes:
+      * train/prefill: full-sequence; new_cache returned iff cache is not
+        None (prefill populates it);
+      * decode: x is (B, 1, D), cache holds K/V (ring buffer when local).
+    """
+    b, s, d = x.shape
+    q = shard_act(jnp.einsum("bsd,dhk->bshk", x, p["wq"]),
+                  ("act_batch", None, "heads", None))
+    if memory is not None:
+        # cross-attention: K/V from encoder memory (cached after prefill)
+        if cache is not None and "ck" in cache and s == 1:
+            k, v = cache["ck"], cache["cv"]
+            new_cache = cache
+        else:
+            k = jnp.einsum("btd,dnk->btnk", memory, p["wk"])
+            v = jnp.einsum("btd,dnk->btnk", memory, p["wv"])
+            new_cache = {"ck": k, "cv": v} if cache is not None else None
+        mask = jnp.ones((1, 1, 1, s, k.shape[1]), dtype=bool)
+        out = _sdpa(cfg, q, k, v, mask)
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+    k = shard_act(jnp.einsum("bsd,dnk->bsnk", x, p["wk"]),
+                  ("act_batch", None, "kv_heads", None))
+    v = shard_act(jnp.einsum("bsd,dnk->bsnk", x, p["wv"]),
+                  ("act_batch", None, "kv_heads", None))
+
+    if cache is not None and s == 1 and "k" in cache:
+        # ---- decode: single new token against the cache ----
+        assert pos is not None
+        q, k = apply_rope(cfg, q, k, _decode_positions(cfg, positions, pos, b))
+        cap = cache["k"].shape[1]
+        if mask_kind == "local":
+            slot = pos % cap
+        else:
+            slot = pos
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, slot, 0, 0))
+        spos = cache["slot_pos"]
+        spos = jax.lax.dynamic_update_slice(spos, pos[None].astype(spos.dtype), (slot,))
+        valid = spos <= pos
+        if mask_kind == "local":
+            valid = jnp.logical_and(valid, spos > pos - cfg.window)
+        mask = valid[None, None, None, None, :]
+        out = _sdpa(cfg, q, ck, cv, mask)
+        new_cache = {"k": ck, "v": cv, "slot_pos": spos}
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), new_cache
+
+    # ---- train / prefill: full sequence ----
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    q, k = apply_rope(cfg, q, k, positions)
+    if s >= FLASH_MIN_SEQ and s % FLASH_QB == 0:
+        out = _flash_attention(cfg, q, k, v, mask_kind,
+                               block_skip=getattr(cfg, "flash_block_skip", False))
+    else:
+        mask = _train_mask(mask_kind, s, cfg.window)[None, None, None, :, :]
+        out = _sdpa(cfg, q, k, v, mask)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+    new_cache = None
+    if cache is not None:
+        cap = cache["k"].shape[1]
+        if cap >= s:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+            spos = jnp.where(jnp.arange(cap) < s, jnp.arange(cap),
+                             cache["slot_pos"])
+        else:  # local ring: keep the last `cap` tokens
+            ck = k[:, s - cap:].astype(cache["k"].dtype)
+            cv = v[:, s - cap:].astype(cache["v"].dtype)
+            spos = jnp.arange(s - cap, s)
+            # ring layout: slot = pos % cap
+            roll = (s - cap) % cap
+            ck = jnp.roll(ck, roll, axis=1)
+            cv = jnp.roll(cv, roll, axis=1)
+            spos = jnp.roll(spos, roll, axis=0)
+        new_cache = {"k": ck, "v": cv, "slot_pos": spos.astype(jnp.int32)}
+    return y, new_cache
+
+
+def _decode_positions(cfg: ModelConfig, positions, pos, b):
+    if positions is not None:
+        return positions
+    p = jnp.full((b, 1), pos, dtype=jnp.int32)
+    if cfg.rope == "mrope":
+        return jnp.broadcast_to(p[None], (3, b, 1))
+    return p
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_specs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    if cfg.mlp in ("swiglu", "geglu"):
+        return {
+            "wg": ParamSpec((d, f), ("embed", "mlp")),
+            "wu": ParamSpec((d, f), ("embed", "mlp")),
+            "wd": ParamSpec((f, d), ("mlp", "embed")),
+        }
+    return {
+        "wu": ParamSpec((d, f), ("embed", "mlp")),
+        "wd": ParamSpec((f, d), ("mlp", "embed")),
+    }
+
+
+def mlp(p: dict, cfg: ModelConfig, x: Array) -> Array:
+    if cfg.mlp == "swiglu":
+        h = jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])
+    elif cfg.mlp == "geglu":
+        h = jax.nn.gelu(x @ p["wg"]) * (x @ p["wu"])
+    else:
+        h = jax.nn.gelu(x @ p["wu"])
+    h = shard_act(h, ("act_batch", None, "mlp"))
+    return h @ p["wd"]
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def embed_specs(cfg: ModelConfig) -> dict:
+    out = {"table": ParamSpec((cfg.vocab, cfg.d_model), ("vocab", "embed"))}
+    if not cfg.tie_embeddings:
+        out["head"] = ParamSpec((cfg.d_model, cfg.vocab), ("embed", "vocab"))
+    return out
+
+
+def embed(p: dict, cfg: ModelConfig, tokens: Array) -> Array:
+    x = shard_act(p["table"][tokens].astype(cfg.cdtype),
+                  ("act_batch", None, None))
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dtype=x.dtype)
+    return x
+
+
+def unembed(p: dict, cfg: ModelConfig, x: Array) -> Array:
+    if cfg.tie_embeddings:
+        out = jnp.einsum("bsd,vd->bsv", x, p["table"].astype(x.dtype))
+    else:
+        out = jnp.einsum("bsd,dv->bsv", x, p["head"].astype(x.dtype))
+    return shard_act(out, ("act_batch", None, "vocab"))

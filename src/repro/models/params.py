@@ -1,0 +1,73 @@
+"""Parameter spec trees: one definition drives init, abstract shapes and
+sharding (logical axis names -> mesh axes via rules in repro.launch.mesh)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """Leaf of a parameter tree before materialization."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]  # logical axis name per dim
+    init: str = "normal"          # normal | zeros | ones | uniform
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def stack_specs(spec_tree, n: int) -> Any:
+    """Prepend a scanned 'layers' dim of length n to every leaf."""
+    def f(s: ParamSpec) -> ParamSpec:
+        return ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.init, s.scale)
+    return jax.tree.map(f, spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def init_params(spec_tree, key: Array, dtype) -> Any:
+    """Materialize a spec tree (smoke tests / real training)."""
+    leaves, treedef = jax.tree.flatten(
+        spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, s in zip(keys, leaves):
+        if s.init == "zeros":
+            a = jnp.zeros(s.shape, dtype)
+        elif s.init == "ones":
+            a = jnp.ones(s.shape, dtype)
+        elif s.init == "uniform":
+            a = jax.random.uniform(k, s.shape, dtype, -s.scale, s.scale)
+        else:
+            a = (s.scale * jax.random.normal(k, s.shape)).astype(dtype)
+        out.append(a)
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(spec_tree, dtype, sharding_fn: Callable | None = None) -> Any:
+    """ShapeDtypeStructs (dry-run: no allocation).  ``sharding_fn`` maps a
+    leaf's logical axes tuple -> a Sharding (or None)."""
+    def f(s: ParamSpec):
+        sh = sharding_fn(s.axes, s.shape) if sharding_fn else None
+        return jax.ShapeDtypeStruct(s.shape, dtype, sharding=sh)
+    return jax.tree.map(f, spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def axes_tree(spec_tree) -> Any:
+    return jax.tree.map(
+        lambda s: s.axes, spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+
+
+def param_bytes(spec_tree, dtype) -> int:
+    leaves = jax.tree.leaves(spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+    itemsize = jnp.dtype(dtype).itemsize
+    return sum(int(np.prod(s.shape)) * itemsize for s in leaves)

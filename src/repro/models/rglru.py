@@ -1,0 +1,105 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Temporal-mixing block: x -> (linear branch -> causal conv1d -> RG-LRU)
+                          * (linear branch -> GeLU)  -> output projection.
+
+RG-LRU per channel:  a_t = exp(c * log(sigmoid(L)) * sigmoid(r_t))
+                     h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+The recurrence is a first-order linear scan -> jax.lax.associative_scan
+(log-depth, TPU-parallel; this is the Griffin-native formulation, unlike
+RWKV's data-dependent matrix state which needs the sequential/chunked form).
+Decode carries (h, conv buffer) — fixed-size state, so recurrentgemma runs
+``long_500k``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .params import ParamSpec
+
+Array = jax.Array
+
+C_RGLRU = 8.0
+
+
+def rglru_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    w = cfg.rglru_width or d
+    cw = cfg.conv_width
+    return {
+        "wx": ParamSpec((d, w), ("embed", "rnn")),
+        "wy": ParamSpec((d, w), ("embed", "rnn")),
+        "conv_w": ParamSpec((cw, w), ("conv", "rnn")),
+        "conv_b": ParamSpec((w,), ("rnn",), "zeros"),
+        "lam": ParamSpec((w,), ("rnn",), "uniform", 2.0),
+        "w_rg": ParamSpec((w, w), ("rnn", "rnn_out")),
+        "b_rg": ParamSpec((w,), ("rnn",), "zeros"),
+        "w_ig": ParamSpec((w, w), ("rnn", "rnn_out")),
+        "b_ig": ParamSpec((w,), ("rnn",), "zeros"),
+        "wo": ParamSpec((w, d), ("rnn", "embed")),
+    }
+
+
+def _causal_conv1d(u: Array, w: Array, b: Array, prev: Array | None):
+    """Depthwise causal conv, width CW.  prev: (B, CW-1, W) decode buffer."""
+    cw = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((u.shape[0], cw - 1, u.shape[-1]), dtype=u.dtype)
+    ext = jnp.concatenate([prev, u], axis=1)  # (B, S+CW-1, W)
+    out = sum(ext[:, i : i + u.shape[1]] * w[i][None, None] for i in range(cw))
+    new_prev = ext[:, -(cw - 1):] if cw > 1 else prev
+    return out + b[None, None], new_prev
+
+
+def _rglru_scan(a: Array, b_in: Array, h0: Array | None):
+    """h_t = a_t h_{t-1} + b_t via associative scan.  a,b: (B,S,W) f32."""
+    if h0 is not None:
+        # fold the carried state into the first step's additive term
+        b_in = b_in.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b_in), axis=1)
+    return h
+
+
+def rglru_block(p: dict, cfg: ModelConfig, x: Array, cache: dict | None):
+    """Returns (out, new_cache); cache = {'h': (B,W) f32, 'conv': (B,CW-1,W)}."""
+    u = x @ p["wx"]
+    gate = jax.nn.gelu(x @ p["wy"])
+
+    prev_conv = cache["conv"] if cache is not None else None
+    u, new_conv = _causal_conv1d(u, p["conv_w"], p["conv_b"], prev_conv)
+
+    uf = u.astype(jnp.float32)
+    rg = jax.nn.sigmoid(uf @ p["w_rg"].astype(jnp.float32) + p["b_rg"])
+    ig = jax.nn.sigmoid(uf @ p["w_ig"].astype(jnp.float32) + p["b_ig"])
+    log_a = C_RGLRU * jax.nn.log_sigmoid(p["lam"].astype(jnp.float32)) * rg
+    a = jnp.exp(log_a)
+    b_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (ig * uf)
+
+    h0 = cache["h"] if cache is not None else None
+    if x.shape[1] == 1 and h0 is not None:
+        h = (a[:, 0] * h0 + b_in[:, 0])[:, None]
+    else:
+        h = _rglru_scan(a, b_in, h0)
+
+    out = (h.astype(x.dtype) * gate) @ p["wo"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {"h": h[:, -1], "conv": new_conv}
+    return out, new_cache
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    w = cfg.rglru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), dtype=jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype=dtype),
+    }

@@ -1,0 +1,223 @@
+"""RWKV-6 (Finch) blocks: data-dependent-decay linear attention.
+
+Time-mix ("attention") recurrence per head (key dim N), per channel n:
+
+    out_t = r_t . (S_{t-1} + diag(u) k_t v_t^T)
+    S_t   = diag(w_t) S_{t-1} + k_t v_t^T        w_t = exp(-exp(base + lora))
+
+with data-dependent token-shift interpolation (ddlerp) feeding r/k/v/g/w.
+Channel-mix is RWKV's squared-relu FFN with token shift.
+
+Two wkv implementations:
+  * ``wkv_scan``    — exact sequential lax.scan over time.  The correctness
+    oracle, and what the dry-run lowers (recurrence FLOPs are counted via
+    the while-loop trip count).
+  * ``wkv_chunked`` — intra-chunk pairwise-decay form.  Pairwise exponent
+    differences are always <= 0 for causal pairs so it is overflow-safe
+    without clamping, at the cost of an (B, nc, C, C, H, N) intermediate —
+    the TPU-parallel trade-off, validated against the scan in tests.
+
+Decode carries (state, tm_prev, cm_prev) per layer — O(1) in context length,
+which is why rwkv6 runs the ``long_500k`` cell.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .params import ParamSpec
+
+Array = jax.Array
+
+LORA_R = 32       # ddlerp lora rank
+DECAY_LORA_R = 64
+
+
+def rwkv_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    n = cfg.rwkv_head_dim
+    h = d // n
+    f = cfg.d_ff
+    return {
+        # time-mix
+        "mu": ParamSpec((5, d), ("five", "embed"), "uniform", 0.5),
+        "lora_a": ParamSpec((d, 5 * LORA_R), ("embed", "lora")),
+        "lora_b": ParamSpec((5, LORA_R, d), ("five", "lora", "embed")),
+        "w0": ParamSpec((d,), ("embed",), "uniform", 1.0),
+        "wlora_a": ParamSpec((d, DECAY_LORA_R), ("embed", "lora")),
+        "wlora_b": ParamSpec((DECAY_LORA_R, d), ("lora", "embed")),
+        "u": ParamSpec((h, n), ("heads", "head_dim"), "uniform", 0.5),
+        "wr": ParamSpec((d, d), ("embed", "embed_out")),
+        "wk": ParamSpec((d, d), ("embed", "embed_out")),
+        "wv": ParamSpec((d, d), ("embed", "embed_out")),
+        "wg": ParamSpec((d, d), ("embed", "embed_out")),
+        "wo": ParamSpec((d, d), ("embed_out", "embed")),
+        "ln_w": ParamSpec((d,), ("norm",), "ones"),
+        # channel-mix
+        "cm_mu_k": ParamSpec((d,), ("embed",), "uniform", 0.5),
+        "cm_mu_r": ParamSpec((d,), ("embed",), "uniform", 0.5),
+        "cm_wk": ParamSpec((d, f), ("embed", "mlp")),
+        "cm_wv": ParamSpec((f, d), ("mlp", "embed")),
+        "cm_wr": ParamSpec((d, d), ("embed", "embed_out")),
+    }
+
+
+def _shift(x: Array, prev: Array | None) -> Array:
+    """Token shift: x_{t-1}; first position uses `prev` (decode carry) or 0."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    else:
+        prev = prev[:, None, :]
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p: dict, x: Array, xs: Array):
+    """Data-dependent lerp producing the 5 mixed inputs (w,k,v,r,g)."""
+    dx = xs - x
+    mixed = x + dx * p["mu"][0][None, None]
+    lora = jnp.tanh(mixed @ p["lora_a"])
+    b, s, _ = lora.shape
+    lora = lora.reshape(b, s, 5, LORA_R)
+    dyn = jnp.einsum("bsfr,frd->bsfd", lora, p["lora_b"])  # (B,S,5,D)
+    mus = p["mu"][None, None] + dyn
+    return tuple(x + dx * mus[:, :, i] for i in range(5))
+
+
+def wkv_scan(r: Array, k: Array, v: Array, w: Array, u: Array,
+             state: Array | None = None):
+    """Exact recurrence. r/k/v/w: (B,S,H,N); u: (H,N).
+    Returns (out (B,S,H,N), final_state (B,H,N,N))."""
+    b, s, h, n = r.shape
+    if state is None:
+        state = jnp.zeros((b, h, n, n), dtype=jnp.float32)
+
+    def step(st, inp):
+        rt, kt, vt, wt = inp  # (B,H,N) each
+        kv = kt[..., :, None] * vt[..., None, :]            # (B,H,N,N)
+        out = jnp.einsum("bhn,bhnm->bhm", rt,
+                         st + u[None, :, :, None] * kv)
+        st = wt[..., :, None] * st + kv
+        return st, out
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (r, k, v, w))
+    state, out = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(out, 0, 1).astype(r.dtype), state
+
+
+def wkv_chunked(r: Array, k: Array, v: Array, w: Array, u: Array,
+                state: Array | None = None, *, chunk: int = 32,
+                unroll: bool = False):
+    """Chunked parallel form; exact (pairwise log-decay differences <= 0)."""
+    b, s, h, n = r.shape
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    f32 = jnp.float32
+    rc, kc, vc = (a.astype(f32).reshape(b, nc, chunk, h, n) for a in (r, k, v))
+    lw = jnp.log(jnp.maximum(w.astype(f32), 1e-38)).reshape(b, nc, chunk, h, n)
+    cum = jnp.cumsum(lw, axis=2)                    # inclusive within chunk
+    ex = cum - lw                                   # exclusive (sum up to t-1)
+
+    # intra-chunk: att[b,c,t,s,h] = sum_n r_t k_s exp(ex_t - cum_s), s < t
+    diff = ex[:, :, :, None] - cum[:, :, None, :, :, :]  # (B,nc,C,C,H,N)
+    tri = (jnp.arange(chunk)[:, None] > jnp.arange(chunk)[None, :])
+    # mask BEFORE exp: for s >= t the exponent is positive (would overflow)
+    dec = jnp.exp(jnp.where(tri[None, None, :, :, None, None], diff, -jnp.inf))
+    att = jnp.einsum("bcthn,bcshn,bctshn->bctsh", rc, kc, dec)
+    intra = jnp.einsum("bctsh,bcshn->bcthn", att, vc)
+    # current-token bonus
+    bonus = jnp.einsum("bcthn,bcthn->bcth", rc, u[None, None, None] * kc)
+    intra = intra + bonus[..., None] * vc
+
+    # inter-chunk: carry state across chunks with a scan over nc (length S/C)
+    if state is None:
+        state = jnp.zeros((b, h, n, n), dtype=f32)
+    decay_q = jnp.exp(ex)                            # (B,nc,C,H,N), safe: ex<=0
+    decay_total = jnp.exp(cum[:, :, -1])             # (B,nc,H,N)
+    decay_k = jnp.exp(cum[:, :, -1][:, :, None] - cum)  # (B,nc,C,H,N) <= 1
+
+    def chunk_step(st, inp):
+        rq, kq, vq, dtot = inp
+        # rq: r * per-token decay from chunk start (B,C,H,N)
+        inter = jnp.einsum("bthn,bhnm->bthm", rq, st)
+        st = dtot[..., None] * st + jnp.einsum("bthn,bthm->bhnm", kq, vq)
+        return st, inter
+
+    xs = (jnp.moveaxis(rc * decay_q, 1, 0), jnp.moveaxis(kc * decay_k, 1, 0),
+          jnp.moveaxis(vc, 1, 0), jnp.moveaxis(decay_total, 1, 0))
+    state, inter = jax.lax.scan(chunk_step, state, xs,
+                                unroll=True if unroll else 1)
+    inter = jnp.moveaxis(inter, 0, 1)               # (B,nc,C,H,N)
+
+    out = (intra + inter).reshape(b, s, h, n)
+    return out.astype(r.dtype), state
+
+
+def _group_norm(x: Array, w: Array, n: int, eps: float = 64e-5) -> Array:
+    """Per-head group norm over the flattened (H*N) dim (RWKV ln_x)."""
+    b, s, d = x.shape
+    xg = x.reshape(b, s, d // n, n).astype(jnp.float32)
+    mu = jnp.mean(xg, axis=-1, keepdims=True)
+    var = jnp.var(xg, axis=-1, keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    return (xg.reshape(b, s, d) * w).astype(x.dtype)
+
+
+def time_mix(p: dict, cfg: ModelConfig, x: Array, cache: dict | None,
+             *, use_chunked: bool = False):
+    """RWKV6 attention analogue. Returns (out, new_cache)."""
+    b, s, d = x.shape
+    n = cfg.rwkv_head_dim
+    h = d // n
+    prev = cache["tm_prev"] if cache is not None else None
+    xs = _shift(x, prev)
+    xw, xk, xv, xr, xg = _ddlerp(p, x, xs)
+
+    logw = p["w0"][None, None] + jnp.tanh(xw @ p["wlora_a"]) @ p["wlora_b"]
+    w = jnp.exp(-jnp.exp(logw.astype(jnp.float32)))
+
+    r = (xr @ p["wr"]).reshape(b, s, h, n)
+    k = (xk @ p["wk"]).reshape(b, s, h, n)
+    v = (xv @ p["wv"]).reshape(b, s, h, n)
+    g = jax.nn.silu(xg @ p["wg"])
+
+    state = cache["state"] if cache is not None else None
+    wh = w.reshape(b, s, h, n)
+    if use_chunked and s % 32 == 0 and s > 32:
+        chunk = 128 if s % 128 == 0 else 32
+        wkv, new_state = wkv_chunked(r, k, v, wh, p["u"], state, chunk=chunk,
+                                     unroll=cfg.unroll_loops)
+    else:
+        wkv, new_state = wkv_scan(r, k, v, wh, p["u"], state)
+
+    out = _group_norm(wkv.reshape(b, s, d), p["ln_w"], n) * g
+    out = out @ p["wo"]
+    new_cache = None
+    if cache is not None:
+        new_cache = {"state": new_state, "tm_prev": x[:, -1],
+                     "cm_prev": cache["cm_prev"]}
+    return out, new_cache
+
+
+def channel_mix(p: dict, cfg: ModelConfig, x: Array, cache: dict | None):
+    prev = cache["cm_prev"] if cache is not None else None
+    xs = _shift(x, prev)
+    dx = xs - x
+    xk = x + dx * p["cm_mu_k"][None, None]
+    xr = x + dx * p["cm_mu_r"][None, None]
+    k = jnp.square(jax.nn.relu(xk @ p["cm_wk"]))
+    out = jax.nn.sigmoid(xr @ p["cm_wr"]) * (k @ p["cm_wv"])
+    new_cache = None
+    if cache is not None:
+        new_cache = dict(cache, cm_prev=x[:, -1])
+    return out, new_cache
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    n = cfg.rwkv_head_dim
+    return {
+        "state": jnp.zeros((batch, d // n, n, n), dtype=jnp.float32),
+        "tm_prev": jnp.zeros((batch, d), dtype=dtype),
+        "cm_prev": jnp.zeros((batch, d), dtype=dtype),
+    }

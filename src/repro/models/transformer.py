@@ -1,0 +1,395 @@
+"""Config-driven stacked model: scan-over-layers, remat, train/prefill/decode.
+
+The layer stack is ``prefix`` (unscanned) + ``pattern`` x reps (lax.scan over
+stacked params — keeps the HLO compact for 512-device compiles) + ``suffix``
+(unscanned).  Caches mirror the same structure so decode scans over
+(params, cache) pairs.  Heterogeneous patterns (e.g. Griffin's
+rec/rec/attn) put one full pattern instance inside each scan step.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import moe as MOE
+from . import rglru as RG
+from . import rwkv as RW
+from .config import ModelConfig
+from .params import ParamSpec, abstract_params, init_params, stack_specs
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# per-block specs
+# ---------------------------------------------------------------------------
+
+def block_specs(cfg: ModelConfig, kind: str, *, decoder: bool = False) -> dict:
+    if kind == "attn":
+        out = {"n1": L.norm_specs(cfg), "attn": L.attn_specs(cfg),
+               "n2": L.norm_specs(cfg), "mlp": L.mlp_specs(cfg)}
+        if decoder and cfg.encdec:
+            out["nx"] = L.norm_specs(cfg)
+            out["xattn"] = L.attn_specs(cfg)
+        return out
+    if kind == "moe":
+        return {"n1": L.norm_specs(cfg), "attn": L.attn_specs(cfg),
+                "n2": L.norm_specs(cfg), "moe": MOE.moe_specs(cfg)}
+    if kind == "rec":
+        return {"n1": L.norm_specs(cfg), "rec": RG.rglru_specs(cfg),
+                "n2": L.norm_specs(cfg), "mlp": L.mlp_specs(cfg)}
+    if kind == "rwkv":
+        return {"n1": L.norm_specs(cfg), "n2": L.norm_specs(cfg),
+                "rwkv": RW.rwkv_specs(cfg)}
+    raise ValueError(kind)
+
+
+def apply_block(kind: str, p: dict, cfg: ModelConfig, x: Array, ctx: dict):
+    """Returns (x, new_cache, metrics)."""
+    cache = ctx.get("cache")
+    metrics: dict = {}
+    if kind in ("attn", "moe"):
+        h, acache = L.attention(
+            p["attn"], cfg, L.apply_norm(p["n1"], cfg, x),
+            mask_kind=ctx["mask_kind"], positions=ctx.get("positions"),
+            cache=cache.get("self") if cache else None, pos=ctx.get("pos"))
+        x = x + h
+        new_cache = {"self": acache} if cache is not None else None
+        if cfg.encdec and "xattn" in p:
+            h, xcache = L.attention(
+                p["xattn"], cfg, L.apply_norm(p["nx"], cfg, x),
+                mask_kind="bidir", memory=ctx.get("memory"),
+                cache=cache.get("cross") if cache else None, pos=ctx.get("pos"))
+            x = x + h
+            if new_cache is not None:
+                new_cache["cross"] = xcache
+        h2 = L.apply_norm(p["n2"], cfg, x)
+        if kind == "moe":
+            h2, metrics = MOE.moe_ffn(p["moe"], cfg, h2)
+        else:
+            h2 = L.mlp(p["mlp"], cfg, h2)
+        return x + h2, new_cache, metrics
+    if kind == "rec":
+        h, rcache = RG.rglru_block(p["rec"], cfg, L.apply_norm(p["n1"], cfg, x),
+                                   cache)
+        x = x + h
+        return x + L.mlp(p["mlp"], cfg, L.apply_norm(p["n2"], cfg, x)), rcache, metrics
+    if kind == "rwkv":
+        h, c1 = RW.time_mix(p["rwkv"], cfg, L.apply_norm(p["n1"], cfg, x), cache,
+                            use_chunked=ctx.get("chunked", False))
+        x = x + h
+        h2, c2 = RW.channel_mix(p["rwkv"], cfg, L.apply_norm(p["n2"], cfg, x),
+                                c1 if c1 is not None else cache)
+        return x + h2, c2, metrics
+    raise ValueError(kind)
+
+
+def _block_mask_kind(cfg: ModelConfig, kind: str, *, encoder: bool = False) -> str:
+    if encoder:
+        return "bidir"
+    if kind in ("attn", "moe") and cfg.attn_kind == "local":
+        return "local"
+    return "causal"
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+# ---------------------------------------------------------------------------
+
+def _block_cache_spec(cfg: ModelConfig, kind: str, batch: int, cache_len: int,
+                      *, src_len: int = 0, decoder: bool = False) -> dict:
+    kv, hd = cfg.num_kv_heads, cfg.head_dim
+    if kind in ("attn", "moe"):
+        cap = min(cfg.window, cache_len) if cfg.attn_kind == "local" else cache_len
+        spec = {"self": {
+            "k": ParamSpec((batch, cap, kv, hd),
+                           ("cache_batch", "cache_seq", "kv_heads", "head_dim"), "zeros"),
+            "v": ParamSpec((batch, cap, kv, hd),
+                           ("cache_batch", "cache_seq", "kv_heads", "head_dim"), "zeros"),
+            "slot_pos": ParamSpec((cap,), ("cache_seq",), "zeros"),
+        }}
+        if decoder and cfg.encdec:
+            spec["cross"] = {
+                "ck": ParamSpec((batch, src_len, kv, hd),
+                                ("cache_batch", "cache_seq", "kv_heads", "head_dim"), "zeros"),
+                "cv": ParamSpec((batch, src_len, kv, hd),
+                                ("cache_batch", "cache_seq", "kv_heads", "head_dim"), "zeros"),
+            }
+        return spec
+    if kind == "rec":
+        w = cfg.rglru_width or cfg.d_model
+        return {"h": ParamSpec((batch, w), ("cache_batch", "rnn"), "zeros"),
+                "conv": ParamSpec((batch, cfg.conv_width - 1, w),
+                                  ("cache_batch", None, "rnn"), "zeros")}
+    if kind == "rwkv":
+        d, n = cfg.d_model, cfg.rwkv_head_dim
+        return {
+            "state": ParamSpec((batch, d // n, n, n),
+                               ("cache_batch", "heads", None, None), "zeros"),
+            "tm_prev": ParamSpec((batch, d), ("cache_batch", "embed"), "zeros"),
+            "cm_prev": ParamSpec((batch, d), ("cache_batch", "embed"), "zeros"),
+        }
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# the model
+# ---------------------------------------------------------------------------
+
+class Model:
+    """Functional model wrapper bound to a ModelConfig."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.prefix_kinds, self.reps, self.suffix_kinds = cfg.layer_plan
+        self.pattern = cfg.pattern
+
+    # -- parameter specs ----------------------------------------------------
+    def param_specs(self) -> dict:
+        cfg = self.cfg
+        dec = cfg.encdec
+        specs: dict[str, Any] = {"embed": L.embed_specs(cfg)}
+        if self.prefix_kinds:
+            specs["prefix"] = {
+                f"p{i}": block_specs(cfg, k, decoder=dec)
+                for i, k in enumerate(self.prefix_kinds)}
+        unit = {f"b{i}": block_specs(cfg, k, decoder=dec)
+                for i, k in enumerate(self.pattern)}
+        specs["stack"] = stack_specs(unit, self.reps)
+        if self.suffix_kinds:
+            specs["suffix"] = {
+                f"s{i}": block_specs(cfg, k, decoder=dec)
+                for i, k in enumerate(self.suffix_kinds)}
+        specs["final_norm"] = L.norm_specs(cfg)
+        if cfg.encdec:
+            enc_unit = {"b0": block_specs(cfg, "attn")}
+            specs["encoder"] = {
+                "stack": stack_specs(enc_unit, cfg.enc_layers),
+                "final_norm": L.norm_specs(cfg),
+            }
+        return specs
+
+    def init(self, key: Array):
+        return init_params(self.param_specs(), key, self.cfg.pdtype)
+
+    def abstract(self, sharding_fn=None):
+        return abstract_params(self.param_specs(), self.cfg.pdtype, sharding_fn)
+
+    # -- cache specs ----------------------------------------------------------
+    def cache_specs(self, batch: int, cache_len: int, *, src_len: int = 0) -> dict:
+        cfg = self.cfg
+        dec = cfg.encdec
+        mk = lambda k: _block_cache_spec(cfg, k, batch, cache_len,
+                                         src_len=src_len, decoder=dec)
+        out: dict[str, Any] = {}
+        if self.prefix_kinds:
+            out["prefix"] = {f"p{i}": mk(k) for i, k in enumerate(self.prefix_kinds)}
+        unit = {f"b{i}": mk(k) for i, k in enumerate(self.pattern)}
+        out["stack"] = stack_specs(unit, self.reps)
+        if self.suffix_kinds:
+            out["suffix"] = {f"s{i}": mk(k) for i, k in enumerate(self.suffix_kinds)}
+        return out
+
+    def init_cache(self, batch: int, cache_len: int, *, src_len: int = 0):
+        specs = self.cache_specs(batch, cache_len, src_len=src_len)
+
+        def mat(s: ParamSpec):
+            dt = jnp.float32 if (s.axes and s.axes[-1] is None) or \
+                 s.shape[-1] == (self.cfg.rglru_width or self.cfg.d_model) else self.cfg.cdtype
+            # slot_pos / rwkv state need specific dtypes
+            return jnp.zeros(s.shape, dtype=dt)
+
+        cache = jax.tree.map(mat, specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+        return self._fix_cache_dtypes(cache)
+
+    def _fix_cache_dtypes(self, cache):
+        def fix(path, leaf):
+            name = path[-1].key if hasattr(path[-1], "key") else ""
+            if name == "slot_pos":
+                # large POSITIVE sentinel: empty slots must fail `spos <= pos`
+                return jnp.full(leaf.shape, 2 ** 30, dtype=jnp.int32)
+            if name in ("state", "h"):
+                return leaf.astype(jnp.float32)
+            if name in ("k", "v", "ck", "cv", "conv", "tm_prev", "cm_prev"):
+                return leaf.astype(self.cfg.cdtype)
+            return leaf
+        return jax.tree_util.tree_map_with_path(fix, cache)
+
+    # -- forward ------------------------------------------------------------
+    def _inputs_to_x(self, params, batch):
+        cfg = self.cfg
+        if cfg.input_mode == "embeds":
+            x = batch["embeds"].astype(cfg.cdtype)
+            if cfg.scale_embed:
+                x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+            return x
+        return L.embed(params["embed"], cfg, batch["tokens"])
+
+    def _encode(self, params, batch):
+        cfg = self.cfg
+        x = batch["src_embeds"].astype(cfg.cdtype)
+        enc = params["encoder"]
+
+        def unit(carry, up):
+            h, _, _ = apply_block("attn", up["b0"], cfg, carry,
+                                  {"mask_kind": "bidir"})
+            return h, ()
+
+        x, _ = jax.lax.scan(unit, x, enc["stack"],
+                            unroll=True if cfg.unroll_loops else 1)
+        return L.apply_norm(enc["final_norm"], cfg, x)
+
+    def forward(self, params, batch, *, mode: str = "train", cache=None,
+                pos=None):
+        """mode: train | prefill | decode. Returns (logits, new_cache, metrics)."""
+        cfg = self.cfg
+        x = self._inputs_to_x(params, batch)
+        memory = self._encode(params, batch) if cfg.encdec else None
+        positions = batch.get("positions")
+        use_cache = cache is not None
+
+        # chunked (parallel-form) WKV only in the unrolled cost probes: the
+        # pairwise-decay intermediate is O(B*S*C*H*N) — deployment uses the
+        # sequential scan whose memory is O(B*H*N^2) (see DESIGN.md §6).
+        base_ctx = {"positions": positions, "memory": memory, "pos": pos,
+                    "chunked": cfg.unroll_loops}
+
+        metrics_acc: list[dict] = []
+        new_cache: dict[str, Any] = {}
+
+        def run_block(kind, p, x, c):
+            ctx = dict(base_ctx, mask_kind=_block_mask_kind(cfg, kind),
+                       cache=c)
+            return apply_block(kind, p, cfg, x, ctx)
+
+        # prefix
+        if self.prefix_kinds:
+            new_cache["prefix"] = {}
+            for i, kind in enumerate(self.prefix_kinds):
+                c = cache["prefix"][f"p{i}"] if use_cache else None
+                x, nc, met = run_block(kind, params["prefix"][f"p{i}"], x, c)
+                new_cache["prefix"][f"p{i}"] = nc
+                metrics_acc.append(met)
+
+        # scanned body
+        def unit(carry, xs):
+            h = carry
+            up, uc = xs
+            ncs, mets = {}, {}
+            for i, kind in enumerate(self.pattern):
+                c = uc[f"b{i}"] if use_cache else None
+                h, nc, met = run_block(kind, up[f"b{i}"], h, c)
+                ncs[f"b{i}"] = nc if use_cache else ()
+                mets.update({k: jnp.asarray(v) for k, v in met.items()})
+            return h, (ncs, mets)
+
+        unit_fn = unit
+        if cfg.remat and mode == "train":
+            if cfg.remat_policy == "dots":
+                unit_fn = jax.checkpoint(
+                    unit,
+                    policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+            else:
+                unit_fn = jax.checkpoint(unit)
+
+        unroll = True if cfg.unroll_loops else 1
+        if not use_cache:
+            x, (scache, smets) = jax.lax.scan(
+                lambda c, up: unit_fn(c, (up, None)), x, params["stack"],
+                unroll=unroll)
+        else:
+            x, (scache, smets) = jax.lax.scan(
+                unit_fn, x, (params["stack"], cache["stack"]), unroll=unroll)
+        new_cache["stack"] = scache
+        if smets:
+            metrics_acc.append({k: jnp.mean(v) for k, v in smets.items()})
+
+        # suffix
+        if self.suffix_kinds:
+            new_cache["suffix"] = {}
+            for i, kind in enumerate(self.suffix_kinds):
+                c = cache["suffix"][f"s{i}"] if use_cache else None
+                x, nc, met = run_block(kind, params["suffix"][f"s{i}"], x, c)
+                new_cache["suffix"][f"s{i}"] = nc
+                metrics_acc.append(met)
+
+        x = L.apply_norm(params["final_norm"], cfg, x)
+        if mode in ("prefill", "decode"):
+            x = x[:, -1:]  # only the last position's logits are needed
+
+        metrics: dict = {}
+        for m in metrics_acc:
+            for k, v in m.items():
+                metrics[k] = metrics.get(k, 0.0) + v / max(1, len(metrics_acc))
+        if mode == "hidden":
+            return x, (new_cache if use_cache else None), metrics
+        logits = L.unembed(params["embed"], cfg, x)
+        return logits, (new_cache if use_cache else None), metrics
+
+    # -- public steps ---------------------------------------------------------
+    def loss(self, params, batch):
+        cfg = self.cfg
+        labels = batch["labels"]
+        if cfg.chunked_loss:
+            # beyond-paper memory optimization: never materialize the full
+            # (B, S, V) logits — unembed + CE one sequence chunk at a time.
+            x, _, metrics = self.forward(params, batch, mode="hidden")
+            c = cfg.chunked_loss
+            b, s, d = x.shape
+            assert s % c == 0, (s, c)
+            xc = x.reshape(b, s // c, c, d).swapaxes(0, 1)
+            lc = labels.reshape(b, s // c, c).swapaxes(0, 1)
+
+            def chunk(carry, xs):
+                xch, lch = xs
+                logits = L.unembed(params["embed"], cfg, xch)
+                lf = logits.astype(jnp.float32)
+                lse = jax.scipy.special.logsumexp(lf, axis=-1)
+                gold = jnp.take_along_axis(
+                    lf, lch[..., None].astype(jnp.int32), axis=-1)[..., 0]
+                valid = (lch >= 0).astype(jnp.float32)
+                tot, cnt = carry
+                return (tot + jnp.sum((lse - gold) * valid),
+                        cnt + jnp.sum(valid)), None
+
+            (tot, cnt), _ = jax.lax.scan(chunk, (jnp.float32(0), jnp.float32(0)),
+                                         (xc, lc))
+            ce = tot / jnp.maximum(cnt, 1.0)
+            return ce, dict(metrics, loss=ce)
+
+        logits, _, metrics = self.forward(params, batch, mode="train")
+        lf = logits.astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(lf, axis=-1)
+        gold = jnp.take_along_axis(lf, labels[..., None].astype(jnp.int32),
+                                   axis=-1)[..., 0]
+        valid = (labels >= 0).astype(jnp.float32)
+        ce = jnp.sum((lse - gold) * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+        metrics = dict(metrics, loss=ce)
+        return ce, metrics
+
+    def prefill(self, params, batch, cache):
+        logits, new_cache, _ = self.forward(params, batch, mode="prefill",
+                                            cache=cache)
+        return logits, new_cache
+
+    def decode_step(self, params, tokens, cache, pos, *, positions=None,
+                    memory=None):
+        """tokens (B, 1) -> (logits (B,1,V), new_cache)."""
+        batch = {"tokens": tokens}
+        if self.cfg.input_mode == "embeds":
+            # decode always proceeds in token space (text generation)
+            batch = {"embeds": L.embed({"table": params["embed"]["table"]},
+                                       self.cfg, tokens)}
+        if positions is not None:
+            batch["positions"] = positions
+        if self.cfg.encdec:
+            # cross K/V are cached; encoder is not re-run at decode time
+            batch["src_embeds"] = jnp.zeros(
+                (tokens.shape[0], 1, self.cfg.d_model), self.cfg.cdtype)
+        logits, new_cache, _ = self.forward(batch=batch, params=params,
+                                            mode="decode", cache=cache, pos=pos)
+        return logits, new_cache

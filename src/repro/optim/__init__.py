@@ -1,0 +1,14 @@
+"""Optimizers from scratch (no optax): AdamW and Adafactor.
+
+Both keep fp32 statistics regardless of param dtype; Adafactor factors the
+second moment over the last two dims (rows/cols) which is what makes the
+1T-param Kimi config's optimizer state fit the mesh.  ``abstract_state``
+mirrors ``init`` at the ShapeDtypeStruct level for the dry-run, including the
+logical sharding axes of every state leaf.
+"""
+from .adamw import adamw
+from .adafactor import adafactor
+from .base import Optimizer, clip_by_global_norm, OPTIMIZERS
+
+__all__ = ["adamw", "adafactor", "Optimizer", "clip_by_global_norm",
+           "OPTIMIZERS"]

@@ -1,0 +1,81 @@
+"""Adafactor (factored second moments), for the trillion-param configs.
+
+For params with ndim >= 2 the second moment is stored as a row statistic
+(shape[:-1]) and a column statistic (shape[:-2] + last dim) — O(n+m) instead
+of O(nm).  First moment is omitted (beta1=0, the standard Adafactor choice).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import Optimizer, OPTIMIZERS, clip_by_global_norm
+
+Array = jax.Array
+
+
+def adafactor(lr: float = 1e-3, decay: float = 0.8, eps: float = 1e-30,
+              clip_norm: float = 1.0) -> Optimizer:
+    def _factored(p) -> bool:
+        # purely ndim-based so it agrees with state_axes (which only sees
+        # the axes tuple); size-1 dims factor fine (mean over 1 element)
+        return p.ndim >= 2
+
+    def init(params):
+        def per(p):
+            if _factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"stats": jax.tree.map(per, params)}
+
+    def update(grads, state, params, step):
+        grads, _ = clip_by_global_norm(grads, clip_norm)
+        stepf = (step + 1).astype(jnp.float32)
+        beta2 = 1.0 - stepf ** (-decay)
+
+        def upd(g, st, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if "vr" in st:
+                vr = beta2 * st["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * st["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(jnp.mean(vr, axis=-1,
+                                                keepdims=True)[..., None], eps))
+                u = gf * jax.lax.rsqrt(denom + eps)
+                new_st = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * st["v"] + (1 - beta2) * g2
+                u = gf * jax.lax.rsqrt(v + eps)
+                new_st = {"v": v}
+            # update clipping (Adafactor's d=1.0 RMS rule)
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms)
+            newp = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+            return newp, new_st
+
+        flat_p, td = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        stats_leaves = jax.tree.flatten(
+            state["stats"], is_leaf=lambda x: isinstance(x, dict) and
+            ("v" in x or "vr" in x))[0]
+        out = [upd(g, st, p) for g, st, p in zip(flat_g, stats_leaves, flat_p)]
+        new_p = jax.tree.unflatten(td, [o[0] for o in out])
+        new_stats = jax.tree.unflatten(td, [o[1] for o in out])
+        return new_p, {"stats": new_stats}
+
+    def state_axes(param_axes):
+        def per(axes):
+            # mirrors _factored on the axes tuple length; callers pass the
+            # matching param shapes implicitly (ndim == len(axes))
+            if len(axes) >= 2:
+                return {"vr": axes[:-1], "vc": axes[:-2] + axes[-1:]}
+            return {"v": axes}
+        return {"stats": jax.tree.map(
+            per, param_axes, is_leaf=lambda x: isinstance(x, tuple))}
+
+    return Optimizer(init=init, update=update, state_axes=state_axes)
+
+
+OPTIMIZERS["adafactor"] = adafactor

@@ -1,0 +1,51 @@
+"""AdamW with fp32 moments and decoupled weight decay."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .base import Optimizer, OPTIMIZERS, clip_by_global_norm
+
+Array = jax.Array
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          clip_norm: float = 1.0) -> Optimizer:
+    def init(params):
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(f32, params), "v": jax.tree.map(f32, params)}
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        stepf = (step + 1).astype(jnp.float32)
+        bc1 = 1.0 - b1 ** stepf
+        bc2 = 1.0 - b2 ** stepf
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m = b1 * m + (1.0 - b1) * gf
+            v = b2 * v + (1.0 - b2) * gf * gf
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            newp = (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+            return newp, m, v
+
+        flat_p, td = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state["m"])
+        flat_v = jax.tree.leaves(state["v"])
+        out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = jax.tree.unflatten(td, [o[0] for o in out])
+        new_m = jax.tree.unflatten(td, [o[1] for o in out])
+        new_v = jax.tree.unflatten(td, [o[2] for o in out])
+        return new_p, {"m": new_m, "v": new_v}
+
+    def state_axes(param_axes):
+        return {"m": param_axes, "v": param_axes}
+
+    return Optimizer(init=init, update=update, state_axes=state_axes)
+
+
+OPTIMIZERS["adamw"] = adamw

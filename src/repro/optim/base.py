@@ -1,0 +1,41 @@
+"""Optimizer interface + shared utilities."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    """Functional optimizer:  state = init(params);
+    new_params, new_state = update(grads, state, params, step)."""
+
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, Array], tuple[Any, Any]]
+    # axes_fn(param_axes) -> state axes tree for the same param leaf;
+    # used to shard optimizer state in the dry-run / checkpointer.
+    state_axes: Callable[[Any], Any]
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    if max_norm <= 0:
+        return grads, jnp.array(0.0)
+    gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(grads))
+    gnorm = jnp.sqrt(gsq)
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gnorm
+
+
+def cast_like(x, ref):
+    return x.astype(ref.dtype)
+
+
+# registry filled by the concrete modules (import order via __init__)
+OPTIMIZERS: dict[str, Callable[..., Optimizer]] = {}

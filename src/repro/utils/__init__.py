@@ -1,0 +1,3 @@
+from . import roofline
+
+__all__ = ["roofline"]

@@ -1,0 +1,172 @@
+"""Three-term roofline from a compiled dry-run artifact (TPU v5e targets).
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = wire_bytes_per_device / ICI link_bw
+
+cost_analysis() on the SPMD-partitioned module is PER-DEVICE (verified
+empirically: reported flops ~= global/num_devices for a known matmul), so no
+further division by chip count.  Collective bytes are NOT in cost_analysis:
+we parse the optimized HLO (compiled.as_text()) for
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+ops (including their async -start forms), take per-device result shapes, and
+convert to ring-algorithm wire bytes:
+
+  all-reduce       2 * B * (g-1)/g        (B = per-device block bytes)
+  all-gather       B_out * (g-1)/g        (B_out = gathered result bytes)
+  reduce-scatter   B_out * (g-1)          (B_out = scattered result bytes)
+  all-to-all       B * (g-1)/g
+  collective-perm  B
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Any
+
+import numpy as np
+
+PEAK_FLOPS = 197e12     # bf16 per chip
+HBM_BW = 819e9          # bytes/s per chip
+ICI_BW = 50e9           # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<result>\([^)]*\)|\S+)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)"
+    r"(?P<start>-start)?\(",
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip() != ""])
+    return 1
+
+
+def parse_collectives(hlo: str) -> list[dict]:
+    """One record per collective op: kind, result bytes (per device), group
+    size, wire bytes (per device, ring algorithm)."""
+    out = []
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        if "-done" in line.split("=")[0]:
+            continue
+        kind = m.group("op")
+        b = _shape_bytes(m.group("result"))
+        g = max(1, _group_size(line))
+        if kind == "all-reduce":
+            wire = 2.0 * b * (g - 1) / g
+        elif kind == "all-gather":
+            wire = b * (g - 1) / g
+        elif kind == "reduce-scatter":
+            wire = b * (g - 1)
+        elif kind == "all-to-all":
+            wire = b * (g - 1) / g
+        else:  # collective-permute
+            wire = float(b)
+        out.append({"kind": kind, "bytes": b, "group": g, "wire": wire})
+    return out
+
+
+def collective_summary(colls: list[dict]) -> dict:
+    agg: dict[str, dict] = defaultdict(lambda: {"count": 0, "bytes": 0.0,
+                                                "wire": 0.0})
+    for c in colls:
+        a = agg[c["kind"]]
+        a["count"] += 1
+        a["bytes"] += c["bytes"]
+        a["wire"] += c["wire"]
+    return dict(agg)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per device
+    bytes_accessed: float        # per device
+    wire_bytes: float            # per device
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float           # global 6ND (or 2ND serve)
+    useful_ratio: float          # model_flops / (flops * chips)
+    collectives: dict
+    bound_s: float
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def analyze_values(*, flops: float, bytes_accessed: float, wire_bytes: float,
+                   collectives: dict, n_chips: int,
+                   model_flops: float) -> Roofline:
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = wire_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    useful = model_flops / max(flops * n_chips, 1.0)
+    return Roofline(
+        flops=flops, bytes_accessed=bytes_accessed, wire_bytes=wire_bytes,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops=model_flops, useful_ratio=useful,
+        collectives=collectives, bound_s=max(terms.values()),
+    )
+
+
+def analyze(cost: dict, hlo: str, *, n_chips: int, model_flops: float) -> Roofline:
+    colls = parse_collectives(hlo)
+    return analyze_values(
+        flops=float(cost.get("flops", 0.0)),
+        bytes_accessed=float(cost.get("bytes accessed", 0.0)),
+        wire_bytes=sum(c["wire"] for c in colls),
+        collectives=collective_summary(colls),
+        n_chips=n_chips, model_flops=model_flops)
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N_active*D for training, 2*N_active*D for serving
+    (D = tokens processed by the step)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch  # decode: one token per sequence
+    return 2.0 * n * tokens

@@ -1,0 +1,122 @@
+"""Per-arch smoke tests: reduced config of the same family runs one forward +
+train-step gradient + a prefill/decode step on CPU, asserting shapes + no NaNs.
+Full configs are exercised only via the dry-run (ShapeDtypeStruct)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import Model
+from repro.models.config import SHAPES, cell_is_skipped
+
+KEY = jax.random.PRNGKey(11)
+
+
+def _smoke_batch(cfg, b=2, s=16):
+    batch = {}
+    if cfg.input_mode == "embeds":
+        batch["embeds"] = jax.random.normal(KEY, (b, s, cfg.d_model),
+                                            dtype=jnp.float32)
+    else:
+        batch["tokens"] = jax.random.randint(KEY, (b, s), 0, cfg.vocab)
+    batch["labels"] = jax.random.randint(KEY, (b, s), 0, cfg.vocab)
+    if cfg.rope == "mrope":
+        batch["positions"] = jnp.broadcast_to(
+            jnp.arange(s)[None, None], (3, b, s)).astype(jnp.int32)
+    if cfg.encdec:
+        batch["src_embeds"] = jax.random.normal(
+            jax.random.fold_in(KEY, 9), (b, 8, cfg.d_model), dtype=jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_NAMES)
+def test_arch_smoke_train_step(arch):
+    cfg = configs.smoke_of(configs.get(arch))
+    m = Model(cfg)
+    params = m.init(KEY)
+    batch = _smoke_batch(cfg)
+    (loss, mets), grads = jax.value_and_grad(m.loss, has_aux=True)(params, batch)
+    assert np.isfinite(float(loss)), (arch, loss)
+    gsum = jax.tree.reduce(
+        lambda a, g: a + jnp.sum(jnp.abs(g.astype(jnp.float32))), grads, 0.0)
+    assert np.isfinite(float(gsum)), arch
+    assert float(gsum) > 0.0, f"{arch}: zero gradients"
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_NAMES)
+def test_arch_smoke_prefill_decode(arch):
+    cfg = configs.smoke_of(configs.get(arch))
+    m = Model(cfg)
+    params = m.init(KEY)
+    b, s = 2, 16
+    batch = _smoke_batch(cfg, b, s)
+    batch.pop("labels")
+    cache = m.init_cache(b, s + 4, src_len=8 if cfg.encdec else 0)
+    logits, cache = m.prefill(params, batch, cache)
+    assert logits.shape == (b, 1, cfg.vocab), (arch, logits.shape)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32)))), arch
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    kw = {}
+    if cfg.rope == "mrope":
+        kw["positions"] = jnp.full((3, b, 1), s, dtype=jnp.int32)
+    lg, _ = m.decode_step(params, tok, cache, jnp.array(s, jnp.int32), **kw)
+    assert lg.shape == (b, 1, cfg.vocab), (arch, lg.shape)
+    assert bool(jnp.all(jnp.isfinite(lg.astype(jnp.float32)))), arch
+
+
+def test_full_configs_match_assigned_dims():
+    """The full (non-smoke) configs carry the exact published dims."""
+    expect = {
+        "gemma-7b": (28, 3072, 16, 16, 24576, 256_000),
+        "llama3.2-3b": (28, 3072, 24, 8, 8192, 128_256),
+        "mistral-large-123b": (88, 12288, 96, 8, 28672, 32_768),
+        "yi-34b": (60, 7168, 56, 8, 20480, 64_000),
+        "rwkv6-3b": (32, 2560, 40, 40, 8960, 65_536),
+        "qwen2-vl-7b": (28, 3584, 28, 4, 18944, 152_064),
+        "dbrx-132b": (40, 6144, 48, 8, 10752, 100_352),
+        "kimi-k2-1t-a32b": (61, 7168, 64, 8, 2048, 163_840),
+        "seamless-m4t-large-v2": (24, 1024, 16, 16, 8192, 256_206),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256_000),
+    }
+    for arch, (nl, d, h, kv, ff, v) in expect.items():
+        cfg = configs.get(arch)
+        got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+               cfg.d_ff, cfg.vocab)
+        assert got == (nl, d, h, kv, ff, v), (arch, got)
+
+
+def test_layer_plans_decompose():
+    for arch in configs.ARCH_NAMES:
+        cfg = configs.get(arch)
+        prefix, reps, suffix = cfg.layer_plan  # raises if inconsistent
+        assert len(prefix) + reps * len(cfg.pattern) + len(suffix) == cfg.num_layers
+
+
+def test_param_counts_plausible():
+    """Sanity-check total parameter counts against the published sizes."""
+    expect_b = {  # billions, loose bounds
+        "gemma-7b": (7, 10), "llama3.2-3b": (2.5, 4.5),
+        "mistral-large-123b": (110, 135), "yi-34b": (30, 38),
+        "rwkv6-3b": (2.5, 4), "qwen2-vl-7b": (6, 9),
+        "dbrx-132b": (120, 140), "kimi-k2-1t-a32b": (850, 1150),
+        "seamless-m4t-large-v2": (0.8, 2.5), "recurrentgemma-9b": (7.5, 11),
+    }
+    for arch, (lo, hi) in expect_b.items():
+        n = configs.get(arch).param_count() / 1e9
+        assert lo <= n <= hi, f"{arch}: {n:.1f}B not in [{lo},{hi}]"
+
+
+def test_moe_active_params():
+    kimi = configs.get("kimi-k2-1t-a32b")
+    active = kimi.active_param_count() / 1e9
+    assert 20 <= active <= 45, active  # "a32b"
+
+
+def test_cell_skips_match_design():
+    skipped = [(a, s) for a in configs.ARCH_NAMES for s in SHAPES
+               if cell_is_skipped(a, s)]
+    assert len(skipped) == 8  # long_500k on the 8 full-attention archs
+    assert all(s == "long_500k" for _, s in skipped)
+    assert not cell_is_skipped("rwkv6-3b", "long_500k")
+    assert not cell_is_skipped("recurrentgemma-9b", "long_500k")

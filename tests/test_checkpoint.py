@@ -1,0 +1,167 @@
+"""Checkpoint manager: roundtrip, atomicity, keep-k, async, restart-resume,
+optimizer correctness, data-pipeline determinism, straggler monitor."""
+import json
+import shutil
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, save_pytree, load_pytree
+from repro.dist import StragglerMonitor
+from repro.optim import adamw, adafactor
+
+KEY = jax.random.PRNGKey(0)
+
+
+def tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.int32),
+                  "d": (jnp.zeros((2, 2)), jnp.full((3,), 2.5))}}
+
+
+def test_roundtrip(tmp_path):
+    t = tree()
+    save_pytree(tmp_path / "ck", t, extra={"step": 7})
+    restored, extra = load_pytree(tmp_path / "ck", like=t)
+    assert extra["step"] == 7
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_atomic_rename_never_leaves_partial(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    mgr.save(1, tree())
+    # simulate a crashed write: stale .tmp next to a good checkpoint
+    (tmp_path / "step_00000002.tmp").mkdir()
+    (tmp_path / "step_00000002.tmp" / "garbage").write_text("x")
+    assert mgr.latest_step() == 1
+    restored, extra = mgr.restore(tree())
+    assert extra["step"] == 1
+
+
+def test_incomplete_checkpoint_is_skipped(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=False)
+    mgr.save(1, tree())
+    mgr.save(2, tree())
+    # corrupt the newest: mark incomplete
+    meta = tmp_path / "step_00000002" / "meta.json"
+    m = json.loads(meta.read_text())
+    m["complete"] = False
+    meta.write_text(json.dumps(m))
+    assert mgr.latest_step() == 1
+
+
+def test_keep_k_garbage_collection(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2, async_save=False)
+    for s in (1, 2, 3, 4, 5):
+        mgr.save(s, tree())
+    assert mgr.steps() == [4, 5]
+
+
+def test_async_save_then_restore(tmp_path):
+    mgr = CheckpointManager(tmp_path, async_save=True)
+    t = tree()
+    mgr.save(3, t)
+    mgr.wait()
+    restored, extra = mgr.restore(t)
+    assert extra["step"] == 3
+
+
+def test_train_restart_resumes_exactly(tmp_path):
+    """Kill-and-restart produces the same params as an uninterrupted run."""
+    from repro.launch.train import train
+    r_full = train("llama3.2-3b", smoke=True, steps=6, batch=2, seq=16,
+                   ckpt_dir=None, log_every=100)
+    # interrupted: 3 steps -> checkpoint -> new process resumes to 6
+    d = tmp_path / "ck"
+    train("llama3.2-3b", smoke=True, steps=3, batch=2, seq=16,
+          ckpt_dir=str(d), ckpt_every=100, log_every=100)
+    r_resumed = train("llama3.2-3b", smoke=True, steps=6, batch=2, seq=16,
+                      ckpt_dir=str(d), ckpt_every=100, log_every=100)
+    assert abs(r_full["final_loss"] - r_resumed["final_loss"]) < 2e-3, \
+        (r_full["final_loss"], r_resumed["final_loss"])
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+def test_adamw_matches_reference_math():
+    opt = adamw(lr=0.1, b1=0.9, b2=0.99, eps=1e-8, weight_decay=0.0,
+                clip_norm=0.0)
+    p = {"w": jnp.array([1.0, -2.0])}
+    g = {"w": jnp.array([0.5, 0.25])}
+    st = opt.init(p)
+    newp, st = opt.update(g, st, p, jnp.array(0))
+    # step 1: m=0.1g v=0.01g^2; mhat=g, vhat=g^2 -> update ~ lr*sign-ish
+    expect = 1.0 - 0.1 * (0.5 / (np.sqrt(0.25) + 1e-8))
+    np.testing.assert_allclose(float(newp["w"][0]), expect, rtol=1e-5)
+
+
+def test_adamw_descends_quadratic():
+    opt = adamw(lr=0.05)
+    w = jnp.array([3.0, -4.0])
+    st = opt.init(w)
+    for i in range(200):
+        g = 2 * w
+        w, st = opt.update(g, st, w, jnp.array(i))
+    assert float(jnp.abs(w).max()) < 0.05
+
+
+def test_adafactor_descends_and_factored_state_small():
+    # Adafactor's RMS-clipped updates behave sign-SGD-like: it converges to
+    # an lr-scale ball around the optimum, so test with a small lr.
+    opt = adafactor(lr=0.02)
+    w = jax.random.normal(KEY, (16, 8))
+    st = opt.init(w)
+    assert st["stats"]["vr"].shape == (16,)
+    assert st["stats"]["vc"].shape == (8,)
+    start = float(jnp.abs(w).max())
+    for i in range(300):
+        g = 2 * w
+        w, st = opt.update(g, st, w, jnp.array(i))
+    assert float(jnp.abs(w).max()) < 0.15 < start
+
+
+def test_adafactor_state_is_sublinear():
+    from repro.models.params import param_bytes
+    opt = adafactor()
+    p = {"big": jnp.zeros((1024, 1024))}
+    st = opt.init(p)
+    state_elems = sum(np.prod(x.shape) for x in jax.tree.leaves(st))
+    assert state_elems < 1024 * 1024 / 100  # O(n+m), not O(nm)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline / straggler
+# ---------------------------------------------------------------------------
+
+def test_pipeline_deterministic_and_seekable():
+    from repro import configs
+    from repro.data import TokenPipeline
+    cfg = configs.smoke_of(configs.get("llama3.2-3b"))
+    p1 = TokenPipeline(cfg, 4, 32, seed=3)
+    p2 = TokenPipeline(cfg, 4, 32, seed=3)
+    b17a = p1.batch_at(17)
+    b17b = p2.batch_at(17)  # no need to replay 0..16
+    np.testing.assert_array_equal(np.asarray(b17a["tokens"]),
+                                  np.asarray(b17b["tokens"]))
+    b18 = p1.batch_at(18)
+    assert not np.array_equal(np.asarray(b17a["tokens"]),
+                              np.asarray(b18["tokens"]))
+    # labels are next-token shifted
+    np.testing.assert_array_equal(np.asarray(b17a["tokens"][:, 1:]),
+                                  np.asarray(b17a["labels"][:, :-1]))
+
+
+def test_straggler_monitor_flags_slow_host():
+    mon = StragglerMonitor(window=10, threshold=1.5, patience=2)
+    for step in range(8):
+        for host in range(4):
+            mon.record(host, 1.0 if host != 2 else 3.0)
+        flags = mon.check()
+    assert 2 in flags and flags[2] == "persistent"
+    assert all(h == 2 for h in flags)

@@ -1,0 +1,133 @@
+"""Per-kernel allclose sweeps: Pallas (interpret=True) vs pure-jnp oracle,
+across shapes / ranks / dtypes / block sizes, plus CP-ALS integration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import random_sparse, build_csf_tiled, init_factors, cp_als, mttkrp
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def make_case(dims, nnz, rank, *, skew=0.0, block=128, row_tile=64, dtype=jnp.float32):
+    kt, kf = jax.random.split(KEY)
+    t = random_sparse(dims, nnz, kt, skew=skew)
+    factors = tuple(f.astype(dtype) for f in init_factors(t.dims, rank, kf))
+    csfs = [build_csf_tiled(t, m, block=block, row_tile=row_tile)
+            for m in range(t.order)]
+    return t, csfs, factors
+
+
+# ---------------------------------------------------------------------------
+# MTTKRP kernel sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dims,nnz", [
+    ((50, 40, 30), 600),       # small
+    ((200, 13, 77), 2000),     # ragged dims
+    ((64, 64, 64), 4000),      # dense-ish
+    ((500, 11, 9), 900),       # long sparse mode (many empty row tiles)
+])
+@pytest.mark.parametrize("mode", [0, 1, 2])
+def test_mttkrp_kernel_shapes(dims, nnz, mode):
+    t, csfs, factors = make_case(dims, nnz, rank=8)
+    got = ops.mttkrp(csfs[mode], factors)
+    want = ref.mttkrp_ref(csfs[mode], factors)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want[:, :8]),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("rank", [3, 8, 35, 64, 128, 150])
+def test_mttkrp_kernel_rank_padding(rank):
+    """R=35 is the paper's rank; sweep across / beyond the 128-lane boundary."""
+    t, csfs, factors = make_case((40, 30, 20), 800, rank=rank)
+    got = ops.mttkrp(csfs[0], factors)
+    want = ref.mttkrp_ref(csfs[0], factors)[:, :rank]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("block,row_tile", [(64, 32), (128, 64), (256, 128), (512, 128)])
+def test_mttkrp_kernel_blockings(block, row_tile):
+    t, csfs, factors = make_case((100, 50, 25), 3000, rank=16,
+                                 block=block, row_tile=row_tile)
+    got = ops.mttkrp(csfs[0], factors)
+    want = ref.mttkrp_ref(csfs[0], factors)[:, :16]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mttkrp_kernel_dtypes(dtype):
+    t, csfs, factors = make_case((40, 30, 20), 700, rank=8, dtype=dtype)
+    got = ops.mttkrp(csfs[0], factors)
+    want = ref.mttkrp_ref(csfs[0], factors)[:, :8]
+    tol = 5e-2 if dtype == jnp.bfloat16 else 2e-4
+    np.testing.assert_allclose(np.asarray(got, dtype=np.float32),
+                               np.asarray(want, dtype=np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_mttkrp_kernel_skewed_collisions():
+    """YELP-like skew: many collisions inside a block — the one-hot matmul
+    must resolve them exactly (this is the mutex-pool analogue test)."""
+    t, csfs, factors = make_case((30, 20, 10), 4000, rank=8, skew=2.0)
+    for mode in range(3):
+        got = ops.mttkrp(csfs[mode], factors)
+        want = ref.mttkrp_ref(csfs[mode], factors)[:, :8]
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=5e-4, atol=5e-4)
+
+
+def test_mttkrp_kernel_order4():
+    t, csfs, factors = make_case((20, 15, 12, 10), 900, rank=8)
+    got = ops.mttkrp(csfs[2], factors)
+    want = ref.mttkrp_ref(csfs[2], factors)[:, :8]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_mttkrp_kernel_vs_segment_impl():
+    """Cross-check the kernel against the independent segment implementation
+    (different layout, different padding scheme)."""
+    from repro.core import build_csf
+    t, csfs, factors = make_case((60, 45, 30), 2500, rank=12)
+    got = ops.mttkrp(csfs[1], factors)
+    want = mttkrp(build_csf(t, 1, block=64), factors, 1, impl="segment")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# syrk kernel sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rows,rank", [(100, 8), (512, 35), (1000, 64),
+                                       (4096, 128), (333, 150)])
+def test_syrk_kernel_shapes(rows, rank):
+    a = jax.random.normal(KEY, (rows, rank), dtype=jnp.float32)
+    got = ops.syrk(a, blk=256)
+    want = ref.syrk_ref(a)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_syrk_kernel_dtypes(dtype):
+    a = (jax.random.normal(KEY, (300, 40)) * 0.1).astype(dtype)
+    got = ops.syrk(a)
+    want = ref.syrk_ref(a)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(got, dtype=np.float32),
+                               np.asarray(want, dtype=np.float32), rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: CP-ALS with the pallas MTTKRP matches the segment impl
+# ---------------------------------------------------------------------------
+
+def test_cpals_pallas_impl_matches_segment():
+    t = random_sparse((30, 25, 20), 1500, KEY)
+    d_seg = cp_als(t, rank=5, niters=5, impl="segment", key=KEY)
+    d_pal = cp_als(t, rank=5, niters=5, impl="pallas", key=KEY,
+                   block=128, row_tile=64)
+    np.testing.assert_allclose(float(d_pal.fit), float(d_seg.fit), atol=1e-4)
+    for a, b in zip(d_pal.factors, d_seg.factors):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-2, atol=1e-2)

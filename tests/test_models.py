@@ -1,0 +1,258 @@
+"""Model-substrate correctness: attention semantics (GQA / causal / local /
+rope), decode-vs-forward consistency per family, RWKV chunked == scan,
+RG-LRU associative scan == sequential loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+from repro.models import rwkv as RW
+from repro.models import rglru as RG
+from repro.models.config import ModelConfig, MoEConfig
+from repro.models.transformer import Model
+
+KEY = jax.random.PRNGKey(3)
+
+BASE = dict(num_layers=4, d_model=64, num_heads=4, num_kv_heads=2, head_dim=16,
+            d_ff=128, vocab=128, param_dtype="float32", compute_dtype="float32")
+
+
+def dense_cfg(**kw):
+    d = dict(BASE, name="t", family="dense")
+    d.update(kw)
+    return ModelConfig(**d)
+
+
+# ---------------------------------------------------------------------------
+# attention semantics
+# ---------------------------------------------------------------------------
+
+def test_gqa_equals_repeated_mha():
+    """GQA with kv=2 == MHA where each kv head is repeated q_per_kv times."""
+    cfg = dense_cfg()
+    p = {k: jax.random.normal(jax.random.fold_in(KEY, i), v.shape) * 0.1
+         for i, (k, v) in enumerate(
+             jax.tree.map(lambda s: s, L.attn_specs(cfg),
+                          is_leaf=lambda x: hasattr(x, "shape")).items())}
+    x = jax.random.normal(KEY, (2, 8, cfg.d_model)) * 0.5
+    out, _ = L.attention(p, cfg, x, mask_kind="causal")
+
+    # expand kv heads to full MHA
+    cfg_mha = dense_cfg(num_kv_heads=4)
+    g = cfg.num_heads // cfg.num_kv_heads
+    p_mha = dict(p)
+    p_mha["wk"] = jnp.repeat(p["wk"], g, axis=1)
+    p_mha["wv"] = jnp.repeat(p["wv"], g, axis=1)
+    out_mha, _ = L.attention(p_mha, cfg_mha, x, mask_kind="causal")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_mha),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_causal_mask_no_future_leak():
+    """Changing future tokens must not change past outputs."""
+    cfg = dense_cfg()
+    m = Model(cfg)
+    params = m.init(KEY)
+    tok = jax.random.randint(KEY, (1, 10), 0, cfg.vocab)
+    tok2 = tok.at[0, -1].set((tok[0, -1] + 1) % cfg.vocab)
+    lg1, _, _ = m.forward(params, {"tokens": tok}, mode="train")
+    lg2, _, _ = m.forward(params, {"tokens": tok2}, mode="train")
+    np.testing.assert_allclose(np.asarray(lg1[:, :-1]), np.asarray(lg2[:, :-1]),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_local_window_attention_ignores_distant_tokens():
+    cfg = dense_cfg(attn_kind="local", window=4)
+    p = jax.tree.map(lambda s: 0.1 * jax.random.normal(KEY, s.shape),
+                     L.attn_specs(cfg), is_leaf=lambda x: hasattr(x, "shape"))
+    x = jax.random.normal(KEY, (1, 12, cfg.d_model))
+    out, _ = L.attention(p, cfg, x, mask_kind="local")
+    # perturb a token > window away from the last position
+    x2 = x.at[0, 2].set(x[0, 2] + 5.0)
+    out2, _ = L.attention(p, cfg, x2, mask_kind="local")
+    np.testing.assert_allclose(np.asarray(out[0, -1]), np.asarray(out2[0, -1]),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_rope_relative_shift_invariance():
+    """RoPE scores depend only on relative positions."""
+    cfg = dense_cfg()
+    q = jax.random.normal(KEY, (1, 6, 4, 16))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 6, 2, 16))
+    pos = jnp.arange(6)[None, :]
+    q1, k1 = L.apply_rope(cfg, q, k, pos)
+    q2, k2 = L.apply_rope(cfg, q, k, pos + 37)
+    s1 = jnp.einsum("bshd,bthd->bst", q1[:, :, :2], k1)
+    s2 = jnp.einsum("bshd,bthd->bst", q2[:, :, :2], k2)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-3, atol=1e-4)
+
+
+def test_mrope_sections_use_their_position_stream():
+    cfg = dense_cfg(rope="mrope", mrope_sections=(3, 3, 2))
+    q = jax.random.normal(KEY, (1, 4, 2, 16))
+    k = jax.random.normal(KEY, (1, 4, 2, 16))
+    pos = jnp.broadcast_to(jnp.arange(4)[None, None], (3, 1, 4)).astype(jnp.int32)
+    q1, _ = L.apply_rope(cfg, q, k, pos)
+    # change only the w-stream: t/h sections of the rotation must not move
+    pos2 = pos.at[2].add(11)
+    q2, _ = L.apply_rope(cfg, q, k, pos2)
+    # first 3 (t) freq slots unchanged in both rotated halves
+    np.testing.assert_allclose(np.asarray(q1[..., :3]), np.asarray(q2[..., :3]),
+                               rtol=1e-4, atol=1e-5)
+    assert not np.allclose(np.asarray(q1), np.asarray(q2))
+
+
+# ---------------------------------------------------------------------------
+# decode == forward consistency (per family)
+# ---------------------------------------------------------------------------
+
+def _decode_consistency(cfg, *, src=False, mrope=False, atol=2e-2):
+    """prefill(S tokens) then decode S+1'th == forward over S+1 tokens."""
+    m = Model(cfg)
+    params = m.init(KEY)
+    B, S = 2, 12
+    tok = jax.random.randint(KEY, (B, S + 1), 0, cfg.vocab)
+    batch_full = {"tokens": tok}
+    batch_pre = {"tokens": tok[:, :S]}
+    if cfg.input_mode == "embeds":
+        emb = L.embed({"table": params["embed"]["table"]}, cfg, tok)
+        batch_full = {"embeds": emb}
+        batch_pre = {"embeds": emb[:, :S]}
+    if mrope:
+        pos = jnp.broadcast_to(jnp.arange(S + 1)[None, None],
+                               (3, B, S + 1)).astype(jnp.int32)
+        batch_full["positions"] = pos
+        batch_pre["positions"] = pos[:, :, :S]
+    if src:
+        se = jax.random.normal(KEY, (B, 8, cfg.d_model), dtype=jnp.float32)
+        batch_full["src_embeds"] = se
+        batch_pre["src_embeds"] = se
+
+    lg_full, _, _ = m.forward(params, batch_full, mode="train")
+    want = lg_full[:, -1]
+
+    cache = m.init_cache(B, S + 4, src_len=8 if src else 0)
+    _, cache = m.prefill(params, batch_pre, cache)
+    kw = {}
+    if mrope:
+        kw["positions"] = jnp.full((3, B, 1), S, dtype=jnp.int32)
+    got, _ = m.decode_step(params, tok[:, S:S + 1], cache,
+                           jnp.array(S, dtype=jnp.int32), **kw)
+    np.testing.assert_allclose(np.asarray(got[:, 0]), np.asarray(want),
+                               rtol=1e-2, atol=atol)
+
+
+def test_decode_consistency_dense():
+    _decode_consistency(dense_cfg())
+
+
+def test_decode_consistency_moe():
+    cfg = ModelConfig(name="m", family="moe", pattern=("moe",),
+                      num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+                      head_dim=16, d_ff=128, vocab=128,
+                      moe=MoEConfig(num_experts=4, top_k=2, d_ff=32,
+                                    capacity_factor=4.0),
+                      param_dtype="float32", compute_dtype="float32")
+    _decode_consistency(cfg)
+
+
+def test_decode_consistency_rwkv():
+    cfg = ModelConfig(name="r", family="ssm", pattern=("rwkv",), rope="none",
+                      num_layers=3, d_model=64, num_heads=4, num_kv_heads=4,
+                      head_dim=16, d_ff=128, vocab=128, rwkv_head_dim=16,
+                      param_dtype="float32", compute_dtype="float32")
+    _decode_consistency(cfg)
+
+
+def test_decode_consistency_hybrid_local():
+    cfg = ModelConfig(name="h", family="hybrid", pattern=("rec", "rec", "attn"),
+                      attn_kind="local", window=6,
+                      num_layers=3, d_model=64, num_heads=4, num_kv_heads=1,
+                      head_dim=16, d_ff=128, vocab=128, rglru_width=64,
+                      param_dtype="float32", compute_dtype="float32")
+    _decode_consistency(cfg)
+
+
+def test_decode_consistency_encdec():
+    cfg = ModelConfig(name="e", family="audio", encdec=True, enc_layers=2,
+                      **BASE)
+    _decode_consistency(cfg, src=True)
+
+
+def test_decode_consistency_mrope_embeds():
+    cfg = dense_cfg(rope="mrope", mrope_sections=(3, 3, 2),
+                    input_mode="embeds", family="vlm")
+    _decode_consistency(cfg, mrope=True)
+
+
+# ---------------------------------------------------------------------------
+# recurrent kernels
+# ---------------------------------------------------------------------------
+
+def test_rwkv_chunked_matches_scan():
+    b, s, h, n = 2, 64, 3, 8
+    ks = jax.random.split(KEY, 5)
+    r, k, v = (jax.random.normal(ks[i], (b, s, h, n)) * 0.5 for i in range(3))
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (b, s, h, n)) * 0.5))
+    u = jax.random.normal(ks[4], (h, n)) * 0.5
+    o1, s1 = RW.wkv_scan(r, k, v, w, u)
+    o2, s2 = RW.wkv_chunked(r, k, v, w, u, chunk=16)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-3, atol=1e-4)
+
+
+def test_rwkv_chunked_with_carried_state():
+    b, s, h, n = 1, 32, 2, 8
+    ks = jax.random.split(KEY, 6)
+    r, k, v = (jax.random.normal(ks[i], (b, s, h, n)) * 0.5 for i in range(3))
+    w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (b, s, h, n))))
+    u = jax.random.normal(ks[4], (h, n)) * 0.5
+    st0 = jax.random.normal(ks[5], (b, h, n, n)).astype(jnp.float32)
+    o1, s1 = RW.wkv_scan(r, k, v, w, u, st0)
+    o2, s2 = RW.wkv_chunked(r, k, v, w, u, st0, chunk=8)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-3, atol=1e-4)
+
+
+def test_rglru_assoc_scan_matches_loop():
+    b, s, w = 2, 16, 8
+    a = jax.nn.sigmoid(jax.random.normal(KEY, (b, s, w)))
+    bb = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, w))
+    h0 = jax.random.normal(jax.random.fold_in(KEY, 2), (b, w))
+    got = RG._rglru_scan(a, bb.copy(), h0)
+    # sequential reference
+    hs = []
+    h = h0
+    for t in range(s):
+        h = a[:, t] * h + bb[:, t]
+        hs.append(h)
+    want = jnp.stack(hs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4,
+                               atol=1e-5)
+
+
+def test_moe_capacity_drops_are_bounded():
+    """With cf=1.0 and skewed routing some tokens drop; metric must report it."""
+    cfg = ModelConfig(name="m", family="moe", pattern=("moe",),
+                      num_layers=1, d_model=32, num_heads=2, num_kv_heads=2,
+                      head_dim=16, d_ff=64, vocab=64,
+                      moe=MoEConfig(num_experts=4, top_k=1, d_ff=32,
+                                    capacity_factor=1.0),
+                      param_dtype="float32", compute_dtype="float32")
+    from repro.models.moe import moe_ffn, moe_specs
+    from repro.models.params import init_params
+    p = init_params(moe_specs(cfg), KEY, jnp.float32)
+    x = jax.random.normal(KEY, (4, 16, 32))
+    out, mets = moe_ffn(p, cfg, x)
+    assert out.shape == x.shape
+    assert 0.0 <= float(mets["moe_drop_frac"]) <= 0.9
+
+
+def test_param_count_sane_dense():
+    cfg = dense_cfg()
+    m = Model(cfg)
+    params = m.init(KEY)
+    n_actual = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    n_est = cfg.param_count()
+    assert abs(n_actual - n_est) / n_est < 0.25, (n_actual, n_est)

@@ -1,0 +1,125 @@
+"""Property-based tests (hypothesis) for the system's core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (SparseTensor, build_csf, dedupe, gram,
+                        init_factors, mttkrp, normalize, random_sparse)
+
+SET = dict(max_examples=12, deadline=None)
+
+
+@st.composite
+def sparse_tensors(draw, max_dim=24, max_nnz=120):
+    dims = tuple(draw(st.integers(2, max_dim)) for _ in range(3))
+    nnz = draw(st.integers(4, max_nnz))
+    rng = np.random.default_rng(draw(st.integers(0, 2**31 - 1)))
+    inds = np.stack([rng.integers(0, d, nnz) for d in dims], 1).astype(np.int32)
+    vals = rng.uniform(0.1, 1.0, nnz).astype(np.float32)
+    t = SparseTensor(inds=jnp.asarray(inds), vals=jnp.asarray(vals),
+                     dims=dims, nnz=nnz)
+    return dedupe(t)
+
+
+@settings(**SET)
+@given(sparse_tensors(), st.integers(0, 2), st.integers(2, 6))
+def test_mttkrp_linearity_in_values(t, mode, rank):
+    """MTTKRP is linear in the tensor values."""
+    factors = init_factors(t.dims, rank, jax.random.PRNGKey(0))
+    t2 = SparseTensor(inds=t.inds, vals=2.5 * t.vals, dims=t.dims, nnz=t.nnz)
+    m1 = mttkrp(t, factors, mode, impl="gather_scatter")
+    m2 = mttkrp(t2, factors, mode, impl="gather_scatter")
+    np.testing.assert_allclose(np.asarray(m2), 2.5 * np.asarray(m1),
+                               rtol=2e-4, atol=1e-4)
+
+
+@settings(**SET)
+@given(sparse_tensors(), st.integers(0, 2), st.integers(0, 2**31 - 1))
+def test_mttkrp_nonzero_order_invariance(t, mode, seed):
+    """Permuting the non-zero list never changes the MTTKRP."""
+    factors = init_factors(t.dims, 4, jax.random.PRNGKey(1))
+    perm = np.random.default_rng(seed).permutation(t.nnz)
+    tp = SparseTensor(inds=t.inds[perm], vals=t.vals[perm], dims=t.dims,
+                      nnz=t.nnz)
+    a = mttkrp(t, factors, mode, impl="gather_scatter")
+    b = mttkrp(tp, factors, mode, impl="gather_scatter")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4,
+                               atol=1e-4)
+
+
+@settings(**SET)
+@given(sparse_tensors(), st.integers(0, 2))
+def test_segment_equals_scatter(t, mode):
+    """The no-lock (sorted segment) and atomic (scatter) paths agree."""
+    factors = init_factors(t.dims, 5, jax.random.PRNGKey(2))
+    a = mttkrp(t, factors, mode, impl="gather_scatter")
+    b = mttkrp(build_csf(t, mode, block=32), factors, mode, impl="segment")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4,
+                               atol=1e-4)
+
+
+@settings(**SET)
+@given(sparse_tensors(), st.integers(0, 2))
+def test_csf_build_preserves_multiset(t, mode):
+    """Sorting/padding never loses or invents non-zeros."""
+    csf = build_csf(t, mode, block=32)
+    order = [mode] + [m for m in range(3) if m != mode]
+    orig = sorted((tuple(int(t.inds[n, m]) for m in order), float(t.vals[n]))
+                  for n in range(t.nnz))
+    built = []
+    for n in range(csf.padded_nnz):
+        v = float(csf.vals[n])
+        if v != 0.0:
+            built.append(((int(csf.row_ids[n]),) +
+                          tuple(int(csf.other_ids[n, i]) for i in range(2)), v))
+    assert sorted(built) == orig
+
+
+@settings(**SET)
+@given(st.integers(3, 30), st.integers(1, 8), st.integers(0, 2**31 - 1))
+def test_gram_psd(rows, rank, seed):
+    a = jax.random.normal(jax.random.PRNGKey(seed), (rows, rank))
+    g = np.asarray(gram(a))
+    np.testing.assert_allclose(g, g.T, rtol=1e-4, atol=1e-5)
+    w = np.linalg.eigvalsh(g)
+    assert w.min() > -1e-3 * max(1.0, w.max())
+
+
+@settings(**SET)
+@given(st.integers(2, 20), st.integers(1, 6),
+       st.sampled_from(["max", "2"]), st.integers(0, 2**31 - 1))
+def test_normalize_invariant(rows, rank, kind, seed):
+    """normalize() factors out lambda exactly; norms match their definition."""
+    a = jax.random.uniform(jax.random.PRNGKey(seed), (rows, rank)) + 0.05
+    an, lam = normalize(a, kind=kind)
+    np.testing.assert_allclose(np.asarray(an * lam[None]), np.asarray(a),
+                               rtol=1e-5, atol=1e-6)
+    if kind == "2":
+        np.testing.assert_allclose(np.asarray(lam),
+                                   np.linalg.norm(np.asarray(a), axis=0),
+                                   rtol=1e-5)
+
+
+@settings(**SET)
+@given(sparse_tensors())
+def test_dedupe_idempotent_and_norm_preserving(t):
+    t2 = dedupe(t)
+    assert t2.nnz == t.nnz  # already deduped by the strategy
+    d1 = np.asarray(t.to_dense())
+    d2 = np.asarray(t2.to_dense())
+    np.testing.assert_allclose(d1, d2, rtol=1e-6)
+
+
+@settings(**SET)
+@given(sparse_tensors(), st.integers(2, 5))
+def test_pallas_mttkrp_property(t, rank):
+    """Kernel == oracle on arbitrary tensors (hypothesis-driven shapes)."""
+    from repro.core import build_csf_tiled
+    from repro.kernels import ops, ref
+    factors = init_factors(t.dims, rank, jax.random.PRNGKey(3))
+    csf = build_csf_tiled(t, 0, block=32, row_tile=16)
+    got = ops.mttkrp(csf, factors)
+    want = ref.mttkrp_ref(csf, factors)[:, :rank]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-4, atol=5e-4)
