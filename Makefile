@@ -1,0 +1,28 @@
+# Tier-1 verify, benchmarks and lint in one invocation each.
+# All targets run from the repo root with PYTHONPATH=src.
+
+PY        ?= python
+PYTHONPATH := src
+
+.PHONY: test bench bench-quick lint quickstart
+
+test:
+	PYTHONPATH=$(PYTHONPATH) $(PY) -m pytest -x -q
+
+bench:
+	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.run
+
+bench-quick:
+	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.run --quick
+
+bench-compress:
+	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.bench_compress
+
+# no third-party linter is baked into the image; byte-compile every tree
+# (syntax + tabs/indentation errors) and import the package graph.
+lint:
+	$(PY) -m compileall -q src tests benchmarks examples
+	PYTHONPATH=$(PYTHONPATH) $(PY) -c "import repro.core, repro.dist, repro.kernels, repro.launch.mesh, repro.launch.steps, repro.models, repro.optim, repro.checkpoint, repro.data, repro.utils.roofline, repro.configs"
+
+quickstart:
+	PYTHONPATH=$(PYTHONPATH) $(PY) examples/quickstart.py

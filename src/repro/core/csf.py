@@ -14,6 +14,7 @@ output-row index gives
 
 ``build_csf`` is the analogue of the paper's "Sort" pre-processing stage
 (Table III) and is what the sort-optimization benchmark (paper Fig. 1) times.
+Layout rationale in full: ``docs/architecture.md`` ("The CSF-flat layout").
 """
 from __future__ import annotations
 

@@ -15,16 +15,26 @@ distributed algorithm [Smith & Karypis, IPDPS'16] — on the TPU mesh:
 
 Multi-pod: the 'pod' axis joins 'data' as the mode-0 row axis, so the same
 spec expresses reduce within the pod + all-reduce across pods over DCN.
+
+Axis resolution and the psum/reduce-scatter phrasing live in
+``repro.dist.collectives`` (shared with the LM path's ``launch/mesh.py``);
+this module only contains what is CP-ALS specific: the host-side non-zero
+partitioner and the shard_map iteration body.  See ``docs/architecture.md``.
 """
 from __future__ import annotations
 
 import functools
+import time
 from typing import Sequence
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.dist.collectives import (cpals_axes, gather_rows, pgram,
+                                    pnormalize_columns, scatter_rows,
+                                    shard_map)
 
 from .coo import SparseTensor
 from .gram import (column_norms, gram, hadamard_grams, kruskal_fit,
@@ -107,36 +117,29 @@ def make_dist_iteration(mesh: Mesh, dims_p, rank: int, *, norm_kind: str = "2",
     the WHOLE mesh, replaces the mode-2 psum with a psum_scatter (half the
     wire), solves only local rows, and all-gathers C once per iteration.
     """
-    axes = mesh.axis_names
-    row_ax = tuple(a for a in axes if a != "model")  # ('data',) or ('pod','data')
-    col_ax = "model"
-    all_ax = row_ax + (col_ax,)
-    n_row = int(np.prod([mesh.shape[a] for a in row_ax]))
-    n_col = mesh.shape[col_ax]
-    n_all = n_row * n_col
+    ax = cpals_axes(mesh)
+    row_ax, col_ax, all_ax = ax.row, ax.col, ax.all_axes
     i_p, j_p, k_dim = dims_p
-    bi, bj = i_p // n_row, j_p // n_col
+    bi, bj = i_p // ax.n_row, j_p // ax.n_col
     if shard_c:
-        assert k_dim % n_all == 0, (k_dim, n_all)
+        assert k_dim % ax.n_all == 0, (k_dim, ax.n_all)
 
     in_specs = (
-        P(row_ax, col_ax),       # inds (n_row, n_col, L, 3)
-        P(row_ax, col_ax),       # vals (n_row, n_col, L)
-        P(row_ax),               # A (i_p, R) row-sharded
-        P(col_ax),               # B (j_p, R) row-sharded over model
-        P(all_ax) if shard_c else P(),   # C rows
+        ax.grid_spec(),          # inds (n_row, n_col, L, 3)
+        ax.grid_spec(),          # vals (n_row, n_col, L)
+        ax.row_spec(),           # A (i_p, R) row-sharded
+        ax.col_spec(),           # B (j_p, R) row-sharded over model
+        ax.all_spec() if shard_c else P(),   # C rows
         P(),                     # norm_x_sq scalar
     )
-    out_specs = (P(row_ax), P(col_ax), P(all_ax) if shard_c else P(), P(), P())
+    out_specs = (ax.row_spec(), ax.col_spec(),
+                 ax.all_spec() if shard_c else P(), P(), P())
 
     def body(inds, vals, a_blk, b_blk, c_in, norm_x_sq):
         if shard_c:
-            # rebuild the full C for the mode-0/1 gathers (10s of MB).
-            # P(('data','model')) lays blocks out data-major (block id =
-            # r*n_col + c), so gather model first, then data — the exact
-            # inverse of the scatter order below.
-            c_full = jax.lax.all_gather(c_in, col_ax, axis=0, tiled=True)
-            c_full = jax.lax.all_gather(c_full, row_ax, axis=0, tiled=True)
+            # rebuild the full C for the mode-0/1 gathers (10s of MB):
+            # the exact inverse of the reduce-scatter order below.
+            c_full = gather_rows(c_in, (row_ax, col_ax))
         else:
             c_full = c_in
         inds = inds[0, 0]
@@ -150,23 +153,13 @@ def make_dist_iteration(mesh: Mesh, dims_p, rank: int, *, norm_kind: str = "2",
         linds = jnp.stack([li, lj, lk], axis=1)
 
         def grams_all(a, b, c):
-            ga = jax.lax.psum(a.T @ a, row_ax)
-            gb = jax.lax.psum(b.T @ b, col_ax)
+            ga = pgram(a, row_ax)
+            gb = pgram(b, col_ax)
             if shard_c:
-                gc = jax.lax.psum(c_in.T @ c_in, all_ax)
+                gc = pgram(c_in, all_ax)
             else:
                 gc = c.T @ c
             return ga, gb, gc
-
-        def col_normalize(mat, *, axis_names):
-            if norm_kind == "max":
-                lam = jax.lax.pmax(jnp.max(jnp.abs(mat), axis=0), axis_names)
-                lam = jnp.maximum(lam, 1.0)
-            else:
-                lam = jnp.sqrt(jax.lax.psum(jnp.sum(mat * mat, axis=0),
-                                            axis_names))
-            safe = jnp.where(lam == 0.0, 1.0, lam)
-            return mat / safe[None, :], lam
 
         ga, gb, gc = grams_all(a_blk, b_blk, c_full)
 
@@ -175,36 +168,26 @@ def make_dist_iteration(mesh: Mesh, dims_p, rank: int, *, norm_kind: str = "2",
         m0 = _local_mttkrp(linds, vals, 0, a_blk, b_blk, c_full, bi)
         m0 = jax.lax.psum(m0, col_ax)
         a_new = solve_cholesky(m0, v0)
-        a_new, lam = col_normalize(a_new, axis_names=row_ax)
-        ga = jax.lax.psum(a_new.T @ a_new, row_ax)
+        a_new, lam = pnormalize_columns(a_new, row_ax, kind=norm_kind)
+        ga = pgram(a_new, row_ax)
 
         # ---- mode 1: partials summed over the row axes ----
         v1 = ga * gc
         m1 = _local_mttkrp(linds, vals, 1, a_new, b_blk, c_full, bj)
         m1 = jax.lax.psum(m1, row_ax)
         b_new = solve_cholesky(m1, v1)
-        b_new, lam = col_normalize(b_new, axis_names=col_ax)
-        gb = jax.lax.psum(b_new.T @ b_new, col_ax)
+        b_new, lam = pnormalize_columns(b_new, col_ax, kind=norm_kind)
+        gb = pgram(b_new, col_ax)
 
         # ---- mode 2 ----
         v2 = ga * gb
         m2 = _local_mttkrp(linds, vals, 2, a_new, b_new, c_full, k_dim)
         if shard_c:
             # optimized: half-wire reduce+scatter, local dense solve
-            m2_blk = jax.lax.psum_scatter(m2, row_ax, scatter_dimension=0,
-                                          tiled=True)
-            m2_blk = jax.lax.psum_scatter(m2_blk, col_ax, scatter_dimension=0,
-                                          tiled=True)
+            m2_blk = scatter_rows(m2, (row_ax, col_ax))
             c_new = solve_cholesky(m2_blk, v2)
-            if norm_kind == "max":
-                lam = jax.lax.pmax(jnp.max(jnp.abs(c_new), axis=0), all_ax)
-                lam = jnp.maximum(lam, 1.0)
-            else:
-                lam = jnp.sqrt(jax.lax.psum(jnp.sum(c_new * c_new, axis=0),
-                                            all_ax))
-            safe = jnp.where(lam == 0.0, 1.0, lam)
-            c_new = c_new / safe[None, :]
-            gc = jax.lax.psum(c_new.T @ c_new, all_ax)
+            c_new, lam = pnormalize_columns(c_new, all_ax, kind=norm_kind)
+            gc = pgram(c_new, all_ax)
             # blockwise fit: <X,Xhat> from local rows, summed over the mesh
             from .gram import kruskal_norm_sq
             inner = jax.lax.psum(
@@ -224,8 +207,8 @@ def make_dist_iteration(mesh: Mesh, dims_p, rank: int, *, norm_kind: str = "2",
         fit = kruskal_fit(norm_x_sq, lam, (ga, gb, gc), m2, c_new)
         return a_new, b_new, c_new, lam, fit
 
-    smapped = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                            out_specs=out_specs)
+    smapped = shard_map(body, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs)
     return jax.jit(smapped)
 
 
@@ -236,13 +219,19 @@ def make_dist_iteration(mesh: Mesh, dims_p, rank: int, *, norm_kind: str = "2",
 def dist_cp_als(t: SparseTensor, rank: int, mesh: Mesh, *, niters: int = 10,
                 key: Array | None = None, verbose: bool = False,
                 shard_c: bool = False, init: tuple | None = None,
-                mode_order: str = "natural"):
+                mode_order: str = "natural", monitor=None):
     """Distributed CP-ALS; numerically equivalent to the shared-memory path
     (modulo f32 reduction order).  Returns (factors, lmbda, fit).
 
     ``mode_order='auto'``: partition the two LONGEST modes over the grid and
     exchange the SHORTEST (the mode-2 scatter/gather wire is proportional to
-    its length) — EXPERIMENTS.md §Perf, cpals hillclimb."""
+    its length) — EXPERIMENTS.md §Perf, cpals hillclimb.
+
+    ``monitor``: an optional :class:`repro.dist.StragglerMonitor`; each ALS
+    iteration's wall time is recorded for every participating host (times
+    are exchanged across processes when there are several — see
+    ``repro.dist.straggler.record_step_times``), so imbalance across the
+    non-zero partition becomes visible at the driver."""
     from .cpals import init_factors
 
     if mode_order == "auto":
@@ -253,17 +242,15 @@ def dist_cp_als(t: SparseTensor, rank: int, mesh: Mesh, *, niters: int = 10,
             init = tuple(init[m] for m in perm)
         factors, lam, fit = dist_cp_als(
             tp, rank, mesh, niters=niters, key=key, verbose=verbose,
-            shard_c=shard_c, init=init, mode_order="natural")
+            shard_c=shard_c, init=init, mode_order="natural",
+            monitor=monitor)
         inv = [0] * 3
         for pos, m in enumerate(perm):
             inv[m] = pos
         return tuple(factors[inv[m]] for m in range(3)), lam, fit
 
-    axes = mesh.axis_names
-    row_ax = tuple(a for a in axes if a != "model")
-    n_row = int(np.prod([mesh.shape[a] for a in row_ax]))
-    n_col = mesh.shape["model"]
-    n_all = n_row * n_col
+    ax = cpals_axes(mesh)
+    n_row, n_col, n_all = ax.n_row, ax.n_col, ax.n_all
 
     inds, vals, dims_p = partition_tensor(t, n_row, n_col)
     i_p, j_p, k_dim = dims_p
@@ -294,7 +281,15 @@ def dist_cp_als(t: SparseTensor, rank: int, mesh: Mesh, *, niters: int = 10,
     fit = jnp.array(0.0)
     for i in range(niters):
         fn = it_first if i == 0 else it_rest
+        t0 = time.time()
         a, b, c, lam, fit = fn(inds, vals, a, b, c, norm_x_sq)
+        if monitor is not None:
+            from repro.dist.straggler import record_step_times
+            jax.block_until_ready(fit)
+            record_step_times(monitor, time.time() - t0)
+            flags = monitor.check()
+            if flags and verbose:
+                print(f"  dist its={i + 1} stragglers: {flags}")
         if verbose:
             print(f"  dist its={i + 1} fit={float(fit):.6f}")
     factors = (a[: t.dims[0]], b[: t.dims[1]], c[: t.dims[2]])
@@ -311,13 +306,11 @@ def build_dist_cpals_lowered(workload: str, mesh: Mesh, *,
     dims, nnz, rank = CPALS_WORKLOADS[workload]
     if mode_order == "auto":
         dims = tuple(sorted(dims, reverse=True))
-    axes = mesh.axis_names
-    row_ax = tuple(a for a in axes if a != "model")
-    n_row = int(np.prod([mesh.shape[a] for a in row_ax]))
-    n_col = mesh.shape["model"]
+    ax = cpals_axes(mesh)
+    row_ax = ax.row
+    n_row, n_col, n_all = ax.n_row, ax.n_col, ax.n_all
     i_p = -(-dims[0] // n_row) * n_row
     j_p = -(-dims[1] // n_col) * n_col
-    n_all = n_row * n_col
     cap = int(np.ceil(nnz / (n_row * n_col) * 1.2))
     k_p = -(-dims[2] // n_all) * n_all if shard_c else dims[2]
     dims_p = (i_p, j_p, k_p)
@@ -325,16 +318,18 @@ def build_dist_cpals_lowered(workload: str, mesh: Mesh, *,
     from jax.sharding import NamedSharding
     sds = jax.ShapeDtypeStruct
     sh = lambda spec: NamedSharding(mesh, spec)
-    inds = sds((n_row, n_col, cap, 3), jnp.int32, sharding=sh(P(row_ax, "model")))
-    vals = sds((n_row, n_col, cap), jnp.float32, sharding=sh(P(row_ax, "model")))
-    a = sds((i_p, rank), jnp.float32, sharding=sh(P(row_ax)))
-    b = sds((j_p, rank), jnp.float32, sharding=sh(P("model")))
-    c_spec = P(row_ax + ("model",)) if shard_c else P()
+    inds = sds((n_row, n_col, cap, 3), jnp.int32, sharding=sh(ax.grid_spec()))
+    vals = sds((n_row, n_col, cap), jnp.float32, sharding=sh(ax.grid_spec()))
+    a = sds((i_p, rank), jnp.float32, sharding=sh(ax.row_spec()))
+    b = sds((j_p, rank), jnp.float32, sharding=sh(ax.col_spec()))
+    c_spec = ax.all_spec() if shard_c else P()
     c = sds((k_p, rank), jnp.float32, sharding=sh(c_spec))
     nx = sds((), jnp.float32)
 
+    from repro.utils.roofline import CompatLowered
+
     fn = make_dist_iteration(mesh, dims_p, rank, shard_c=shard_c)
-    lowered = fn.lower(inds, vals, a, b, c, nx)
+    lowered = CompatLowered(fn.lower(inds, vals, a, b, c, nx))
     # MTTKRP flops: ~5 R nnz per mode (2R gather-products, R scatter-add,
     # 2R for the Khatri-Rao partial) x 3 modes, plus small dense terms.
     info = {"workload": workload, "dims": dims, "nnz": nnz, "rank": rank,

@@ -27,6 +27,9 @@ impl                what it reproduces
 All impls support arbitrary tensor order (the paper restricts to 3rd order;
 SPLATT itself and our port support order >= 3 — this is one of the paper's
 "future work" items implemented here).
+
+This table is kept in sync with ``docs/architecture.md`` ("The MTTKRP
+implementation registry").
 """
 from __future__ import annotations
 

@@ -36,6 +36,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax < 0.5 spells CompilerParams "TPUCompilerParams"
+_compiler_params = getattr(pltpu, "CompilerParams",
+                           getattr(pltpu, "TPUCompilerParams", None))
+
 Array = jax.Array
 
 LANE = 128  # TPU lane width: rank is padded to a multiple of this
@@ -102,7 +106,7 @@ def mttkrp_pallas_call(
         functools.partial(_kernel, row_tile=row_tile, block=block),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((num_row_tiles * row_tile, rp), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compiler_params(
             dimension_semantics=("arbitrary",),  # sequential: accumulation
         ),
         interpret=interpret,

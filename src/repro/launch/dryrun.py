@@ -222,7 +222,7 @@ def _probe_costs(arch: str, shape_name: str, *, multi_pod: bool,
         lowered, _ = build_cell(arch, shape_name, multi_pod=multi_pod,
                                 overrides=ov)
         comp = lowered.compile()
-        cost = comp.cost_analysis()
+        cost = RL.normalize_cost(comp.cost_analysis())
         colls = RL.parse_collectives(comp.as_text())
         results.append({
             "flops": float(cost.get("flops", 0.0)),

@@ -4,6 +4,11 @@
 this module never touches jax device state.  The dry-run target is
   single-pod:  (data=16, model=16)          = 256 chips (TPU v5e pod)
   multi-pod:   (pod=2, data=16, model=16)   = 512 chips
+
+Axis *names* and pod-aware batch rules come from
+``repro.dist.collectives`` — the same vocabulary the distributed CP-ALS
+path resolves its row/column grid from — so the LM and tensor-
+decomposition paths cannot drift apart.  See ``docs/architecture.md``.
 """
 from __future__ import annotations
 
@@ -12,14 +17,15 @@ from typing import Optional
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.dist.collectives import (DATA_AXIS, MODEL_AXIS, POD_AXIS,
+                                    axis_product, batch_axes, make_mesh)
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    axes = ((POD_AXIS, DATA_AXIS, MODEL_AXIS) if multi_pod
+            else (DATA_AXIS, MODEL_AXIS))
+    return make_mesh(shape, axes)
 
 
 # ---------------------------------------------------------------------------
@@ -60,9 +66,10 @@ def rules_for(cfg=None, *, multi_pod: bool = False,
     if cfg is not None and getattr(cfg, "fsdp", False):
         rules["embed"] = "data"
     if multi_pod:
-        # batch dims extend over the pod axis (pure DP across pods)
-        rules["cache_batch"] = ("pod", "data")
-        rules["act_batch"] = ("pod", "data")
+        # batch dims extend over the pod axis (pure DP across pods) —
+        # the same pod-aware rule the CP-ALS row partition uses
+        rules["cache_batch"] = batch_axes(multi_pod=True)
+        rules["act_batch"] = batch_axes(multi_pod=True)
     if overrides:
         rules.update(overrides)
     return rules
@@ -83,9 +90,7 @@ def spec_for(axes: tuple, shape: tuple, mesh: Mesh, rules: dict, *,
             parts.append(None)
             continue
         mesh_axes = rule if isinstance(rule, tuple) else (rule,)
-        size = 1
-        for ma in mesh_axes:
-            size *= mesh.shape[ma]
+        size = axis_product(mesh, mesh_axes)
         ok = (dim % size == 0) or (allow_uneven and dim >= size)
         if ok and not (set(mesh_axes) & used):
             parts.append(rule)
@@ -105,11 +110,9 @@ def sharding_fn(mesh: Mesh, rules: dict):
 
 def batch_sharding(mesh: Mesh, rules: dict, kind: str, shape: tuple) -> NamedSharding:
     """Sharding for an input-batch leaf: batch dim -> act_batch rule."""
-    brule = rules.get("act_batch", "data")
+    brule = rules.get("act_batch", DATA_AXIS)
     baxes = brule if isinstance(brule, tuple) else (brule,)
-    size = 1
-    for ma in baxes:
-        size *= mesh.shape[ma]
+    size = axis_product(mesh, baxes)
     if kind == "positions":       # (3, B, S)
         b = shape[1]
         spec = P(None, brule, None) if b % size == 0 else P()

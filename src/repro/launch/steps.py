@@ -1,6 +1,9 @@
 """Step builders: train_step / prefill_step / serve_step for any arch config.
 
 These are the functions the dry-run lowers and the real launcher executes.
+Gradient compression (the ``grad_compress`` flag) is implemented by
+``repro.dist.compress`` — int8 quantization with error-feedback residuals;
+see ``docs/architecture.md`` ("The distributed layer").
 """
 from __future__ import annotations
 
@@ -36,8 +39,12 @@ def make_train_step(model: Model, optimizer: Optimizer,
     """(params, opt_state, batch, step) -> (params, opt_state, metrics).
 
     ``grad_compress`` applies int8 quantization with error feedback to the
-    gradients before they cross the data axis (the all-reduce), carrying the
-    quantization residual in opt_state['ef'].
+    gradients, carrying the quantization residual in opt_state['ef'].  In
+    this jit path XLA inserts the data-parallel all-reduce implicitly, so
+    the flag exercises the full quantize->dequantize fidelity loop (what
+    convergence depends on) but the reduce itself still moves f32; wiring
+    the int8 payload through the collective needs an explicit shard_map'd
+    psum of (q, scales) and is the planned follow-up (docs/architecture.md).
 
     ``micro_batches`` > 1 accumulates gradients over batch splits (same
     optimizer math, ~1/m peak activation memory — what lets the big train

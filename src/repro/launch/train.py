@@ -24,6 +24,7 @@ from repro.checkpoint import CheckpointManager
 from repro.data import TokenPipeline
 from repro.dist import StragglerMonitor
 from repro.dist.compress import init_error_feedback
+from repro.dist.straggler import record_step_times
 from repro.launch.steps import make_train_step
 from repro.models import Model
 from repro.optim import OPTIMIZERS
@@ -68,11 +69,16 @@ def train(arch: str, *, smoke: bool, steps: int, batch: int, seq: int,
             params, opt_state, batch_data, jnp.array(step, dtype=jnp.int32))
         loss = float(metrics["loss"])
         losses.append(loss)
-        mon.record(0, time.time() - t0)
+        record_step_times(mon, time.time() - t0)
+        straggler_flags = mon.check()
         if step % log_every == 0 or step == steps - 1:
             tok_s = batch * seq / max(time.time() - t0, 1e-9)
             print(f"[train] step {step:5d}  loss {loss:.4f}  "
                   f"{tok_s:,.0f} tok/s")
+            if straggler_flags:
+                print("[train] stragglers: " + ", ".join(
+                    f"host{h}:{kind}"
+                    for h, kind in sorted(straggler_flags.items())))
         if mgr is not None and (step + 1) % ckpt_every == 0:
             mgr.save(step + 1, (params, opt_state))
     if mgr is not None:

@@ -14,6 +14,8 @@ import jax
 import numpy as np
 import jax.numpy as jnp
 
+from repro.dist.collectives import shard_map
+
 from .config import ModelConfig
 from .params import ParamSpec
 from .layers import shard_act
@@ -246,7 +248,7 @@ def moe_ffn_ep(p: dict, cfg: ModelConfig, x: Array, mesh) -> tuple[Array, dict]:
         drop = jax.lax.pmean(jax.lax.pmean(drop, "model"), dp_axes)
         return out.reshape(bl, sl, d), drop
 
-    smapped = jax.shard_map(
+    smapped = shard_map(
         body, mesh=mesh,
         in_specs=(P(dp_axes, "model", None), P(), wspec_g, wspec_g, wspec_d),
         out_specs=(P(dp_axes, "model", None), P()),

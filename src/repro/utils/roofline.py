@@ -148,8 +148,44 @@ def analyze_values(*, flops: float, bytes_accessed: float, wire_bytes: float,
     )
 
 
-def analyze(cost: dict, hlo: str, *, n_chips: int, model_flops: float) -> Roofline:
+def normalize_cost(cost) -> dict:
+    """XLA cost analysis as a plain dict.  Newer jax returns the dict
+    directly; 0.4.x returns a one-element list of dicts."""
+    if isinstance(cost, (list, tuple)):
+        return dict(cost[0]) if cost else {}
+    return dict(cost)
+
+
+class CompatCompiled:
+    """Wraps a jax Compiled so ``cost_analysis()`` is a dict on every
+    jax version; everything else delegates."""
+
+    def __init__(self, compiled):
+        self._compiled = compiled
+
+    def cost_analysis(self) -> dict:
+        return normalize_cost(self._compiled.cost_analysis())
+
+    def __getattr__(self, name):
+        return getattr(self._compiled, name)
+
+
+class CompatLowered:
+    """Wraps a jax Lowered so ``compile()`` yields a CompatCompiled."""
+
+    def __init__(self, lowered):
+        self._lowered = lowered
+
+    def compile(self, *args, **kwargs) -> CompatCompiled:
+        return CompatCompiled(self._lowered.compile(*args, **kwargs))
+
+    def __getattr__(self, name):
+        return getattr(self._lowered, name)
+
+
+def analyze(cost, hlo: str, *, n_chips: int, model_flops: float) -> Roofline:
     colls = parse_collectives(hlo)
+    cost = normalize_cost(cost)
     return analyze_values(
         flops=float(cost.get("flops", 0.0)),
         bytes_accessed=float(cost.get("bytes accessed", 0.0)),

@@ -2,6 +2,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this environment")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (SparseTensor, build_csf, dedupe, gram,
