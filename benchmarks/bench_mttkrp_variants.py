@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.core import (build_csf, build_csf_tiled, init_factors, mttkrp,
                         paper_dataset)
+from repro.plan import plan_mode
 
 from .common import emit, timeit
 
@@ -46,6 +47,17 @@ def run(scale: float = 0.004, rank: int = 35, *, with_rowloop: bool = False):
             rows.append({"bench": "mttkrp_variants", "dataset": name,
                          "impl": impl, "nnz": t.nnz, "rank": rank,
                          "ms": round(sec * 1e3, 3)})
+        # the planner's choice for the benchmarked mode (repro.plan),
+        # calibrated: costs are measured on the actual tensor
+        p0 = plan_mode(t, mode, rank=rank, backend=jax.default_backend(),
+                       block=512, row_tile=128, calibrate=True)
+        ws0 = (build_csf(t, mode, block=p0.block, row_tile=p0.row_tile)
+               if p0.layout == "csf" else t)
+        fn = jax.jit(partial(mttkrp, impl=p0.impl, mode=mode))
+        sec = timeit(fn, ws0, factors)
+        rows.append({"bench": "mttkrp_variants", "dataset": name,
+                     "impl": f"auto({p0.impl})", "nnz": t.nnz, "rank": rank,
+                     "ms": round(sec * 1e3, 3)})
         if with_rowloop:
             # Chapel-initial analogue: O(nnz) sequential — tiny slice only
             from repro.core.coo import SparseTensor

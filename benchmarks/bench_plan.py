@@ -1,0 +1,75 @@
+"""Planner ablation: `auto` vs fixed-impl CP-ALS iteration time.
+
+The acceptance bar for the per-mode planner (repro.plan): on the paper's two
+regime-defining tensor shapes — NELL-2-like (uniform, collision-light) and
+YELP-like (skewed, contention-heavy) — the `auto` policy's fused ALS
+iteration must land within a few percent of the best fixed impl, because it
+*is* the per-mode argmin of the registered cost models.
+
+Timed quantity: one fused jitted ALS iteration (MTTKRP + grams + solve +
+normalize + fit) over a prebuilt workspace; the sort/build stage is excluded
+(it is timed by bench_sort_build.py and amortized over all iterations).
+
+`python -m benchmarks.run` aggregates this into BENCH_plan.json.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import build_workspace, init_factors, gram, paper_dataset
+from repro.core.cpals import _iteration
+from repro.plan import plan_decomposition
+
+from .common import timeit
+
+POLICIES = ("gather_scatter", "segment", "auto")
+DATASETS = ("yelp", "nell-2")
+
+
+def run(scale: float = 0.004, rank: int = 16) -> list[dict]:
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for name in DATASETS:
+        t = paper_dataset(name, key, scale=scale)
+        factors0 = init_factors(t.dims, rank, key)
+        grams0 = tuple(gram(a) for a in factors0)
+        norm_x_sq = jnp.sum(t.vals.astype(jnp.float32) ** 2)
+        for policy in POLICIES:
+            plan = plan_decomposition(t, policy, rank=rank,
+                                      calibrate=policy == "auto")
+            ws = build_workspace(t, plan)
+            fn = partial(_iteration, ws, norm_kind="2", impls=plan.impls)
+            sec = timeit(lambda f, g: fn(f, g, norm_x_sq), factors0, grams0)
+            rows.append({
+                "bench": "plan", "dataset": name, "policy": policy,
+                "plan": plan.summary(), "nnz": t.nnz, "rank": rank,
+                "iteration_ms": round(sec * 1e3, 3),
+            })
+    return rows
+
+
+def summarize(rows: list[dict]) -> dict:
+    """BENCH_plan.json payload: per-dataset policy times + auto/best ratio."""
+    out: dict = {"bench": "plan", "datasets": {}}
+    for name in {r["dataset"] for r in rows}:
+        sub = {r["policy"]: r["iteration_ms"] for r in rows
+               if r["dataset"] == name}
+        fixed = {k: v for k, v in sub.items() if k != "auto"}
+        best_fixed = min(fixed.values())
+        out["datasets"][name] = {
+            "iteration_ms": sub,
+            "plan": next(r["plan"] for r in rows
+                         if r["dataset"] == name and r["policy"] == "auto"),
+            "best_fixed_ms": best_fixed,
+            "auto_over_best_fixed": round(sub["auto"] / best_fixed, 4),
+        }
+    return out
+
+
+if __name__ == "__main__":
+    from .common import emit
+
+    emit(run())

@@ -6,10 +6,12 @@
 from __future__ import annotations
 
 import argparse
+import json
 import time
+from pathlib import Path
 
 from . import (bench_conflict, bench_cpals_routines, bench_mttkrp_variants,
-               bench_scaling, bench_sort_build)
+               bench_plan, bench_scaling, bench_sort_build)
 from .common import emit
 
 
@@ -17,6 +19,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--skip-scaling", action="store_true")
+    ap.add_argument("--plan-json", type=Path,
+                    default=Path(__file__).resolve().parents[1] / "BENCH_plan.json")
     args = ap.parse_args()
     q = args.quick
 
@@ -24,6 +28,13 @@ def main() -> None:
     print("# bench_mttkrp_variants (paper Figs 2/3/9/10)")
     emit(bench_mttkrp_variants.run(scale=0.002 if q else 0.004,
                                    with_rowloop=not q))
+    print()
+    print("# bench_plan (per-mode planner: auto vs fixed impl)")
+    plan_rows = bench_plan.run(scale=0.002 if q else 0.004)
+    emit(plan_rows)
+    args.plan_json.write_text(json.dumps(bench_plan.summarize(plan_rows),
+                                         indent=1))
+    print(f"# wrote {args.plan_json}")
     print()
     print("# bench_sort_build (paper Fig 1)")
     emit(bench_sort_build.run(scale=0.0008 if q else 0.0015))

@@ -22,7 +22,7 @@ key = jax.random.PRNGKey(7)
 for name in ("yelp", "nell-2"):
     t = paper_dataset(name, key, scale=args.scale)
     print(f"\n=== {name}: dims={t.dims} nnz={t.nnz:,} (scale {args.scale}) ===")
-    for impl in ("gather_scatter", "segment"):
+    for impl in ("gather_scatter", "segment", "auto"):
         cp_als(t, rank=args.rank, niters=2, impl=impl, key=key, timers={})
         timers: dict = {}
         dec = cp_als(t, rank=args.rank, niters=args.iters, impl=impl,

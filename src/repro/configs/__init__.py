@@ -109,7 +109,7 @@ def src_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
 
 
 __all__ = ["ARCH_NAMES", "get", "smoke_of", "batch_shapes", "src_len",
-           "SHAPES", "cell_is_skipped", "CPALS_WORKLOADS"]
+           "SHAPES", "cell_is_skipped", "CPALS_WORKLOADS", "CPALS_DATASET"]
 
 # ---------------------------------------------------------------------------
 # the paper's own workloads (Table I), as decomposition configs
@@ -120,4 +120,12 @@ CPALS_WORKLOADS = {
     "cpals-yelp": ((41_000, 11_000, 75_000), 8_000_000, 35),
     "cpals-nell2": ((12_000, 9_000, 29_000), 77_000_000, 35),
     "cpals-netflix": ((480_000, 18_000, 2_000), 100_000_000, 35),
+}
+
+# workload id -> repro.core.PAPER_DATASETS key (the synthetic replica the
+# launchers/planner use to materialize a scaled tensor for that workload)
+CPALS_DATASET = {
+    "cpals-yelp": "yelp",
+    "cpals-nell2": "nell-2",
+    "cpals-netflix": "netflix",
 }

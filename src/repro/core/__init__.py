@@ -1,16 +1,23 @@
 """repro.core — the paper's contribution: sparse CP-ALS (SPLATT) in JAX."""
 from .coo import SparseTensor, random_sparse, from_factors, paper_dataset, read_tns, write_tns, PAPER_DATASETS, dedupe
-from .csf import CSFFlat, CSFTiled, build_csf, build_csf_tiled, build_all_modes
-from .mttkrp import mttkrp, mttkrp_dense, mttkrp_gather_scatter, mttkrp_segment, mttkrp_rowloop, IMPLS
+from .csf import CSF, CSFFlat, CSFTiled, build_csf, build_csf_tiled, build_all_modes, build_csf_loop_reference
+from .mttkrp import (mttkrp, mttkrp_dense, mttkrp_gather_scatter,
+                     mttkrp_segment, mttkrp_rowloop, mttkrp_pallas, IMPLS,
+                     ImplSpec, REGISTRY, register_impl, get_impl,
+                     available_impls)
 from .gram import gram, hadamard_grams, solve_cholesky, normalize, kruskal_fit, kruskal_norm_sq, kruskal_inner
-from .cpals import cp_als, CPDecomp, CPALSState, build_workspace, init_factors
+from .cpals import (cp_als, CPDecomp, CPALSState, build_workspace,
+                    resolve_plan, init_factors)
 
 __all__ = [
     "SparseTensor", "random_sparse", "from_factors", "paper_dataset", "read_tns",
-    "write_tns", "PAPER_DATASETS", "CSFFlat", "CSFTiled", "build_csf",
-    "build_csf_tiled", "build_all_modes", "mttkrp", "mttkrp_dense",
-    "mttkrp_gather_scatter", "mttkrp_segment", "mttkrp_rowloop", "IMPLS",
+    "write_tns", "PAPER_DATASETS", "dedupe", "CSF", "CSFFlat", "CSFTiled",
+    "build_csf", "build_csf_tiled", "build_all_modes",
+    "build_csf_loop_reference", "mttkrp", "mttkrp_dense",
+    "mttkrp_gather_scatter", "mttkrp_segment", "mttkrp_rowloop",
+    "mttkrp_pallas", "IMPLS", "ImplSpec", "REGISTRY", "register_impl",
+    "get_impl", "available_impls",
     "gram", "hadamard_grams", "solve_cholesky", "normalize", "kruskal_fit",
     "kruskal_norm_sq", "kruskal_inner", "cp_als", "CPDecomp", "CPALSState",
-    "build_workspace", "init_factors",
+    "build_workspace", "resolve_plan", "init_factors",
 ]

@@ -37,7 +37,7 @@ import jax.numpy as jnp
 from .gram import (gram, hadamard_grams, solve_cholesky, normalize,
                    kruskal_fit)
 from .coo import SparseTensor
-from .csf import CSFFlat, build_csf
+from .csf import CSF, build_csf
 from .mttkrp import mttkrp
 
 Array = jax.Array
@@ -112,25 +112,44 @@ class CPALSState:
 # ---------------------------------------------------------------------------
 
 
+def resolve_plan(t: SparseTensor, impl: str, plan, *, rank: int = 16,
+                 block: int = 512, row_tile: int = 128):
+    """Resolve the (impl=, plan=) pair every driver accepts into a DecompPlan.
+
+    ``plan`` wins when given; otherwise the planner runs with ``impl`` as the
+    policy ("auto" selects per mode from stats; a concrete name pins it with
+    the stats pass skipped — the legacy zero-overhead path)."""
+    if plan is not None:
+        return plan
+    from repro.plan import plan_decomposition
+
+    return plan_decomposition(t, impl, rank=rank, block=block,
+                              row_tile=row_tile,
+                              with_stats=impl == "auto")
+
+
 def build_workspace(
     t: SparseTensor,
-    impl: str,
+    plan,
     *,
     block: int = 512,
     row_tile: int = 128,
 ):
-    """One prebuilt structure per mode (SPLATT ALLMODE policy)."""
-    if impl == "segment":
-        return [build_csf(t, m, block=block) for m in range(t.order)]
-    if impl == "pallas":
-        from .csf import build_csf_tiled
+    """One prebuilt structure per mode (SPLATT ALLMODE policy).
 
-        return [
-            build_csf_tiled(t, m, block=block, row_tile=row_tile)
-            for m in range(t.order)
-        ]
-    # gather_scatter / rowloop / dense operate on raw COO
-    return [t for _ in range(t.order)]
+    ``plan`` is a :class:`repro.plan.DecompPlan` (each mode gets the layout
+    its planned impl consumes: the unified CSF workspace or raw COO) or, for
+    backwards compatibility, an impl-name string."""
+    if isinstance(plan, str):
+        from repro.plan import plan_decomposition
+
+        plan = plan_decomposition(t, plan, block=block, row_tile=row_tile,
+                                  with_stats=plan == "auto")
+    return [
+        build_csf(t, p.mode, block=p.block, row_tile=p.row_tile)
+        if p.layout == "csf" else t
+        for p in plan.modes
+    ]
 
 
 # ---------------------------------------------------------------------------
@@ -157,8 +176,10 @@ def _mode_update(ws_n, factors, grams, mode: int, impl: str, norm_kind: str):
     return a_new, g_new, lam, m_mat
 
 
-@partial(jax.jit, static_argnames=("impl", "norm_kind", "with_fit"))
-def _iteration(ws, factors, grams, norm_x_sq, *, impl, norm_kind, with_fit=True):
+@partial(jax.jit, static_argnames=("impls", "norm_kind", "with_fit"))
+def _iteration(ws, factors, grams, norm_x_sq, *, impls, norm_kind,
+               with_fit=True):
+    """One fused ALS iteration; ``impls`` is the plan's per-mode impl tuple."""
     factors = list(factors)
     grams = list(grams)
     lam = None
@@ -166,7 +187,7 @@ def _iteration(ws, factors, grams, norm_x_sq, *, impl, norm_kind, with_fit=True)
     order = len(factors)
     for n in range(order):
         factors[n], grams[n], lam, m_last = _mode_update(
-            ws[n], factors, grams, n, impl, norm_kind
+            ws[n], factors, grams, n, impls[n], norm_kind
         )
     if with_fit:
         fit = kruskal_fit(norm_x_sq, lam, grams, m_last, factors[-1])
@@ -206,13 +227,13 @@ _jit_normalize = jax.jit(normalize, static_argnames=("kind",))
 _jit_fit = jax.jit(kruskal_fit)
 
 
-def _iteration_timed(ws, factors, grams, norm_x_sq, timers, *, impl, norm_kind):
+def _iteration_timed(ws, factors, grams, norm_x_sq, timers, *, impls, norm_kind):
     factors = list(factors)
     grams = list(grams)
     lam = m_last = None
     for n in range(len(factors)):
         v = _timed(timers, "ata", _jit_hadamard, tuple(grams), mode=n)
-        m_mat = _timed(timers, "mttkrp", _jit_mttkrp, ws[n], tuple(factors), mode=n, impl=impl)
+        m_mat = _timed(timers, "mttkrp", _jit_mttkrp, ws[n], tuple(factors), mode=n, impl=impls[n])
         a_new = _timed(timers, "inverse", _jit_solve, m_mat, v)
         a_new, lam = _timed(timers, "norm", _jit_normalize, a_new, kind=norm_kind)
         grams[n] = _timed(timers, "ata", _jit_gram, a_new)
@@ -236,6 +257,7 @@ def cp_als(
     niters: int = 20,
     tol: float = 0.0,
     impl: str = "segment",
+    plan=None,
     key: Array | None = None,
     block: int = 512,
     row_tile: int = 128,
@@ -250,15 +272,28 @@ def cp_als(
     tol == 0 reproduces the paper's fixed-20-iteration experiments; tol > 0
     stops when |fit - fit_prev| < tol (the "fit ceases to improve" branch).
     ``state``/``checkpoint_cb`` give restartable long decompositions.
+
+    Execution strategy: ``impl`` is a planner policy — ``"auto"`` selects an
+    MTTKRP implementation *per mode* from measured tensor statistics (the
+    paper's §V-D regime rules), any registered name pins all modes.  Pass a
+    prebuilt ``plan`` (:class:`repro.plan.DecompPlan`) to skip planning.
     """
     if key is None:
         key = jax.random.PRNGKey(0)
 
-    # --- Sort / CSF build (paper's pre-processing stage) ---
+    # --- Plan + Sort / CSF build (paper's pre-processing stage: the stats
+    # pass and the workspace sort are both host-side, per-mode O(nnz) work,
+    # timed together under the paper's "Sort" key) ---
+    def _plan_and_build():
+        p = resolve_plan(t, impl, plan, rank=rank, block=block,
+                         row_tile=row_tile)
+        return p, build_workspace(t, p)
+
     if timers is not None:
-        ws = _timed(timers, "sort", build_workspace, t, impl, block=block, row_tile=row_tile)
+        plan, ws = _timed(timers, "sort", _plan_and_build)
     else:
-        ws = build_workspace(t, impl, block=block, row_tile=row_tile)
+        plan, ws = _plan_and_build()
+    impls = plan.impls
 
     norm_x_sq = jnp.sum(t.vals.astype(jnp.float32) ** 2)
 
@@ -279,11 +314,11 @@ def cp_als(
         norm_kind = first_norm if it == 0 else "2"
         if timers is not None:
             factors, grams, lmbda, fit = _iteration_timed(
-                ws, factors, grams, norm_x_sq, timers, impl=impl, norm_kind=norm_kind
+                ws, factors, grams, norm_x_sq, timers, impls=impls, norm_kind=norm_kind
             )
         else:
             factors, grams, lmbda, fit = _iteration(
-                ws, tuple(factors), grams, norm_x_sq, impl=impl, norm_kind=norm_kind
+                ws, tuple(factors), grams, norm_x_sq, impls=impls, norm_kind=norm_kind
             )
         if verbose:
             print(f"  its = {it + 1}  fit = {float(fit):.6f}  "

@@ -1,20 +1,34 @@
-"""CSF-flat: the TPU adaptation of SPLATT's compressed sparse fiber layout.
+"""CSF: the TPU adaptation of SPLATT's compressed sparse fiber layout.
 
 SPLATT stores one CSF tree per mode (``ALLMODE``) so that the MTTKRP for mode
 ``n`` walks fibers rooted at mode-``n`` slices: every thread owns a range of
-output rows and (on the no-lock path) never collides. The pointer tree itself
-does not map to a TPU, but the *schedule* does: sorting the non-zeros by the
-output-row index gives
+output rows and (on the no-lock path) never collides.  The pointer tree itself
+does not map to a TPU, but the *schedule* does — and this module keeps exactly
+one workspace type, :class:`CSF`, that every registered MTTKRP implementation
+consumes (`segment`, `pallas`, `gather_scatter`; see ``core/mttkrp.py``):
 
-  * contiguous output-row tiles per non-zero block (the Pallas kernel writes
-    one VMEM-resident row tile per grid step),
-  * SPLATT's "no-lock" property between blocks (a row never spans two tiles'
-    ownership — collisions exist only *inside* a block where the kernel
-    resolves them with a one-hot MXU matmul).
+  * non-zeros are **sorted by the output-row index** (then the remaining modes
+    for fiber locality), so each output row's contributions are contiguous —
+    SPLATT's "no-lock" property by construction;
+  * non-zeros are additionally **row-tile aligned**: entries are grouped by
+    output row-tile (``row // row_tile``) and each group is padded to a block
+    multiple, so every block of ``block`` non-zeros writes exactly one
+    ``row_tile x R`` output tile and the block -> tile map (``block_tile``) is
+    non-decreasing.  The Pallas kernel keeps the output tile VMEM-resident
+    across sequential grid steps and flushes it exactly once; collisions
+    *inside* a block are resolved by a one-hot MXU matmul;
+  * padding entries carry value 0 and point at their tile's last real row,
+    so every impl treats them as exact no-ops without masking AND the global
+    row sort survives padding (the segment impl keeps its
+    ``indices_are_sorted`` no-lock reduction).
+
+Historically the repo carried two incompatible layouts (``CSFFlat`` for the
+segment path, ``CSFTiled`` for Pallas); both names now alias :class:`CSF`.
 
 ``build_csf`` is the analogue of the paper's "Sort" pre-processing stage
 (Table III) and is what the sort-optimization benchmark (paper Fig. 1) times.
-Layout rationale in full: ``docs/architecture.md`` ("The CSF-flat layout").
+Layout rationale in full: ``docs/architecture.md`` ("The unified CSF
+workspace").
 """
 from __future__ import annotations
 
@@ -28,173 +42,35 @@ from .coo import SparseTensor
 
 Array = jax.Array
 
-# Default non-zero block: 8 sublanes x 128 lanes is the fp32 VMEM tile; 1024
-# nnz per block keeps the one-hot segment matrix (ROWS x BLOCK) MXU-friendly.
-DEFAULT_BLOCK = 1024
-# Output rows owned by one grid step of the Pallas kernel.
+# Default non-zero block: 512 nnz per block keeps the one-hot segment matrix
+# (ROW_TILE x BLOCK) MXU-friendly while bounding per-tile padding waste.
+DEFAULT_BLOCK = 512
+# Output rows owned by one grid step of the Pallas kernel (fp32 VMEM tile is
+# 8 sublanes x 128 lanes; 128 output rows is the natural MXU-aligned choice).
 DEFAULT_ROW_TILE = 128
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
-class CSFFlat:
-    """Per-mode sorted, block-padded sparse layout.
+class CSF:
+    """Per-mode sorted, row-tile-aligned, block-padded sparse workspace.
 
     mode:      the output mode this replica is sorted by (static).
-    row_ids:   (pnnz,) int32, non-decreasing; == dims[mode] for padding.
+    row_ids:   (pnnz,) int32 output-row per entry, globally non-decreasing;
+               padding entries point at their tile's last real row (value 0
+               makes them no-ops).
     other_ids: (pnnz, order-1) int32 indices of the remaining modes, in
                ascending mode order (static ``other_modes`` gives the map).
     vals:      (pnnz,) values, 0 for padding.
-    block_first_row / block_last_row: (pnnz/block,) int32 — first/last logical
-               row touched by each block (drives the kernel's row-tile map).
+    block_tile: (pnnz/block,) int32, non-decreasing block -> output-tile map
+               (consumed by the Pallas kernel via scalar prefetch).
     """
 
     mode: int
     row_ids: Array
     other_ids: Array
     vals: Array
-    block_first_row: Array
-    block_last_row: Array
-    dims: tuple[int, ...]
-    nnz: int
-    block: int
-
-    def tree_flatten(self):
-        children = (
-            self.row_ids,
-            self.other_ids,
-            self.vals,
-            self.block_first_row,
-            self.block_last_row,
-        )
-        aux = (self.mode, self.dims, self.nnz, self.block)
-        return children, aux
-
-    @classmethod
-    def tree_unflatten(cls, aux, children):
-        mode, dims, nnz, block = aux
-        row_ids, other_ids, vals, bfr, blr = children
-        return cls(
-            mode=mode,
-            row_ids=row_ids,
-            other_ids=other_ids,
-            vals=vals,
-            block_first_row=bfr,
-            block_last_row=blr,
-            dims=dims,
-            nnz=nnz,
-            block=block,
-        )
-
-    @property
-    def order(self) -> int:
-        return len(self.dims)
-
-    @property
-    def other_modes(self) -> tuple[int, ...]:
-        return tuple(m for m in range(self.order) if m != self.mode)
-
-    @property
-    def num_rows(self) -> int:
-        return self.dims[self.mode]
-
-    @property
-    def padded_nnz(self) -> int:
-        return int(self.vals.shape[0])
-
-    @property
-    def num_blocks(self) -> int:
-        return self.padded_nnz // self.block
-
-
-def build_csf(
-    t: SparseTensor, mode: int, *, block: int = DEFAULT_BLOCK
-) -> CSFFlat:
-    """Sort non-zeros by ``mode`` (then remaining modes) and block-pad.
-
-    Vectorized build: a single ``lexsort`` + flat gathers, host-side numpy
-    (pre-processing runs on the host, like SPLATT's sort).  This is the
-    optimized analogue of the paper's §V-C finding — the initial Chapel sort
-    was slow because of per-call array allocation and slice copies, fixed by
-    flat pointer-style operations; here the whole build is a handful of
-    vectorized array ops (the slow path lives in
-    benchmarks/bench_sort_build.py for contrast).
-    """
-    order = t.order
-    if not 0 <= mode < order:
-        raise ValueError(f"mode {mode} out of range for order-{order} tensor")
-    other = tuple(m for m in range(order) if m != mode)
-    inds = np.asarray(t.inds[: t.nnz])
-    in_vals = np.asarray(t.vals[: t.nnz])
-
-    # lexsort: primary key = mode index, then other modes for fiber locality.
-    keys = tuple(inds[:, m] for m in reversed(other)) + (inds[:, mode],)
-    perm = np.lexsort(keys)
-    row_ids = inds[perm, mode].astype(np.int32)
-    other_ids = inds[perm][:, list(other)].astype(np.int32)
-    vals = in_vals[perm]
-
-    # Block padding: padding rows get row == dims[mode] (a dummy row that the
-    # MTTKRP output slices off) and value 0.
-    n = int(vals.shape[0])
-    pnnz = ((n + block - 1) // block) * block
-    pad = pnnz - n
-    if pad:
-        row_ids = np.concatenate(
-            [row_ids, np.full((pad,), t.dims[mode], dtype=np.int32)])
-        other_ids = np.concatenate(
-            [other_ids, np.zeros((pad, order - 1), dtype=np.int32)])
-        vals = np.concatenate([vals, np.zeros((pad,), dtype=vals.dtype)])
-
-    blocks = row_ids.reshape(pnnz // block, block)
-    # padding rows sort to the end; clamp so block row ranges stay in-bounds.
-    clamped = np.minimum(blocks, t.dims[mode] - 1)
-    block_first_row = clamped[:, 0].astype(np.int32)
-    block_last_row = clamped[:, -1].astype(np.int32)
-
-    return CSFFlat(
-        mode=mode,
-        row_ids=jnp.asarray(row_ids),
-        other_ids=jnp.asarray(other_ids),
-        vals=jnp.asarray(vals),
-        block_first_row=jnp.asarray(block_first_row),
-        block_last_row=jnp.asarray(block_last_row),
-        dims=t.dims,
-        nnz=t.nnz,
-        block=block,
-    )
-
-
-def build_all_modes(
-    t: SparseTensor, *, block: int = DEFAULT_BLOCK
-) -> list[CSFFlat]:
-    """One sorted replica per mode — SPLATT's ALLMODE storage policy."""
-    return [build_csf(t, m, block=block) for m in range(t.order)]
-
-
-# ---------------------------------------------------------------------------
-# Tile-aligned layout for the Pallas kernel
-# ---------------------------------------------------------------------------
-#
-# The kernel wants the stronger invariant "every non-zero block writes exactly
-# one row_tile-row output tile".  We get it at build time: group non-zeros by
-# output row-tile (row // row_tile) and pad each group to a block multiple.
-# Empty row-tiles get one all-padding block so every output tile is visited
-# (Pallas output buffers are not zero-initialised).  ``block_tile`` is the
-# non-decreasing block -> output-tile map consumed via scalar prefetch.
-
-
-@jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass(frozen=True)
-class CSFTiled:
-    """Per-mode sorted, row-tile-aligned, block-padded sparse layout."""
-
-    mode: int
-    row_ids: Array        # (pnnz,) int32; padding rows point at their tile's
-                          # first row (value 0 makes them no-ops)
-    other_ids: Array      # (pnnz, order-1) int32
-    vals: Array           # (pnnz,) values, 0 for padding
-    block_tile: Array     # (pnnz/block,) int32, non-decreasing
+    block_tile: Array
     dims: tuple[int, ...]
     nnz: int
     block: int
@@ -209,7 +85,8 @@ class CSFTiled:
     def tree_unflatten(cls, aux, children):
         mode, dims, nnz, block, row_tile = aux
         row_ids, other_ids, vals, block_tile = children
-        return cls(mode, row_ids, other_ids, vals, block_tile, dims, nnz, block, row_tile)
+        return cls(mode, row_ids, other_ids, vals, block_tile, dims, nnz,
+                   block, row_tile)
 
     @property
     def order(self) -> int:
@@ -241,54 +118,62 @@ class CSFTiled:
         return 1.0 - self.nnz / max(1, self.padded_nnz)
 
 
-def build_csf_tiled(
-    t: SparseTensor,
-    mode: int,
-    *,
-    block: int = 512,
-    row_tile: int = 128,
-) -> CSFTiled:
-    """Numpy host-side build (pre-processing, like SPLATT's sort stage)."""
-    order = t.order
-    other = tuple(m for m in range(order) if m != mode)
-    inds = np.asarray(t.inds[: t.nnz])
-    vals = np.asarray(t.vals[: t.nnz])
+# Backwards-compatible aliases: the two historical layouts are now one type.
+CSFFlat = CSF
+CSFTiled = CSF
 
+
+def _lexsort_perm(inds: np.ndarray, mode: int, other: tuple[int, ...]):
+    """Sort permutation: primary key = mode index, then remaining modes for
+    fiber locality.  Shared by the fast build and (as the semantics contract)
+    the deliberately slow loop reference."""
     keys = tuple(inds[:, m] for m in reversed(other)) + (inds[:, mode],)
-    perm = np.lexsort(keys)
-    rows = inds[perm, mode].astype(np.int32)
-    oth = inds[perm][:, list(other)].astype(np.int32)
-    v = vals[perm]
+    return np.lexsort(keys)
 
+
+def _finalize(rows: np.ndarray, oth: np.ndarray, v: np.ndarray,
+              t: SparseTensor, mode: int, block: int, row_tile: int) -> CSF:
+    """Tile-align and block-pad pre-sorted entries into a :class:`CSF`.
+
+    Fully vectorized: per-tile counts -> blocks-per-tile -> one scatter of the
+    sorted entries into their padded positions.  Empty row-tiles get one
+    all-padding block so every output tile is visited (Pallas output buffers
+    are not zero-initialised).
+    """
+    order = t.order
+    n = int(v.shape[0])
     n_tiles = -(-t.dims[mode] // row_tile)
     tile_of = rows // row_tile
     counts = np.bincount(tile_of, minlength=n_tiles)
     # blocks per tile: at least 1 so every output tile is initialised
     blocks_per = np.maximum(1, -(-counts // block))
+    widths = blocks_per * block
+    offsets = np.concatenate([[0], np.cumsum(widths)])[:-1]
     starts = np.concatenate([[0], np.cumsum(counts)])[:-1]
+    pnnz = int(widths.sum())
 
-    pnnz = int(blocks_per.sum()) * block
-    out_rows = np.empty(pnnz, dtype=np.int32)
+    tile_ids = np.arange(n_tiles, dtype=np.int32)
+    # Padding rows point at their tile's LAST real row (first row for empty
+    # tiles): still inside the tile for the kernel's one-hot map, and —
+    # because a tile's last row precedes the next tile's first — it keeps
+    # ``row_ids`` globally non-decreasing, so the segment impl retains
+    # SPLATT's sorted no-lock reduction (indices_are_sorted).
+    pad_row = (tile_ids * row_tile).astype(np.int32)
+    if n:
+        nz = counts > 0
+        pad_row[nz] = rows[(starts + counts - 1)[nz]]
+    out_rows = np.repeat(pad_row, widths)
     out_oth = np.zeros((pnnz, order - 1), dtype=np.int32)
     out_vals = np.zeros(pnnz, dtype=v.dtype)
-    block_tile = np.empty(int(blocks_per.sum()), dtype=np.int32)
 
-    wpos = 0
-    bpos = 0
-    for tile in range(n_tiles):
-        c = int(counts[tile])
-        s = int(starts[tile])
-        width = int(blocks_per[tile]) * block
-        out_rows[wpos : wpos + width] = tile * row_tile  # padding default
-        if c:
-            out_rows[wpos : wpos + c] = rows[s : s + c]
-            out_oth[wpos : wpos + c] = oth[s : s + c]
-            out_vals[wpos : wpos + c] = v[s : s + c]
-        block_tile[bpos : bpos + int(blocks_per[tile])] = tile
-        wpos += width
-        bpos += int(blocks_per[tile])
+    if n:
+        pos = offsets[tile_of] + (np.arange(n) - starts[tile_of])
+        out_rows[pos] = rows
+        out_oth[pos] = oth
+        out_vals[pos] = v
+    block_tile = np.repeat(tile_ids, blocks_per)
 
-    return CSFTiled(
+    return CSF(
         mode=mode,
         row_ids=jnp.asarray(out_rows),
         other_ids=jnp.asarray(out_oth),
@@ -301,14 +186,71 @@ def build_csf_tiled(
     )
 
 
-def build_csf_loop_reference(t: SparseTensor, mode: int) -> CSFFlat:
-    """Deliberately naive numpy build (argsort per key, python loops) —
-    the 'Chapel-initial' analogue used by the sort benchmark (paper Fig. 1).
-    Semantically identical to build_csf for unpadded entries."""
-    inds = np.asarray(t.inds)
-    vals = np.asarray(t.vals)
+def build_csf(
+    t: SparseTensor,
+    mode: int,
+    *,
+    block: int = DEFAULT_BLOCK,
+    row_tile: int = DEFAULT_ROW_TILE,
+) -> CSF:
+    """Sort non-zeros by ``mode``, tile-align, and block-pad.
+
+    Vectorized build: a single ``lexsort`` + flat gathers + one scatter,
+    host-side numpy (pre-processing runs on the host, like SPLATT's sort).
+    This is the optimized analogue of the paper's §V-C finding — the initial
+    Chapel sort was slow because of per-call array allocation and slice
+    copies, fixed by flat pointer-style operations (the slow path lives in
+    ``build_csf_loop_reference`` / benchmarks/bench_sort_build.py for
+    contrast).
+    """
     order = t.order
-    other = [m for m in range(order) if m != mode]
+    if not 0 <= mode < order:
+        raise ValueError(f"mode {mode} out of range for order-{order} tensor")
+    other = tuple(m for m in range(order) if m != mode)
+    inds = np.asarray(t.inds[: t.nnz])
+    in_vals = np.asarray(t.vals[: t.nnz])
+
+    perm = _lexsort_perm(inds, mode, other)
+    rows = inds[perm, mode].astype(np.int32)
+    oth = inds[perm][:, list(other)].astype(np.int32)
+    vals = in_vals[perm]
+    return _finalize(rows, oth, vals, t, mode, block, row_tile)
+
+
+def build_csf_tiled(
+    t: SparseTensor,
+    mode: int,
+    *,
+    block: int = DEFAULT_BLOCK,
+    row_tile: int = DEFAULT_ROW_TILE,
+) -> CSF:
+    """Deprecated alias of :func:`build_csf` (the layouts are unified)."""
+    return build_csf(t, mode, block=block, row_tile=row_tile)
+
+
+def build_all_modes(
+    t: SparseTensor, *, block: int = DEFAULT_BLOCK,
+    row_tile: int = DEFAULT_ROW_TILE,
+) -> list[CSF]:
+    """One sorted replica per mode — SPLATT's ALLMODE storage policy."""
+    return [build_csf(t, m, block=block, row_tile=row_tile)
+            for m in range(t.order)]
+
+
+def build_csf_loop_reference(t: SparseTensor, mode: int) -> CSF:
+    """Deliberately naive build (argsort per key, python copy loops) — the
+    'Chapel-initial' analogue used by the sort benchmark (paper Fig. 1).
+
+    Supports any tensor order >= 2 (like :func:`build_csf`, whose semantics it
+    must match entry-for-entry); the slow part is the permutation computation,
+    the tile-align/pad plumbing is shared via ``_finalize``.
+    """
+    order = t.order
+    if not 0 <= mode < order:
+        raise ValueError(f"mode {mode} out of range for order-{order} tensor")
+    inds = np.asarray(t.inds[: t.nnz])
+    vals = np.asarray(t.vals[: t.nnz])
+    other = tuple(m for m in range(order) if m != mode)
     # repeated stable argsorts, copying whole arrays each time (slice-copy
     # behaviour the paper calls out).
     perm = np.arange(inds.shape[0])
@@ -320,10 +262,9 @@ def build_csf_loop_reference(t: SparseTensor, mode: int) -> CSFFlat:
         rows.append(int(inds[p, mode]))
         oth.append([int(inds[p, m]) for m in other])
         v.append(float(vals[p]))
-    # Assemble the same container the fast path produces (the loops above are
-    # the timed part; the final blocking/padding is shared plumbing).
-    permuted = SparseTensor(
-        inds=jnp.asarray(inds[perm]), vals=jnp.asarray(vals[perm]),
-        dims=t.dims, nnz=t.nnz,
-    )
-    return build_csf(permuted, mode)
+    rows = np.asarray(rows, dtype=np.int32)
+    oth = (np.asarray(oth, dtype=np.int32).reshape(len(rows), order - 1)
+           if rows.size else np.zeros((0, order - 1), dtype=np.int32))
+    v = np.asarray(v, dtype=vals.dtype)
+    # the loops above are the timed part; blocking/padding is shared plumbing.
+    return _finalize(rows, oth, v, t, mode, DEFAULT_BLOCK, DEFAULT_ROW_TILE)

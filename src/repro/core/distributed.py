@@ -23,6 +23,7 @@ partitioner and the shard_map iteration body.  See ``docs/architecture.md``.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import time
 from typing import Sequence
@@ -90,25 +91,44 @@ def partition_tensor(t: SparseTensor, n_row: int, n_col: int,
 # one distributed ALS iteration (shard_map body)
 # ---------------------------------------------------------------------------
 
-def _local_mttkrp(inds, vals, rows_local, fa, fb, fc, num_rows: int):
-    """Scatter-add MTTKRP over this device's non-zeros.
+def _local_mttkrp(inds, vals, rows_local, fa, fb, fc, num_rows: int,
+                  impl: str = "scatter"):
+    """Local MTTKRP over this device's non-zeros.
     rows_local: which column of inds indexes the OUTPUT rows (local ids);
-    fa/fb/fc are the gather sources for the three modes (local or global)."""
+    fa/fb/fc are the gather sources for the three modes (local or global).
+    ``impl``: "scatter" (XLA scatter-add — the mutex/atomic analogue) or
+    "segment" (segment-sum — the no-lock reduction the planner picks for
+    contention-heavy modes); both are exact, the planner chooses by regime."""
     prod = vals[:, None].astype(fa.dtype)
     sources = (fa, fb, fc)
     for m in range(3):
         if m == rows_local:
             continue
         prod = prod * sources[m][inds[:, m]]
+    if impl == "segment":
+        return jax.ops.segment_sum(prod, inds[:, rows_local],
+                                   num_segments=num_rows)
     out = jnp.zeros((num_rows, prod.shape[1]), dtype=prod.dtype)
     return out.at[inds[:, rows_local]].add(prod, mode="drop")
 
 
+def _local_impls_of(plan) -> tuple[str, str, str]:
+    """Map a DecompPlan's per-mode impls onto what the shard_map body can
+    express (sorted workspaces don't survive the per-device partitioning, so
+    'segment' means a local segment reduction, everything else scatter-add)."""
+    return tuple("segment" if p.impl == "segment" else "scatter"
+                 for p in plan.modes)
+
+
 def make_dist_iteration(mesh: Mesh, dims_p, rank: int, *, norm_kind: str = "2",
-                        shard_c: bool = False):
+                        shard_c: bool = False,
+                        local_impls: tuple[str, str, str] = ("scatter",) * 3):
     """Builds the jitted shard_map'd single-iteration function.
 
     Row axes: mode-0 over ('pod','data') [or ('data',)], mode-1 over 'model'.
+
+    ``local_impls``: the plan's per-mode local MTTKRP strategy (see
+    ``_local_mttkrp``).
 
     ``shard_c``: the optimized mode-2 layout (EXPERIMENTS.md §Perf).  The
     baseline replicates C and its dense solve/gram on every device (faithful
@@ -165,7 +185,8 @@ def make_dist_iteration(mesh: Mesh, dims_p, rank: int, *, norm_kind: str = "2",
 
         # ---- mode 0: partials summed over the 'model' axis ----
         v0 = gb * gc
-        m0 = _local_mttkrp(linds, vals, 0, a_blk, b_blk, c_full, bi)
+        m0 = _local_mttkrp(linds, vals, 0, a_blk, b_blk, c_full, bi,
+                           impl=local_impls[0])
         m0 = jax.lax.psum(m0, col_ax)
         a_new = solve_cholesky(m0, v0)
         a_new, lam = pnormalize_columns(a_new, row_ax, kind=norm_kind)
@@ -173,7 +194,8 @@ def make_dist_iteration(mesh: Mesh, dims_p, rank: int, *, norm_kind: str = "2",
 
         # ---- mode 1: partials summed over the row axes ----
         v1 = ga * gc
-        m1 = _local_mttkrp(linds, vals, 1, a_new, b_blk, c_full, bj)
+        m1 = _local_mttkrp(linds, vals, 1, a_new, b_blk, c_full, bj,
+                           impl=local_impls[1])
         m1 = jax.lax.psum(m1, row_ax)
         b_new = solve_cholesky(m1, v1)
         b_new, lam = pnormalize_columns(b_new, col_ax, kind=norm_kind)
@@ -181,7 +203,8 @@ def make_dist_iteration(mesh: Mesh, dims_p, rank: int, *, norm_kind: str = "2",
 
         # ---- mode 2 ----
         v2 = ga * gb
-        m2 = _local_mttkrp(linds, vals, 2, a_new, b_new, c_full, k_dim)
+        m2 = _local_mttkrp(linds, vals, 2, a_new, b_new, c_full, k_dim,
+                           impl=local_impls[2])
         if shard_c:
             # optimized: half-wire reduce+scatter, local dense solve
             m2_blk = scatter_rows(m2, (row_ax, col_ax))
@@ -219,13 +242,22 @@ def make_dist_iteration(mesh: Mesh, dims_p, rank: int, *, norm_kind: str = "2",
 def dist_cp_als(t: SparseTensor, rank: int, mesh: Mesh, *, niters: int = 10,
                 key: Array | None = None, verbose: bool = False,
                 shard_c: bool = False, init: tuple | None = None,
-                mode_order: str = "natural", monitor=None):
+                mode_order: str = "natural", monitor=None,
+                impl: str = "auto", plan=None):
     """Distributed CP-ALS; numerically equivalent to the shared-memory path
     (modulo f32 reduction order).  Returns (factors, lmbda, fit).
 
     ``mode_order='auto'``: partition the two LONGEST modes over the grid and
     exchange the SHORTEST (the mode-2 scatter/gather wire is proportional to
     its length) — EXPERIMENTS.md §Perf, cpals hillclimb.
+
+    ``impl``/``plan``: the same planner interface as :func:`cp_als` —
+    ``impl="auto"`` (default) measures per-mode statistics and picks each
+    mode's local MTTKRP strategy (segment reduction for contention-heavy
+    modes, scatter-add for collision-light ones); a concrete name pins all
+    modes; a prebuilt :class:`repro.plan.DecompPlan` skips planning.  The
+    candidate set is restricted to what the shard_map body can express
+    (``gather_scatter``/``segment``).
 
     ``monitor``: an optional :class:`repro.dist.StragglerMonitor`; each ALS
     iteration's wall time is recorded for every participating host (times
@@ -234,21 +266,42 @@ def dist_cp_als(t: SparseTensor, rank: int, mesh: Mesh, *, niters: int = 10,
     non-zero partition becomes visible at the driver."""
     from .cpals import init_factors
 
+    DIST_IMPLS = ("gather_scatter", "segment")
+    if plan is None:
+        if impl != "auto" and impl not in DIST_IMPLS:
+            raise ValueError(
+                f"dist_cp_als cannot execute impl {impl!r}: the shard_map "
+                f"body expresses only {DIST_IMPLS} as local reductions")
+        from repro.plan import plan_decomposition
+
+        plan = plan_decomposition(t, impl, rank=rank, allow=DIST_IMPLS,
+                                  with_stats=impl == "auto")
+    elif not set(plan.impls) <= set(DIST_IMPLS):
+        raise ValueError(
+            f"dist_cp_als cannot execute plan {plan.summary()!r}: the "
+            f"shard_map body expresses only {DIST_IMPLS} as local reductions")
+
     if mode_order == "auto":
-        perm = tuple(int(m) for m in np.argsort(t.dims)[::-1])
+        # longest modes over the grid, shortest on the wire (dims are always
+        # available from the tensor — no dependency on plan stats)
+        perm = tuple(sorted(range(3), key=lambda m: -t.dims[m]))
         tp = SparseTensor(inds=t.inds[:, list(perm)], vals=t.vals,
                           dims=tuple(t.dims[m] for m in perm), nnz=t.nnz)
         if init is not None:
             init = tuple(init[m] for m in perm)
+        pplan = dataclasses.replace(plan, modes=tuple(
+            dataclasses.replace(plan.modes[m], mode=pos)
+            for pos, m in enumerate(perm)))
         factors, lam, fit = dist_cp_als(
             tp, rank, mesh, niters=niters, key=key, verbose=verbose,
             shard_c=shard_c, init=init, mode_order="natural",
-            monitor=monitor)
+            monitor=monitor, impl=impl, plan=pplan)
         inv = [0] * 3
         for pos, m in enumerate(perm):
             inv[m] = pos
         return tuple(factors[inv[m]] for m in range(3)), lam, fit
 
+    local_impls = _local_impls_of(plan)
     ax = cpals_axes(mesh)
     n_row, n_col, n_all = ax.n_row, ax.n_col, ax.n_all
 
@@ -272,9 +325,9 @@ def dist_cp_als(t: SparseTensor, rank: int, mesh: Mesh, *, niters: int = 10,
     norm_x_sq = jnp.sum(t.vals.astype(jnp.float32) ** 2)
 
     it_first = make_dist_iteration(mesh, dims_p, rank, norm_kind="max",
-                                   shard_c=shard_c)
+                                   shard_c=shard_c, local_impls=local_impls)
     it_rest = make_dist_iteration(mesh, dims_p, rank, norm_kind="2",
-                                  shard_c=shard_c)
+                                  shard_c=shard_c, local_impls=local_impls)
 
     a, b, c = a0, b0, c0
     lam = jnp.ones((rank,), dtype=t.vals.dtype)
@@ -298,7 +351,8 @@ def dist_cp_als(t: SparseTensor, rank: int, mesh: Mesh, *, niters: int = 10,
 
 def build_dist_cpals_lowered(workload: str, mesh: Mesh, *,
                              shard_c: bool = False,
-                             mode_order: str = "natural"):
+                             mode_order: str = "natural",
+                             local_impls: tuple[str, str, str] = ("scatter",) * 3):
     """Abstract (ShapeDtypeStruct) lowering of one distributed ALS iteration
     for a paper workload — the CP-ALS entry of the dry-run matrix."""
     from repro.configs import CPALS_WORKLOADS
@@ -328,11 +382,13 @@ def build_dist_cpals_lowered(workload: str, mesh: Mesh, *,
 
     from repro.utils.roofline import CompatLowered
 
-    fn = make_dist_iteration(mesh, dims_p, rank, shard_c=shard_c)
+    fn = make_dist_iteration(mesh, dims_p, rank, shard_c=shard_c,
+                             local_impls=local_impls)
     lowered = CompatLowered(fn.lower(inds, vals, a, b, c, nx))
     # MTTKRP flops: ~5 R nnz per mode (2R gather-products, R scatter-add,
     # 2R for the Khatri-Rao partial) x 3 modes, plus small dense terms.
     info = {"workload": workload, "dims": dims, "nnz": nnz, "rank": rank,
             "local_cap": cap, "shard_c": shard_c, "mode_order": mode_order,
+            "local_impls": list(local_impls),
             "model_flops": 3 * 5.0 * rank * nnz}
     return lowered, info

@@ -2,8 +2,12 @@
 
 The paper identifies MTTKRP as the critical kernel of CP-ALS (>90% of runtime,
 Tab. III) and its performance study is, at heart, a study of MTTKRP
-implementation strategies.  This module carries the full registry of our
-analogues:
+implementation strategies.  This module carries the registry of our analogues
+as first-class :class:`ImplSpec` entries — each impl declares its input
+layout, capabilities (sortedness requirement, order > 3 support, backend) and
+a relative cost model, which is what lets the per-mode planner
+(``repro.plan``) select an implementation from tensor statistics instead of a
+hardcoded string:
 
 ==================  =========================================================
 impl                what it reproduces
@@ -15,8 +19,8 @@ impl                what it reproduces
                     collisions.  The *mutex/atomic* regime of §V-D.2: XLA's
                     scatter-add serializes colliding rows exactly where
                     SPLATT's mutex pool would contend (YELP-like tensors).
-``segment``         sorted-by-output-row segment-sum over the CSF-flat
-                    layout — SPLATT's *no-lock* schedule (NELL-2 path):
+``segment``         sorted-by-output-row segment-sum over the unified CSF
+                    workspace — SPLATT's *no-lock* schedule (NELL-2 path):
                     row ownership is resolved by the sort, not by locks.
 ``pallas``          the TPU-native kernel (kernels/mttkrp_pallas.py): blocked
                     one-hot segment-matmul on the MXU; collisions inside a
@@ -28,19 +32,23 @@ All impls support arbitrary tensor order (the paper restricts to 3rd order;
 SPLATT itself and our port support order >= 3 — this is one of the paper's
 "future work" items implemented here).
 
+Every workspace-consuming impl (``segment``, ``pallas``, ``gather_scatter``)
+accepts the single unified :class:`~repro.core.csf.CSF` layout;
+``gather_scatter``/``rowloop``/``dense`` also run straight off COO.
+
 This table is kept in sync with ``docs/architecture.md`` ("The MTTKRP
 implementation registry").
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Callable, Sequence
+import dataclasses
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from .coo import SparseTensor
-from .csf import CSFFlat
+from .csf import CSF
 
 Array = jax.Array
 
@@ -54,6 +62,8 @@ def mttkrp_dense(t: SparseTensor, factors: Sequence[Array], mode: int) -> Array:
 
     M[i, r] = sum_{j,k,...} X[.., i, ..] * prod_{m != mode} A_m[idx_m, r]
     """
+    if isinstance(t, CSF):
+        raise TypeError("dense oracle consumes COO (SparseTensor), not CSF")
     dense = t.to_dense()
     order = t.order
     # Move `mode` axis first, contract the rest against the KRP.
@@ -76,6 +86,8 @@ def mttkrp_dense(t: SparseTensor, factors: Sequence[Array], mode: int) -> Array:
 def mttkrp_rowloop(t: SparseTensor, factors: Sequence[Array], mode: int) -> Array:
     """One non-zero at a time with dynamic slices — the per-row-slice overhead
     regime the paper measures in §V-D.1.  O(nnz) sequential; benchmark-only."""
+    if isinstance(t, CSF):
+        raise TypeError("rowloop consumes COO (SparseTensor), not CSF")
     order = t.order
     rank = factors[0].shape[1]
     out = jnp.zeros((t.dims[mode], rank), dtype=factors[0].dtype)
@@ -95,7 +107,7 @@ def mttkrp_rowloop(t: SparseTensor, factors: Sequence[Array], mode: int) -> Arra
 
 
 # ---------------------------------------------------------------------------
-# gather_scatter — vectorized, unsorted, scatter-add collisions
+# gather_scatter — vectorized, scatter-add collisions (COO or CSF input)
 # ---------------------------------------------------------------------------
 
 
@@ -111,14 +123,32 @@ def _krp_rows(
     return prod
 
 
+def _krp_rows_csf(csf: CSF, factors: Sequence[Array]) -> Array:
+    """The CSF-workspace analogue of :func:`_krp_rows` (padding entries carry
+    value 0, so their products are exact zeros)."""
+    prod = csf.vals[:, None].astype(factors[0].dtype)
+    for i, m in enumerate(csf.other_modes):
+        prod = prod * factors[m][csf.other_ids[:, i]]
+    return prod
+
+
 def mttkrp_gather_scatter(
-    t: SparseTensor, factors: Sequence[Array], mode: int
+    t, factors: Sequence[Array], mode: int
 ) -> Array:
     """Flat gather of factor rows, elementwise product, scatter-add.
 
     This is the "atomic variables" regime of the paper: colliding output rows
     are resolved by the scatter's serialized adds.  Fast when collisions are
-    rare (NELL-2-like), degrades when one row is hot (YELP-like skew)."""
+    rare (NELL-2-like), degrades when one row is hot (YELP-like skew).
+
+    Consumes either raw COO or the unified CSF workspace (whose padding
+    entries carry value 0 and valid row ids, so they scatter exact zeros)."""
+    if isinstance(t, CSF):
+        if t.mode != mode:
+            raise ValueError(f"CSF is built for mode {t.mode}, asked {mode}")
+        prod = _krp_rows_csf(t, factors)
+        out = jnp.zeros((t.dims[mode], prod.shape[1]), dtype=prod.dtype)
+        return out.at[t.row_ids].add(prod, mode="drop")
     rank = factors[0].shape[1]
     prod = _krp_rows(t.inds, factors, mode, t.vals)
     out = jnp.zeros((t.dims[mode], rank), dtype=prod.dtype)
@@ -126,35 +156,184 @@ def mttkrp_gather_scatter(
 
 
 # ---------------------------------------------------------------------------
-# segment — sorted CSF-flat, conflict-free segment reduction (no-lock path)
+# segment — sorted CSF, conflict-free segment reduction (no-lock path)
 # ---------------------------------------------------------------------------
 
 
-def mttkrp_segment(csf: CSFFlat, factors: Sequence[Array]) -> Array:
-    """Segment-sum over the per-mode sorted layout.
+def mttkrp_segment(csf: CSF, factors: Sequence[Array],
+                   mode: Optional[int] = None) -> Array:
+    """Segment-sum over the per-mode sorted workspace.
 
     Sorting by output row is exactly SPLATT's no-lock schedule: each output
     row's contributions are contiguous, so a segment reduction needs no
-    conflict resolution at all.  Padding entries carry row == dims[mode]
-    (one extra segment, sliced off)."""
-    mode = csf.mode
-    prod = csf.vals[:, None].astype(factors[0].dtype)
-    for i, m in enumerate(csf.other_modes):
-        prod = prod * factors[m][csf.other_ids[:, i]]
-    seg = jax.ops.segment_sum(
-        prod,
-        csf.row_ids,
-        num_segments=csf.dims[mode] + 1,
-        indices_are_sorted=True,
-    )
-    return seg[: csf.dims[mode]]
+    conflict resolution at all.  Padding entries carry value 0 and point at
+    their tile's last real row, which keeps ``row_ids`` globally
+    non-decreasing — the reduction keeps its ``indices_are_sorted`` fast
+    path and the zeros contribute exactly nothing."""
+    if not isinstance(csf, CSF):
+        raise TypeError("segment impl needs a CSF workspace (build_csf(t, mode))")
+    if mode is not None and csf.mode != mode:
+        raise ValueError(f"CSF is built for mode {csf.mode}, asked {mode}")
+    prod = _krp_rows_csf(csf, factors)
+    return jax.ops.segment_sum(prod, csf.row_ids, num_segments=csf.num_rows,
+                               indices_are_sorted=True)
+
+
+def mttkrp_pallas(csf: CSF, factors: Sequence[Array],
+                  mode: Optional[int] = None) -> Array:
+    """The TPU kernel over the unified workspace (interpret mode off-TPU —
+    resolved by ``kernels.ops.default_interpret``)."""
+    if not isinstance(csf, CSF):
+        raise TypeError("pallas impl needs a CSF workspace (build_csf(t, mode))")
+    if mode is not None and csf.mode != mode:
+        raise ValueError(f"CSF is built for mode {csf.mode}, asked {mode}")
+    from repro.kernels import ops as kops  # local import: optional dep
+
+    return kops.mttkrp(csf, factors)
+
+
+# ---------------------------------------------------------------------------
+# cost models (relative per-iteration work; consumed by the planner)
+# ---------------------------------------------------------------------------
+#
+# Each takes a duck-typed per-mode stats object (``repro.plan.ModeStats``:
+# nnz, order, collision_rate, padding_overhead, ...) plus the CP rank and
+# returns a unitless relative cost.  Constants encode the paper's regimes:
+# scatter-adds serialize colliding rows (§V-D.2 mutex/atomic analogue) while
+# the sorted paths pay the workspace's padding overhead instead; the MXU
+# kernel turns conflict resolution into dense compute.
+
+_SCATTER_SERIALIZATION = 8.0   # relative cost of a serialized colliding add
+_MXU_SPEEDUP = 4.0             # dense one-hot matmul vs vector scatter
+
+
+def _padded_nnz(stats) -> float:
+    return stats.nnz / max(1e-9, 1.0 - stats.padding_overhead)
+
+
+def _cost_gather_scatter(stats, rank: int) -> float:
+    gather = stats.nnz * rank * (stats.order - 1)
+    scatter = stats.nnz * rank * (
+        1.0 + _SCATTER_SERIALIZATION * stats.collision_rate)
+    return gather + scatter
+
+
+def _cost_segment(stats, rank: int) -> float:
+    # pays the tile-padding overhead, but the reduction is conflict-free
+    return _padded_nnz(stats) * rank * stats.order
+
+
+def _cost_pallas(stats, rank: int) -> float:
+    return _padded_nnz(stats) * rank * stats.order / _MXU_SPEEDUP
+
+
+def _cost_rowloop(stats, rank: int) -> float:
+    return stats.nnz * rank * stats.order * 1e3  # sequential; never chosen
+
+
+# ---------------------------------------------------------------------------
+# the registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ImplSpec:
+    """One MTTKRP strategy and its declared capabilities.
+
+    layout:     workspace the impl consumes — "csf" (unified CSF), "coo"
+                (raw SparseTensor), or "any" (accepts both).
+    needs_sorted: whether the impl relies on the workspace's row sort for
+                correctness/conflict-freedom (the planner surfaces this as
+                the paper's no-lock vs mutex/atomic distinction).
+    backend:    "any", or a jax backend name ("tpu") the impl is *native* to;
+                the auto policy only picks backend-specific impls on that
+                backend (manual override still allowed anywhere).
+    cost_model: (stats, rank) -> relative per-iteration cost, used by the
+                auto policy's argmin.
+    """
+
+    name: str
+    fn: Callable[..., Array]
+    layout: str
+    needs_sorted: bool
+    supports_order_gt3: bool
+    backend: str = "any"
+    benchmark_only: bool = False
+    oracle: bool = False
+    cost_model: Optional[Callable[..., float]] = None
+
+
+REGISTRY: dict[str, ImplSpec] = {}
+
+
+def register_impl(spec: ImplSpec) -> ImplSpec:
+    """Add (or replace) an implementation in the registry."""
+    if spec.layout not in ("csf", "coo", "any"):
+        raise ValueError(f"bad layout {spec.layout!r} for impl {spec.name!r}")
+    REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_impl(name: str) -> ImplSpec:
+    try:
+        return REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown impl {name!r}; one of {tuple(REGISTRY)}") from None
+
+
+def available_impls(*, order: int = 3, backend: Optional[str] = None,
+                    include_benchmark: bool = False,
+                    include_oracle: bool = False,
+                    allow: Optional[Sequence[str]] = None) -> tuple[str, ...]:
+    """Names of impls whose declared capabilities cover (order, backend).
+
+    This is the planner's candidate filter: benchmark-only and oracle impls
+    are excluded unless asked for, and backend-specific impls only qualify on
+    their native backend.
+    """
+    out = []
+    for name, spec in REGISTRY.items():
+        if allow is not None and name not in allow:
+            continue
+        if spec.benchmark_only and not include_benchmark:
+            continue
+        if spec.oracle and not include_oracle:
+            continue
+        if order > 3 and not spec.supports_order_gt3:
+            continue
+        if backend is not None and spec.backend not in ("any", backend):
+            continue
+        out.append(name)
+    return tuple(out)
+
+
+register_impl(ImplSpec(
+    name="gather_scatter", fn=mttkrp_gather_scatter, layout="any",
+    needs_sorted=False, supports_order_gt3=True,
+    cost_model=_cost_gather_scatter))
+register_impl(ImplSpec(
+    name="segment", fn=mttkrp_segment, layout="csf",
+    needs_sorted=True, supports_order_gt3=True,
+    cost_model=_cost_segment))
+register_impl(ImplSpec(
+    name="pallas", fn=mttkrp_pallas, layout="csf",
+    needs_sorted=True, supports_order_gt3=True, backend="tpu",
+    cost_model=_cost_pallas))
+register_impl(ImplSpec(
+    name="rowloop", fn=mttkrp_rowloop, layout="coo",
+    needs_sorted=False, supports_order_gt3=True, benchmark_only=True,
+    cost_model=_cost_rowloop))
+register_impl(ImplSpec(
+    name="dense", fn=mttkrp_dense, layout="coo",
+    needs_sorted=False, supports_order_gt3=True, oracle=True))
+
+IMPLS = tuple(REGISTRY)
 
 
 # ---------------------------------------------------------------------------
 # dispatcher
 # ---------------------------------------------------------------------------
-
-IMPLS = ("gather_scatter", "segment", "pallas", "rowloop", "dense")
 
 
 def mttkrp(
@@ -164,23 +343,15 @@ def mttkrp(
     *,
     impl: str = "segment",
 ) -> Array:
-    """Dispatch on impl; ``x`` is a SparseTensor (gather_scatter/rowloop/dense)
-    or the per-mode prebuilt layout (CSFFlat for segment, CSFTiled for pallas).
+    """Dispatch on the registry; ``x`` is a SparseTensor (COO impls) or the
+    unified per-mode CSF workspace (``build_csf(t, mode)``).  ``impl="auto"``
+    is resolved by the planner (``repro.plan.plan_decomposition``) before this
+    point — pass a concrete name here.
     """
-    if impl == "dense":
-        return mttkrp_dense(x, factors, mode)
-    if impl == "rowloop":
-        return mttkrp_rowloop(x, factors, mode)
-    if impl == "gather_scatter":
-        return mttkrp_gather_scatter(x, factors, mode)
-    if impl == "segment":
-        if not isinstance(x, CSFFlat):
-            raise TypeError("segment impl needs a CSFFlat (build_csf(t, mode))")
-        if x.mode != mode:
-            raise ValueError(f"CSFFlat is sorted for mode {x.mode}, asked {mode}")
-        return mttkrp_segment(x, factors)
-    if impl == "pallas":
-        from repro.kernels import ops as kops  # local import: optional dep
-
-        return kops.mttkrp(x, factors)
-    raise ValueError(f"unknown impl {impl!r}; one of {IMPLS}")
+    if impl == "auto":
+        raise ValueError(
+            "impl='auto' is a planner policy; resolve it with "
+            "repro.plan.plan_decomposition (or call cp_als(impl='auto')) "
+            "and dispatch on the per-mode plan")
+    spec = get_impl(impl)
+    return spec.fn(x, factors, mode)

@@ -4,7 +4,8 @@ This is the TPU-native re-design of SPLATT's parallel MTTKRP (the paper's
 critical kernel).  The CPU algorithm walks a CSF pointer tree with per-row
 mutexes; on a TPU we instead exploit the MXU:
 
-  * non-zeros arrive pre-sorted and *tile-aligned* (``CSFTiled``): every
+  * non-zeros arrive pre-sorted and *tile-aligned* (the unified ``CSF``
+    workspace): every
     block of ``BLOCK`` non-zeros writes exactly one ``ROW_TILE x R`` output
     tile, and the block -> tile map is non-decreasing, so the output tile
     stays resident in VMEM across consecutive grid steps (sequential TPU

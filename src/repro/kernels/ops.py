@@ -2,24 +2,30 @@
 
 Each wrapper handles the shape plumbing the kernel requires (rank padding to
 the 128-lane width, block reshapes, gathers of factor rows) and slices the
-result back to logical shapes.  ``interpret`` defaults to True — this CPU
-container validates kernels in interpret mode; on a real TPU pass
-``interpret=False`` (the wrappers are the only call sites).
+result back to logical shapes.  ``interpret`` defaults to *backend detection*
+(:func:`default_interpret`): on a real TPU the kernels compile, anywhere else
+(CPU containers, GPU hosts) they run in interpret mode — overridable per
+call for e.g. debugging compiled lowering from a CPU host.
 """
 from __future__ import annotations
 
 from functools import partial
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.csf import CSFTiled
+from repro.core.csf import CSF
 
 from .mttkrp_pallas import LANE, mttkrp_pallas_call
 from .syrk_pallas import syrk_pallas_call
 
 Array = jax.Array
+
+
+def default_interpret() -> bool:
+    """True unless running on a TPU backend (where the kernels compile)."""
+    return jax.default_backend() != "tpu"
 
 
 def _pad_lanes(a: Array) -> Array:
@@ -32,7 +38,8 @@ def _pad_lanes(a: Array) -> Array:
 
 
 @partial(jax.jit, static_argnames=("interpret",))
-def mttkrp(csf: CSFTiled, factors: Sequence[Array], *, interpret: bool = True) -> Array:
+def mttkrp(csf: CSF, factors: Sequence[Array], *,
+           interpret: Optional[bool] = None) -> Array:
     """MTTKRP for the mode ``csf`` was built for.  Returns (num_rows, R).
 
     The factor-row gathers stay in XLA (HBM-bandwidth work XLA does well);
@@ -40,6 +47,8 @@ def mttkrp(csf: CSFTiled, factors: Sequence[Array], *, interpret: bool = True) -
     one-hot matmul.  For order > 3 the extra factors' rows are pre-multiplied
     into the second operand (associativity of the elementwise product).
     """
+    if interpret is None:
+        interpret = default_interpret()
     rank = factors[0].shape[1]
     om = csf.other_modes
     brows = _pad_lanes(factors[om[0]][csf.other_ids[:, 0]])
@@ -63,8 +72,11 @@ def mttkrp(csf: CSFTiled, factors: Sequence[Array], *, interpret: bool = True) -
 
 
 @partial(jax.jit, static_argnames=("blk", "interpret"))
-def syrk(a: Array, *, blk: int = 512, interpret: bool = True) -> Array:
+def syrk(a: Array, *, blk: int = 512,
+         interpret: Optional[bool] = None) -> Array:
     """G = A^T A via the blocked Pallas kernel.  Returns (R, R)."""
+    if interpret is None:
+        interpret = default_interpret()
     rows, rank = a.shape
     ap = _pad_lanes(a)
     rows_p = -(-rows // blk) * blk

@@ -6,18 +6,18 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.core.csf import CSFTiled
+from repro.core.csf import CSF
 
 Array = jax.Array
 
 
-def mttkrp_ref(csf: CSFTiled, factors: Sequence[Array]) -> Array:
-    """Segment-sum oracle over the tiled layout.
+def mttkrp_ref(csf: CSF, factors: Sequence[Array]) -> Array:
+    """Segment-sum oracle over the unified workspace.
 
     Padding entries carry val == 0 and point at a valid row inside their
     tile, so they contribute exact zeros — the oracle needs no masking.
-    (Padding breaks global sortedness — a tile group's trailing pads point
-    back at the tile's first row — so no ``indices_are_sorted`` hint here.)
+    (The layout guarantees globally sorted row_ids, but the oracle
+    deliberately does not rely on that invariant.)
     """
     prod = csf.vals[:, None].astype(jnp.float32)
     for i, m in enumerate(csf.other_modes):

@@ -253,16 +253,48 @@ def _probe_costs(arch: str, shape_name: str, *, multi_pod: bool,
     }
 
 
+def plan_cpals_workload(workload: str, *, policy: str = "auto",
+                        nnz_cap: int = 200_000):
+    """Plan a paper CP-ALS workload from a scaled synthetic replica.
+
+    The dry-run never materializes the full tensor; per-mode statistics are
+    shape/skew properties, so a scaled-density replica (capped at ``nnz_cap``
+    non-zeros) is enough evidence for the planner's regime rules."""
+    from repro import configs
+    from repro.core import paper_dataset
+    from repro.plan import plan_decomposition
+
+    dims, nnz, rank = configs.CPALS_WORKLOADS[workload]
+    scale = min(1.0, nnz_cap / nnz)
+    t = paper_dataset(configs.CPALS_DATASET[workload], jax.random.PRNGKey(0),
+                      scale=scale)
+    return plan_decomposition(t, policy, rank=rank)
+
+
 def run_cpals(workload: str, *, multi_pod: bool, out_dir: Path = ARTIFACTS,
               shard_c: bool = False, mode_order: str = "natural",
-              tag: str = "") -> dict:
-    """Dry-run the paper's own CP-ALS workload (distributed, medium-grained)."""
-    from repro.core.distributed import build_dist_cpals_lowered
+              impl: str = "auto", tag: str = "") -> dict:
+    """Dry-run the paper's own CP-ALS workload (distributed, medium-grained).
 
+    The per-mode plan is derived from a scaled synthetic replica and threads
+    into the lowered iteration (each mode's local MTTKRP strategy)."""
+    from repro.core.distributed import _local_impls_of, build_dist_cpals_lowered
+    from repro.utils.report import plan_report
+
+    plan = plan_cpals_workload(workload, policy=impl)
+    print(plan_report(plan))
+    local_impls = _local_impls_of(plan)
+    if mode_order == "auto":
+        # the lowering sorts modes longest-first; realign the per-mode impls
+        dims = configs.CPALS_WORKLOADS[workload][0]
+        perm = sorted(range(3), key=lambda m: -dims[m])
+        local_impls = tuple(local_impls[m] for m in perm)
     t0 = time.time()
     mesh = make_production_mesh(multi_pod=multi_pod)
     lowered, info = build_dist_cpals_lowered(workload, mesh, shard_c=shard_c,
-                                             mode_order=mode_order)
+                                             mode_order=mode_order,
+                                             local_impls=local_impls)
+    info["plan"] = {f"mode{p.mode}": p.impl for p in plan.modes}
     t_lower = time.time() - t0
     t0 = time.time()
     compiled = lowered.compile()
@@ -381,6 +413,7 @@ def main() -> None:
         run_cpals(args.arch, multi_pod=mp, out_dir=args.out,
                   shard_c=bool(overrides.get("shard_c")),
                   mode_order=overrides.get("mode_order", "natural"),
+                  impl=overrides.get("impl", "auto"),
                   tag=args.tag)
     else:
         run_cell(args.arch, args.shape, multi_pod=mp,

@@ -1,9 +1,14 @@
 """Serving launcher: batched prefill + decode with the per-arch KV/state
-caches.  CPU-sized with --smoke; the production shapes are proven by the
-dry-run's serve_step cells.
+caches, plus the decomposition-serving path for the paper's own CP-ALS
+workloads (plan-driven decompose, then batched reconstruction queries).
 
   PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --smoke \
       --batch 4 --prompt-len 32 --gen 16
+  PYTHONPATH=src python -m repro.launch.serve --arch cpals-yelp --smoke \
+      --batch 256 --queries 2048
+
+CPU-sized with --smoke; the production shapes are proven by the dry-run's
+serve_step / cpals cells.
 """
 from __future__ import annotations
 
@@ -15,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.configs import CPALS_DATASET
 from repro.launch.steps import make_prefill_step, make_serve_step
 from repro.models import Model
 
@@ -72,14 +78,77 @@ def serve(arch: str, *, smoke: bool, batch: int, prompt_len: int, gen: int,
             "decode_tok_s": batch * (gen - 1) / max(t_decode, 1e-9)}
 
 
+def serve_cpd(workload: str, *, smoke: bool, batch: int, queries: int,
+              rank: int = 16, niters: int = 10, policy: str = "auto",
+              seed: int = 0) -> dict:
+    """Decompose a paper workload under a per-mode plan, then serve batched
+    reconstruction queries (``CPDecomp.values_at``) from the factor model.
+
+    This is the decomposition-serving scenario: the CP model is the
+    compressed representation; a query is a coordinate batch and the answer
+    is the reconstructed values.  ``--smoke`` scales the tensor to CPU size;
+    the plan (and its report) is printed so the per-mode impl choice is
+    visible at launch."""
+    from repro.core import cp_als, paper_dataset
+    from repro.plan import plan_decomposition
+    from repro.utils.report import plan_report
+
+    key = jax.random.PRNGKey(seed)
+    scale = 0.002 if smoke else 1.0
+    t = paper_dataset(CPALS_DATASET[workload], key, scale=scale)
+    plan = plan_decomposition(t, policy, rank=rank)
+    print(plan_report(plan))
+
+    # decompose under the plan (one driver — cp_als — owns the ALS loop;
+    # make_cpals_step in launch/steps.py is the per-iteration entry for
+    # callers that need to own the loop themselves)
+    t0 = time.time()
+    dec = cp_als(t, rank, niters=niters, plan=plan, key=key)
+    jax.block_until_ready(dec.lmbda)
+    t_decomp = time.time() - t0
+
+    # serve: batched coordinate -> reconstructed-value queries
+    rng = np.random.default_rng(seed)
+    qfn = jax.jit(dec.values_at)
+    n_batches = max(1, queries // batch)
+    coords = jnp.asarray(np.stack(
+        [rng.integers(0, d, (n_batches, batch)) for d in t.dims],
+        axis=-1).astype(np.int32))
+    jax.block_until_ready(qfn(coords[0]))  # warmup/compile
+    t0 = time.time()
+    for b in range(n_batches):
+        out = qfn(coords[b])
+    jax.block_until_ready(out)
+    t_serve = time.time() - t0
+
+    return {"fit": float(dec.fit), "decompose_s": t_decomp,
+            "serve_s": t_serve, "plan": plan.summary(),
+            "qps": n_batches * batch / max(t_serve, 1e-9)}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=configs.ARCH_NAMES)
+    ap.add_argument("--arch", required=True,
+                    choices=tuple(configs.ARCH_NAMES) + tuple(CPALS_DATASET))
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--queries", type=int, default=2048,
+                    help="cpals serving: total reconstruction queries")
+    ap.add_argument("--rank", type=int, default=16)
+    ap.add_argument("--iters", type=int, default=10)
+    ap.add_argument("--impl", default="auto",
+                    help="cpals serving: planner policy (auto or impl name)")
     args = ap.parse_args()
+    if args.arch in CPALS_DATASET:
+        out = serve_cpd(args.arch, smoke=args.smoke,
+                        batch=args.batch, queries=args.queries,
+                        rank=args.rank, niters=args.iters, policy=args.impl)
+        print(f"[serve] plan {out['plan']}  fit {out['fit']:.4f}  "
+              f"decompose {out['decompose_s']:.2f}s  "
+              f"serve {out['serve_s']:.2f}s ({out['qps']:,.0f} vals/s)")
+        return
     out = serve(args.arch, smoke=args.smoke, batch=args.batch,
                 prompt_len=args.prompt_len, gen=args.gen)
     print(f"[serve] prefill {out['prefill_s']:.2f}s  decode "

@@ -1,9 +1,11 @@
-"""Step builders: train_step / prefill_step / serve_step for any arch config.
+"""Step builders: train_step / prefill_step / serve_step for any arch config,
+plus the CP-ALS iteration step for decomposition workloads.
 
 These are the functions the dry-run lowers and the real launcher executes.
 Gradient compression (the ``grad_compress`` flag) is implemented by
 ``repro.dist.compress`` — int8 quantization with error-feedback residuals;
-see ``docs/architecture.md`` ("The distributed layer").
+the CP-ALS step executes a per-mode :class:`repro.plan.DecompPlan`; see
+``docs/architecture.md``.
 """
 from __future__ import annotations
 
@@ -85,6 +87,24 @@ def make_train_step(model: Model, optimizer: Optimizer,
         return new_params, new_opt, metrics
 
     return train_step
+
+
+def make_cpals_step(plan):
+    """One CP-ALS iteration executing a :class:`repro.plan.DecompPlan`.
+
+    Returns ``(ws, factors, grams, norm_x_sq, norm_kind) -> (factors, grams,
+    lmbda, fit)`` where ``ws`` is ``repro.core.build_workspace(t, plan)`` —
+    the launch-layer entry the serving loop (and ad-hoc drivers) use, so the
+    per-mode impl selection is decided once at plan time, not per step."""
+    from repro.core.cpals import _iteration
+
+    impls = plan.impls
+
+    def cpals_step(ws, factors, grams, norm_x_sq, *, norm_kind="2"):
+        return _iteration(ws, tuple(factors), tuple(grams), norm_x_sq,
+                          impls=impls, norm_kind=norm_kind)
+
+    return cpals_step
 
 
 def make_prefill_step(model: Model):

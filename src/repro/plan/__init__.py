@@ -1,0 +1,16 @@
+"""repro.plan — per-mode decomposition planning.
+
+The paper's §V-D finding (the best MTTKRP strategy is a per-mode, per-tensor
+property) as an explicit subsystem: measure per-mode statistics, score the
+registered implementations' declared cost models, and emit a
+:class:`DecompPlan` that the CP-ALS drivers, the distributed driver and the
+launch layer all execute.  See ``docs/architecture.md`` ("The decomposition
+planner").
+"""
+from .stats import CONTENTION_THRESHOLD, ModeStats, mode_stats, tensor_stats
+from .planner import DecompPlan, ModePlan, plan_decomposition, plan_mode
+
+__all__ = [
+    "CONTENTION_THRESHOLD", "ModeStats", "mode_stats", "tensor_stats",
+    "DecompPlan", "ModePlan", "plan_decomposition", "plan_mode",
+]

@@ -14,6 +14,32 @@ def load_cells(d: Path) -> list[dict]:
     return [json.loads(p.read_text()) for p in sorted(d.glob("*.json"))]
 
 
+def plan_report(plan) -> str:
+    """Per-mode planner table for a :class:`repro.plan.DecompPlan`.
+
+    One row per mode: workspace layout, chosen impl, measured collision rate
+    and padding overhead, and the predicted §V-D regime — what the dry-run
+    and the serving launcher print so the per-mode choice is inspectable.
+    """
+    head = (f"# plan: policy={plan.policy} backend={plan.backend} "
+            f"rank={plan.rank}")
+    rows = ["| mode | rows | nnz/row | collision | padding | layout | impl "
+            "| regime | reason |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for p in plan.modes:
+        s = p.stats
+        if s is not None:
+            cells = (f"{s.rows} | {s.avg_nnz_per_row:.1f} "
+                     f"| {s.collision_rate:.2f} | {s.padding_overhead:.2f}")
+        else:  # fixed policy planned with with_stats=False
+            cells = "- | - | - | -"
+        rows.append(
+            f"| {p.mode} | {cells} "
+            f"| {p.layout} | **{p.impl}** | {p.predicted_regime} "
+            f"| {p.reason} |")
+    return "\n".join([head] + rows)
+
+
 def _fmt_s(x: float) -> str:
     if x >= 1.0:
         return f"{x:.2f}s"

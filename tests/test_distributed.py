@@ -200,6 +200,36 @@ def test_dist_cpals_shard_c_and_mode_order_equivalent():
     assert "OPT EQUIV OK" in out
 
 
+def test_dist_cpals_plan_interface():
+    """dist_cp_als shares cp_als's planner interface: impl='auto' == an
+    explicit DecompPlan, and the mixed local schedule stays numerically
+    equivalent to the fixed scatter path."""
+    out = run_py("""
+        import jax, jax.numpy as jnp
+        from repro.core import random_sparse
+        from repro.core.cpals import init_factors
+        from repro.core.distributed import dist_cp_als
+        from repro.plan import plan_decomposition
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        t = random_sparse((37, 23, 19), 1500, jax.random.PRNGKey(5))
+        init = init_factors(t.dims, 5, jax.random.PRNGKey(0))
+        plan = plan_decomposition(t, "auto", rank=5,
+                                  allow=("gather_scatter", "segment"))
+        f1, l1, fit1 = dist_cp_als(t, 5, mesh, niters=4, init=init,
+                                   impl="auto")
+        f2, l2, fit2 = dist_cp_als(t, 5, mesh, niters=4, init=init,
+                                   plan=plan)
+        f3, l3, fit3 = dist_cp_als(t, 5, mesh, niters=4, init=init,
+                                   impl="gather_scatter")
+        assert abs(float(fit1) - float(fit2)) < 1e-6, (fit1, fit2)
+        assert abs(float(fit1) - float(fit3)) < 1e-3, (fit1, fit3)
+        for a, b in zip(f1, f2):
+            assert float(jnp.max(jnp.abs(a - b))) < 1e-6
+        print("PLAN IFACE OK", plan.summary())
+    """)
+    assert "PLAN IFACE OK" in out
+
+
 def test_ep_moe_matches_dense_dispatch():
     """Expert-parallel shard_map MoE == dense-dispatch oracle (fwd + grads)."""
     out = run_py("""
