@@ -21,11 +21,14 @@ bench-compress:
 bench-plan:
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.bench_plan
 
+bench-ingest:
+	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.bench_ingest
+
 # no third-party linter is baked into the image; byte-compile every tree
 # (syntax + tabs/indentation errors) and import the package graph.
 lint:
 	$(PY) -m compileall -q src tests benchmarks examples
-	PYTHONPATH=$(PYTHONPATH) $(PY) -c "import repro.core, repro.dist, repro.plan, repro.kernels, repro.launch.mesh, repro.launch.steps, repro.models, repro.optim, repro.checkpoint, repro.data, repro.utils.roofline, repro.configs"
+	PYTHONPATH=$(PYTHONPATH) $(PY) -c "import repro.core, repro.dist, repro.ingest, repro.plan, repro.kernels, repro.launch.mesh, repro.launch.steps, repro.models, repro.optim, repro.checkpoint, repro.data, repro.utils.roofline, repro.configs"
 
 quickstart:
 	PYTHONPATH=$(PYTHONPATH) $(PY) examples/quickstart.py

@@ -9,16 +9,16 @@ from __future__ import annotations
 
 import jax
 
-from repro.core import cp_als, paper_dataset
+from repro.core import cp_als
 
-from .common import emit
+from .common import emit, paper_dataset_cached
 
 
 def run(scale: float = 0.002, rank: int = 35, niters: int = 20):
     key = jax.random.PRNGKey(3)
     rows = []
     for name in ("yelp", "nell-2"):
-        t = paper_dataset(name, key, scale=scale)
+        t = paper_dataset_cached(name, scale=scale, seed=3)
         for impl in ("gather_scatter", "segment"):
             # warm every jit cache so per-routine timers measure execution,
             # not first-call compilation

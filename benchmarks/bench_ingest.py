@@ -1,0 +1,125 @@
+"""Ingest-layer benchmark: warm-cache workspace acquisition and the
+reordering's effect on MTTKRP.
+
+Two questions, per the ingest subsystem's acceptance bar:
+
+* **cold vs warm**: how long does it take to go from a tensor to
+  planner-ready per-mode workspaces with a cold ``IngestCache`` (parse +
+  stats + ALLMODE CSF sort + persist) vs a warm one (content hash + one
+  ``npz`` read)?  The warm path must be >= 5x faster on the scaled YELP
+  tensor.
+* **reordered vs natural**: gather/scatter MTTKRP time per mode on the
+  natural-order tensor vs after ``degree_sort`` (hot-rows-first +
+  contention-aware relinearization), with the measured intra-block
+  collision rates alongside.
+
+`python -m benchmarks.run` aggregates this into BENCH_ingest.json;
+standalone: ``python -m benchmarks.bench_ingest [--scale S --json PATH]``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import tempfile
+import time
+from functools import partial
+from pathlib import Path
+
+import jax
+
+from repro.core import init_factors, mttkrp
+from repro.ingest import ingest
+
+from .common import paper_dataset_cached, timeit
+
+DATASET = "yelp"
+
+
+def _time_ingest(t, cache_dir, **kw) -> tuple[float, object]:
+    t0 = time.perf_counter()
+    ing = ingest(t, cache=cache_dir, **kw)
+    return time.perf_counter() - t0, ing
+
+
+def run(scale: float = 0.01, rank: int = 16) -> list[dict]:
+    t = paper_dataset_cached(DATASET, scale=scale)
+    rows = []
+
+    # --- cold vs warm workspace acquisition (fresh cache dir) ---
+    cache_dir = Path(tempfile.mkdtemp(prefix="bench_ingest_"))
+    try:
+        cold_s, ing_cold = _time_ingest(t, cache_dir)
+        warm_s, ing_warm = _time_ingest(t, cache_dir)
+        assert not ing_cold.cache_hit and ing_warm.cache_hit
+        rows.append({
+            "bench": "ingest", "dataset": DATASET, "metric": "cache",
+            "nnz": t.nnz, "cold_ms": round(cold_s * 1e3, 2),
+            "warm_ms": round(warm_s * 1e3, 2),
+            "warm_speedup": round(cold_s / max(warm_s, 1e-9), 1),
+        })
+    finally:
+        shutil.rmtree(cache_dir, ignore_errors=True)
+
+    # --- reordered vs natural-order MTTKRP (gather_scatter off COO: the
+    # impl whose scatter contention the linearization targets) ---
+    ing_re = ingest(t, reorder="degree_sort")
+    factors = init_factors(t.dims, rank, jax.random.PRNGKey(0))
+    for mode in range(t.order):
+        fn = jax.jit(partial(mttkrp, impl="gather_scatter", mode=mode))
+        nat_ms = timeit(fn, t, factors) * 1e3
+        re_ms = timeit(fn, ing_re.tensor,
+                       ing_re.relabeling.apply_factors(factors)) * 1e3
+        rows.append({
+            "bench": "ingest", "dataset": DATASET, "metric": "mttkrp",
+            "nnz": t.nnz, "mode": mode,
+            "natural_ms": round(nat_ms, 3),
+            "degree_sort_ms": round(re_ms, 3),
+            "collision_natural": round(
+                ing_re.stats_before[mode].block_collision_rate, 4),
+            "collision_reordered": round(
+                ing_re.stats[mode].block_collision_rate, 4),
+        })
+    return rows
+
+
+def summarize(rows: list[dict]) -> dict:
+    """BENCH_ingest.json payload."""
+    cache = next(r for r in rows if r["metric"] == "cache")
+    mtt = [r for r in rows if r["metric"] == "mttkrp"]
+    return {
+        "bench": "ingest",
+        "dataset": DATASET,
+        "nnz": cache["nnz"],
+        "cache": {k: cache[k] for k in ("cold_ms", "warm_ms", "warm_speedup")},
+        "mttkrp": {
+            f"mode{r['mode']}": {
+                "natural_ms": r["natural_ms"],
+                "degree_sort_ms": r["degree_sort_ms"],
+                "collision_natural": r["collision_natural"],
+                "collision_reordered": r["collision_reordered"],
+            } for r in mtt
+        },
+    }
+
+
+def main() -> None:
+    from .common import emit
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.01)
+    ap.add_argument("--rank", type=int, default=16)
+    ap.add_argument("--json", type=Path, default=None,
+                    help="also write the summary JSON here")
+    args = ap.parse_args()
+    rows = run(scale=args.scale, rank=args.rank)
+    # two row shapes (cache timing vs per-mode mttkrp) -> two tables
+    emit([r for r in rows if r["metric"] == "cache"])
+    emit([r for r in rows if r["metric"] == "mttkrp"])
+    if args.json is not None:
+        args.json.write_text(json.dumps(summarize(rows), indent=1))
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

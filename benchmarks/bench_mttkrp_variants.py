@@ -18,18 +18,17 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core import (build_csf, build_csf_tiled, init_factors, mttkrp,
-                        paper_dataset)
+from repro.core import build_csf, build_csf_tiled, init_factors, mttkrp
 from repro.plan import plan_mode
 
-from .common import emit, timeit
+from .common import emit, paper_dataset_cached, timeit
 
 
 def run(scale: float = 0.004, rank: int = 35, *, with_rowloop: bool = False):
     key = jax.random.PRNGKey(0)
     rows = []
     for name in ("yelp", "nell-2"):
-        t = paper_dataset(name, key, scale=scale)
+        t = paper_dataset_cached(name, scale=scale)
         factors = init_factors(t.dims, rank, key)
         mode = 0
         csf = build_csf(t, mode, block=512)

@@ -10,8 +10,9 @@ import json
 import time
 from pathlib import Path
 
-from . import (bench_conflict, bench_cpals_routines, bench_mttkrp_variants,
-               bench_plan, bench_scaling, bench_sort_build)
+from . import (bench_conflict, bench_cpals_routines, bench_ingest,
+               bench_mttkrp_variants, bench_plan, bench_scaling,
+               bench_sort_build)
 from .common import emit
 
 
@@ -21,6 +22,8 @@ def main() -> None:
     ap.add_argument("--skip-scaling", action="store_true")
     ap.add_argument("--plan-json", type=Path,
                     default=Path(__file__).resolve().parents[1] / "BENCH_plan.json")
+    ap.add_argument("--ingest-json", type=Path,
+                    default=Path(__file__).resolve().parents[1] / "BENCH_ingest.json")
     args = ap.parse_args()
     q = args.quick
 
@@ -35,6 +38,16 @@ def main() -> None:
     args.plan_json.write_text(json.dumps(bench_plan.summarize(plan_rows),
                                          indent=1))
     print(f"# wrote {args.plan_json}")
+    print()
+    print("# bench_ingest (cold vs warm cache; reordered vs natural MTTKRP)")
+    # scale stays at 0.01 even under --quick: below ~50k nnz the warm path's
+    # fixed costs (hash + meta) mask the sort savings being measured
+    ingest_rows = bench_ingest.run(scale=0.01)
+    emit([r for r in ingest_rows if r["metric"] == "cache"])
+    emit([r for r in ingest_rows if r["metric"] == "mttkrp"])
+    args.ingest_json.write_text(json.dumps(bench_ingest.summarize(ingest_rows),
+                                           indent=1))
+    print(f"# wrote {args.ingest_json}")
     print()
     print("# bench_sort_build (paper Fig 1)")
     emit(bench_sort_build.run(scale=0.0008 if q else 0.0015))

@@ -196,22 +196,26 @@ def paper_dataset(name: str, key: Array, *, scale: float = 1.0) -> SparseTensor:
 
 
 # ---------------------------------------------------------------------------
-# FROSTT .tns IO (1-indexed text: "i j k val" per line)
+# FROSTT .tns IO — thin wrappers over the streaming reader/writer in
+# repro.ingest.reader (comment/blank tolerance, arity validation, explicit
+# dims override, duplicate policy, vectorized formatting).  Imported lazily
+# to keep the coo -> ingest dependency one-way at import time.
 # ---------------------------------------------------------------------------
 
-def read_tns(path: str, *, dtype=np.float32) -> SparseTensor:
-    raw = np.loadtxt(path, dtype=np.float64, ndmin=2)
-    inds = raw[:, :-1].astype(np.int32) - 1  # FROSTT is 1-indexed
-    vals = raw[:, -1].astype(dtype)
-    dims = tuple(int(inds[:, m].max()) + 1 for m in range(inds.shape[1]))
-    return SparseTensor(
-        inds=jnp.asarray(inds), vals=jnp.asarray(vals), dims=dims, nnz=len(vals)
-    )
+def read_tns(path: str, *, dtype=np.float32, dims=None,
+             duplicates: str = "sum") -> SparseTensor:
+    """Read FROSTT text (1-indexed ``i j k val`` lines).  See
+    :func:`repro.ingest.reader.read_tns` — pass ``dims=`` to keep trailing
+    empty slices (inference shrinks dims to max index + 1)."""
+    from repro.ingest import reader
+
+    return reader.read_tns(path, dtype=dtype, dims=dims,
+                           duplicates=duplicates)
 
 
 def write_tns(path: str, t: SparseTensor) -> None:
-    inds = np.asarray(t.inds[: t.nnz]) + 1
-    vals = np.asarray(t.vals[: t.nnz])
-    with open(path, "w") as f:
-        for row, v in zip(inds, vals):
-            f.write(" ".join(str(int(i)) for i in row) + f" {float(v)}\n")
+    """Write FROSTT text with vectorized, round-trip-exact formatting
+    (:func:`repro.ingest.reader.write_tns`)."""
+    from repro.ingest import reader
+
+    reader.write_tns(path, t)

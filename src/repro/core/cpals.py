@@ -259,8 +259,8 @@ def cp_als(
     impl: str = "segment",
     plan=None,
     key: Array | None = None,
-    block: int = 512,
-    row_tile: int = 128,
+    block: int | None = None,
+    row_tile: int | None = None,
     timers: dict | None = None,
     verbose: bool = False,
     first_norm: str = "max",
@@ -277,14 +277,49 @@ def cp_als(
     MTTKRP implementation *per mode* from measured tensor statistics (the
     paper's §V-D regime rules), any registered name pins all modes.  Pass a
     prebuilt ``plan`` (:class:`repro.plan.DecompPlan`) to skip planning.
+
+    ``t`` may also be a :class:`repro.ingest.Ingested` handle: planning then
+    reuses the stats measured at ingest, workspaces come from the ingest
+    cache when warm (skipping the sort entirely), and the returned factors
+    are mapped back to the tensor's ORIGINAL labels through the handle's
+    inverse relabeling.  (``state``/``checkpoint_cb`` operate in the
+    relabeled space.)
     """
     if key is None:
         key = jax.random.PRNGKey(0)
 
+    ing = None
+    if not isinstance(t, SparseTensor):
+        from repro.ingest import Ingested
+
+        if not isinstance(t, Ingested):
+            raise TypeError(
+                f"cp_als takes a SparseTensor or repro.ingest.Ingested, "
+                f"got {type(t).__name__}")
+        ing = t
+        t = ing.tensor
+        # the ingest-time tile geometry is authoritative; an explicit
+        # conflicting request must fail loudly, not be silently ignored
+        for name, asked, have in (("block", block, ing.block),
+                                  ("row_tile", row_tile, ing.row_tile)):
+            if asked is not None and asked != have:
+                raise ValueError(
+                    f"cp_als was asked for {name}={asked} but this tensor "
+                    f"was ingested with {name}={have}; re-ingest with "
+                    "tile=(block, row_tile) instead")
+    if block is None:
+        block = 512
+    if row_tile is None:
+        row_tile = 128
+
     # --- Plan + Sort / CSF build (paper's pre-processing stage: the stats
     # pass and the workspace sort are both host-side, per-mode O(nnz) work,
-    # timed together under the paper's "Sort" key) ---
+    # timed together under the paper's "Sort" key; with an Ingested handle
+    # both stages may be pure cache reads) ---
     def _plan_and_build():
+        if ing is not None:
+            p = plan if plan is not None else ing.plan(impl, rank=rank)
+            return p, ing.workspace(p)
         p = resolve_plan(t, impl, plan, rank=rank, block=block,
                          row_tile=row_tile)
         return p, build_workspace(t, p)
@@ -335,4 +370,7 @@ def cp_als(
             break
         fit_prev = fit
 
-    return CPDecomp(factors=tuple(factors), lmbda=lmbda, fit=fit)
+    decomp = CPDecomp(factors=tuple(factors), lmbda=lmbda, fit=fit)
+    if ing is not None:
+        decomp = ing.restore(decomp)
+    return decomp

@@ -263,19 +263,36 @@ def dist_cp_als(t: SparseTensor, rank: int, mesh: Mesh, *, niters: int = 10,
     iteration's wall time is recorded for every participating host (times
     are exchanged across processes when there are several — see
     ``repro.dist.straggler.record_step_times``), so imbalance across the
-    non-zero partition becomes visible at the driver."""
+    non-zero partition becomes visible at the driver.
+
+    ``t`` may be a :class:`repro.ingest.Ingested` handle: planning reuses
+    the ingest-time stats and the returned factors are mapped back to the
+    original labels through the handle's inverse relabeling."""
     from .cpals import init_factors
 
     DIST_IMPLS = ("gather_scatter", "segment")
+    ing = None
+    if not isinstance(t, SparseTensor):
+        from repro.ingest import Ingested
+
+        if not isinstance(t, Ingested):
+            raise TypeError(
+                f"dist_cp_als takes a SparseTensor or repro.ingest.Ingested,"
+                f" got {type(t).__name__}")
+        ing = t
+        t = ing.tensor
     if plan is None:
         if impl != "auto" and impl not in DIST_IMPLS:
             raise ValueError(
                 f"dist_cp_als cannot execute impl {impl!r}: the shard_map "
                 f"body expresses only {DIST_IMPLS} as local reductions")
-        from repro.plan import plan_decomposition
+        if ing is not None:
+            plan = ing.plan(impl, rank=rank, allow=DIST_IMPLS)
+        else:
+            from repro.plan import plan_decomposition
 
-        plan = plan_decomposition(t, impl, rank=rank, allow=DIST_IMPLS,
-                                  with_stats=impl == "auto")
+            plan = plan_decomposition(t, impl, rank=rank, allow=DIST_IMPLS,
+                                      with_stats=impl == "auto")
     elif not set(plan.impls) <= set(DIST_IMPLS):
         raise ValueError(
             f"dist_cp_als cannot execute plan {plan.summary()!r}: the "
@@ -299,7 +316,10 @@ def dist_cp_als(t: SparseTensor, rank: int, mesh: Mesh, *, niters: int = 10,
         inv = [0] * 3
         for pos, m in enumerate(perm):
             inv[m] = pos
-        return tuple(factors[inv[m]] for m in range(3)), lam, fit
+        factors = tuple(factors[inv[m]] for m in range(3))
+        if ing is not None:
+            factors = ing.restore_factors(factors)
+        return factors, lam, fit
 
     local_impls = _local_impls_of(plan)
     ax = cpals_axes(mesh)
@@ -346,6 +366,8 @@ def dist_cp_als(t: SparseTensor, rank: int, mesh: Mesh, *, niters: int = 10,
         if verbose:
             print(f"  dist its={i + 1} fit={float(fit):.6f}")
     factors = (a[: t.dims[0]], b[: t.dims[1]], c[: t.dims[2]])
+    if ing is not None:
+        factors = ing.restore_factors(factors)
     return factors, lam, fit
 
 

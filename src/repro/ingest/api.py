@@ -1,0 +1,236 @@
+"""``ingest()`` — the one path from bytes-on-disk to planner-ready workspace.
+
+    ing = ingest("data.tns", reorder="degree_sort", cache=".cache/ingest")
+    plan = ing.plan("auto", rank=16)
+    dec  = cp_als(ing, rank=16, plan=plan)   # factors in ORIGINAL labels
+
+:func:`ingest` accepts a FROSTT ``.tns`` path, a binary ``.tnsb`` path, or
+an in-memory :class:`~repro.core.coo.SparseTensor`, and returns an
+:class:`Ingested` handle that every driver (``cp_als``, ``dist_cp_als``,
+the serve/dryrun launchers, the benchmarks) accepts in place of a raw
+tensor.  The handle owns:
+
+* the (possibly relabeled) tensor and its invertible
+  :class:`~repro.ingest.relabel.Relabeling`;
+* per-mode :class:`~repro.plan.stats.ModeStats`, measured **once** at
+  ingest and reused by the planner (no second stats pass);
+* the per-mode CSF workspaces, built lazily — or loaded from / stored to a
+  content-addressed :class:`~repro.ingest.cache.IngestCache`, in which case
+  a warm run skips sort + stats entirely.
+
+CSF builds go through the ``repro.core.csf`` *module* attribute (not a
+bound import) precisely so tests can monkeypatch ``csf.build_csf`` and
+assert that a warm cache hit performs zero builds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from pathlib import Path
+from typing import Optional, Sequence, Union
+
+import jax
+
+from repro.core import csf as csf_mod
+from repro.core.coo import SparseTensor
+from repro.core.csf import DEFAULT_BLOCK, DEFAULT_ROW_TILE
+from repro.plan.stats import ModeStats, tensor_stats
+
+from . import reader
+from .cache import IngestCache, content_key
+from .relabel import REORDERINGS, Relabeling, compact as compact_fn, make_reorder
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class Ingested:
+    """Planner-ready handle over an ingested tensor.
+
+    ``tensor`` lives in the relabeled index space; ``relabeling`` (when not
+    None) maps back to the original labels — ``restore_factors`` /
+    ``restore`` do that for factor matrices and decompositions, and the
+    drivers call them automatically.
+    """
+
+    tensor: SparseTensor
+    relabeling: Optional[Relabeling]
+    stats: tuple[ModeStats, ...]
+    stats_before: Optional[tuple[ModeStats, ...]]
+    block: int
+    row_tile: int
+    source: str
+    key: Optional[str] = None
+    cache: Optional[IngestCache] = None
+    cache_hit: bool = False
+    _csf: dict = dataclasses.field(default_factory=dict)
+
+    # -- basics ------------------------------------------------------------
+    @property
+    def order(self) -> int:
+        return self.tensor.order
+
+    @property
+    def dims(self) -> tuple[int, ...]:
+        """Dims of the relabeled (working) tensor."""
+        return self.tensor.dims
+
+    @property
+    def original_dims(self) -> tuple[int, ...]:
+        """Dims in the original label space (what queries/reports use)."""
+        if self.relabeling is not None:
+            return self.relabeling.dims_old
+        return self.tensor.dims
+
+    # -- planning ----------------------------------------------------------
+    def plan(self, policy: str = "auto", *, rank: int = 16,
+             backend: Optional[str] = None,
+             allow: Optional[Sequence[str]] = None,
+             calibrate: bool = False):
+        """Plan the decomposition, reusing the stats measured at ingest."""
+        from repro.plan import plan_decomposition
+
+        return plan_decomposition(
+            self.tensor, policy, rank=rank, backend=backend,
+            block=self.block, row_tile=self.row_tile, allow=allow,
+            calibrate=calibrate, stats=self.stats)
+
+    # -- workspaces --------------------------------------------------------
+    def csf_for(self, mode: int):
+        """The mode's CSF workspace: cached if available, else built once
+        and memoized (and persisted when a cache is attached)."""
+        if mode not in self._csf:
+            self._csf[mode] = csf_mod.build_csf(
+                self.tensor, mode, block=self.block, row_tile=self.row_tile)
+        return self._csf[mode]
+
+    def workspace(self, plan) -> list:
+        """Per-mode workspace list for ``plan`` (CSF or raw COO per the
+        planned layout) — the cache-aware analogue of
+        :func:`repro.core.cpals.build_workspace`."""
+        out = []
+        for p in plan.modes:
+            if p.layout == "csf":
+                if (p.block, p.row_tile) != (self.block, self.row_tile):
+                    raise ValueError(
+                        f"plan wants (block={p.block}, row_tile={p.row_tile})"
+                        f" but this tensor was ingested with tile="
+                        f"({self.block}, {self.row_tile})")
+                out.append(self.csf_for(p.mode))
+            else:
+                out.append(self.tensor)
+        return out
+
+    # -- label restoration -------------------------------------------------
+    def restore_factors(self, factors: Sequence[Array]) -> tuple[Array, ...]:
+        if self.relabeling is None:
+            return tuple(factors)
+        return self.relabeling.restore_factors(factors)
+
+    def restore(self, decomp):
+        """Map a CPDecomp computed in the relabeled space back to the
+        original labels (lambda and fit are label-invariant)."""
+        if self.relabeling is None:
+            return decomp
+        return dataclasses.replace(
+            decomp, factors=self.restore_factors(decomp.factors))
+
+    # -- reporting ---------------------------------------------------------
+    def reorder_deltas(self) -> Optional[list[dict]]:
+        """Per-mode (after - before) deltas of the reorder-sensitive stats,
+        for the plan report's "reorder" column.  None when no reordering
+        was applied (or a warm cache entry predates the stats)."""
+        if self.stats_before is None:
+            return None
+        out = []
+        for b, a in zip(self.stats_before, self.stats):
+            out.append({
+                "collision": a.block_collision_rate - b.block_collision_rate,
+                "padding": a.padding_overhead - b.padding_overhead,
+                "skew": a.skew - b.skew,
+            })
+        return out
+
+
+def ingest(
+    x: Union[SparseTensor, str, os.PathLike],
+    *,
+    reorder: str = "identity",
+    compact: bool = False,
+    cache: Union[IngestCache, str, os.PathLike, None] = None,
+    tile: tuple[int, int] = (DEFAULT_BLOCK, DEFAULT_ROW_TILE),
+    dims: Optional[Sequence[int]] = None,
+    duplicates: str = "sum",
+    seed: int = 0,
+) -> Ingested:
+    """Bytes-on-disk (or an in-memory tensor) -> planner-ready workspace.
+
+    ``reorder``: one of ``repro.ingest.relabel.REORDERINGS``
+    (``identity`` / ``degree_sort`` / ``random_block``).
+    ``compact``: drop empty slices first (composes with ``reorder``).
+    ``cache``: an :class:`IngestCache` or a root directory; a warm hit
+    skips parse + relabel + stats + CSF build.
+    ``tile``: the ``(block, row_tile)`` workspace geometry.
+    ``dims``/``duplicates``: forwarded to the text reader for ``.tns``
+    sources.
+    """
+    if reorder not in REORDERINGS:
+        raise ValueError(
+            f"unknown reorder {reorder!r}; one of {tuple(REORDERINGS)}")
+    block, row_tile = int(tile[0]), int(tile[1])
+    if isinstance(cache, (str, os.PathLike)):
+        cache = IngestCache(cache)
+
+    source = "memory" if isinstance(x, SparseTensor) else str(x)
+    key = None
+    if cache is not None:
+        key = content_key(x, block=block, row_tile=row_tile,
+                          reorder=reorder, compact=compact,
+                          dims=dims, duplicates=duplicates,
+                          extra=f"seed={seed}" if reorder == "random_block"
+                          else "")
+        hit = cache.load(key)
+        if hit is not None:
+            t, relabeling, csfs, stats, stats_before = hit
+            return Ingested(
+                tensor=t, relabeling=relabeling, stats=tuple(stats),
+                stats_before=(None if stats_before is None
+                              else tuple(stats_before)),
+                block=block, row_tile=row_tile, source=source, key=key,
+                cache=cache, cache_hit=True, _csf=csfs)
+
+    # -- cold path ---------------------------------------------------------
+    if isinstance(x, SparseTensor):
+        t = x
+    else:
+        t = reader.read_any(x, dims=dims, duplicates=duplicates)
+
+    relabeling: Optional[Relabeling] = None
+    stats_before = None
+    if compact or reorder != "identity":
+        stats_before = tuple(tensor_stats(t, block=block, row_tile=row_tile))
+        rel = None
+        if compact:
+            rel = compact_fn(t)
+            t = rel.apply(t)
+        if reorder != "identity":
+            r2 = make_reorder(t, reorder, block=block, seed=seed)
+            t = r2.apply(t)
+            rel = r2 if rel is None else rel.then(r2)
+        relabeling = rel
+
+    stats = tuple(tensor_stats(t, block=block, row_tile=row_tile))
+
+    csfs: dict[int, object] = {}
+    if cache is not None:
+        # ALLMODE build (SPLATT's storage policy): persist every mode so any
+        # later plan — whatever layouts it picks — is a pure cache read.
+        for m in range(t.order):
+            csfs[m] = csf_mod.build_csf(t, m, block=block, row_tile=row_tile)
+        cache.store(key, t, relabeling, list(csfs.values()), list(stats),
+                    None if stats_before is None else list(stats_before))
+
+    return Ingested(tensor=t, relabeling=relabeling, stats=stats,
+                    stats_before=stats_before, block=block, row_tile=row_tile,
+                    source=source, key=key, cache=cache, cache_hit=False,
+                    _csf=csfs)

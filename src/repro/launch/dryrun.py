@@ -254,21 +254,24 @@ def _probe_costs(arch: str, shape_name: str, *, multi_pod: bool,
 
 
 def plan_cpals_workload(workload: str, *, policy: str = "auto",
-                        nnz_cap: int = 200_000):
+                        nnz_cap: int = 200_000, cache: str | None = None):
     """Plan a paper CP-ALS workload from a scaled synthetic replica.
 
     The dry-run never materializes the full tensor; per-mode statistics are
     shape/skew properties, so a scaled-density replica (capped at ``nnz_cap``
-    non-zeros) is enough evidence for the planner's regime rules."""
+    non-zeros) is enough evidence for the planner's regime rules.  The
+    replica goes through ``repro.ingest`` so stats are measured once (and,
+    with ``cache=``, persist across dry-run invocations)."""
     from repro import configs
     from repro.core import paper_dataset
-    from repro.plan import plan_decomposition
+    from repro.ingest import ingest
 
     dims, nnz, rank = configs.CPALS_WORKLOADS[workload]
     scale = min(1.0, nnz_cap / nnz)
     t = paper_dataset(configs.CPALS_DATASET[workload], jax.random.PRNGKey(0),
                       scale=scale)
-    return plan_decomposition(t, policy, rank=rank)
+    ing = ingest(t, cache=cache)
+    return ing.plan(policy, rank=rank)
 
 
 def run_cpals(workload: str, *, multi_pod: bool, out_dir: Path = ARTIFACTS,

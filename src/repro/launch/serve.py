@@ -80,7 +80,8 @@ def serve(arch: str, *, smoke: bool, batch: int, prompt_len: int, gen: int,
 
 def serve_cpd(workload: str, *, smoke: bool, batch: int, queries: int,
               rank: int = 16, niters: int = 10, policy: str = "auto",
-              seed: int = 0) -> dict:
+              seed: int = 0, reorder: str = "identity",
+              cache: str | None = None) -> dict:
     """Decompose a paper workload under a per-mode plan, then serve batched
     reconstruction queries (``CPDecomp.values_at``) from the factor model.
 
@@ -88,31 +89,40 @@ def serve_cpd(workload: str, *, smoke: bool, batch: int, queries: int,
     compressed representation; a query is a coordinate batch and the answer
     is the reconstructed values.  ``--smoke`` scales the tensor to CPU size;
     the plan (and its report) is printed so the per-mode impl choice is
-    visible at launch."""
+    visible at launch.
+
+    The tensor goes through ``repro.ingest``: ``--reorder`` applies a
+    locality-aware reordering (queries/factors stay in original labels —
+    the handle inverts the relabeling on the way out) and ``--cache`` makes
+    a repeat launch on the same tensor skip sort + stats entirely."""
     from repro.core import cp_als, paper_dataset
-    from repro.plan import plan_decomposition
+    from repro.ingest import ingest
     from repro.utils.report import plan_report
 
     key = jax.random.PRNGKey(seed)
     scale = 0.002 if smoke else 1.0
     t = paper_dataset(CPALS_DATASET[workload], key, scale=scale)
-    plan = plan_decomposition(t, policy, rank=rank)
-    print(plan_report(plan))
+    t0 = time.time()
+    ing = ingest(t, reorder=reorder, cache=cache)
+    t_ingest = time.time() - t0
+    plan = ing.plan(policy, rank=rank)
+    print(plan_report(plan, reorder_deltas=ing.reorder_deltas()))
 
     # decompose under the plan (one driver — cp_als — owns the ALS loop;
     # make_cpals_step in launch/steps.py is the per-iteration entry for
     # callers that need to own the loop themselves)
     t0 = time.time()
-    dec = cp_als(t, rank, niters=niters, plan=plan, key=key)
+    dec = cp_als(ing, rank, niters=niters, plan=plan, key=key)
     jax.block_until_ready(dec.lmbda)
     t_decomp = time.time() - t0
 
-    # serve: batched coordinate -> reconstructed-value queries
+    # serve: batched coordinate -> reconstructed-value queries, in the
+    # tensor's ORIGINAL label space (cp_als restored the factors)
     rng = np.random.default_rng(seed)
     qfn = jax.jit(dec.values_at)
     n_batches = max(1, queries // batch)
     coords = jnp.asarray(np.stack(
-        [rng.integers(0, d, (n_batches, batch)) for d in t.dims],
+        [rng.integers(0, d, (n_batches, batch)) for d in ing.original_dims],
         axis=-1).astype(np.int32))
     jax.block_until_ready(qfn(coords[0]))  # warmup/compile
     t0 = time.time()
@@ -123,6 +133,7 @@ def serve_cpd(workload: str, *, smoke: bool, batch: int, queries: int,
 
     return {"fit": float(dec.fit), "decompose_s": t_decomp,
             "serve_s": t_serve, "plan": plan.summary(),
+            "ingest_s": t_ingest, "cache_hit": ing.cache_hit,
             "qps": n_batches * batch / max(t_serve, 1e-9)}
 
 
@@ -140,12 +151,21 @@ def main() -> None:
     ap.add_argument("--iters", type=int, default=10)
     ap.add_argument("--impl", default="auto",
                     help="cpals serving: planner policy (auto or impl name)")
+    ap.add_argument("--reorder", default="identity",
+                    help="cpals serving: ingest reordering "
+                    "(identity/degree_sort/random_block)")
+    ap.add_argument("--cache", default=None,
+                    help="cpals serving: ingest cache root (warm relaunch "
+                    "skips sort+stats)")
     args = ap.parse_args()
     if args.arch in CPALS_DATASET:
         out = serve_cpd(args.arch, smoke=args.smoke,
                         batch=args.batch, queries=args.queries,
-                        rank=args.rank, niters=args.iters, policy=args.impl)
+                        rank=args.rank, niters=args.iters, policy=args.impl,
+                        reorder=args.reorder, cache=args.cache)
         print(f"[serve] plan {out['plan']}  fit {out['fit']:.4f}  "
+              f"ingest {out['ingest_s']:.2f}s"
+              f"{' (cache hit)' if out['cache_hit'] else ''}  "
               f"decompose {out['decompose_s']:.2f}s  "
               f"serve {out['serve_s']:.2f}s ({out['qps']:,.0f} vals/s)")
         return

@@ -140,12 +140,21 @@ def _calibrate_mode(t: SparseTensor, mode: int, names, *, rank: int,
 def plan_mode(t: SparseTensor, mode: int, *, rank: int,
               backend: str, block: int, row_tile: int,
               allow: Optional[Sequence[str]] = None,
-              calibrate: bool = False) -> ModePlan:
+              calibrate: bool = False,
+              stats: Optional[ModeStats] = None) -> ModePlan:
     """Score every capability-compatible impl for one mode, pick the argmin.
 
     ``calibrate=True`` replaces the declared cost models with measured
-    timings on the actual tensor (costs are then in milliseconds)."""
-    stats = mode_stats(t, mode, block=block, row_tile=row_tile)
+    timings on the actual tensor (costs are then in milliseconds).
+    ``stats``: precomputed :class:`ModeStats` (e.g. measured once at ingest
+    — ``repro.ingest``); when given, the stats pass is skipped."""
+    if stats is None:
+        stats = mode_stats(t, mode, block=block, row_tile=row_tile)
+    elif (stats.block, stats.row_tile) != (block, row_tile):
+        raise ValueError(
+            f"precomputed stats were measured for (block={stats.block}, "
+            f"row_tile={stats.row_tile}), planner asked (block={block}, "
+            f"row_tile={row_tile})")
     names = available_impls(order=t.order, backend=backend, allow=allow)
     if not names:
         raise ValueError(
@@ -185,6 +194,7 @@ def plan_decomposition(
     allow: Optional[Sequence[str]] = None,
     calibrate: bool = False,
     with_stats: bool = True,
+    stats: Optional[Sequence[ModeStats]] = None,
 ) -> DecompPlan:
     """Emit a :class:`DecompPlan` for ``t`` under ``policy``.
 
@@ -199,13 +209,20 @@ def plan_decomposition(
     format-aware line of work.  ``with_stats=False`` skips the per-mode
     stats pass for fixed policies whose decision needs no evidence (the
     drivers' zero-overhead path); auto always measures.
+    ``stats``: precomputed per-mode statistics (one per mode, same tile
+    geometry) — what ``repro.ingest`` measures once at ingestion so the
+    planner never re-walks the tensor.
     """
     if backend is None:
         backend = jax.default_backend()
+    if stats is not None and len(stats) != t.order:
+        raise ValueError(f"precomputed stats cover {len(stats)} modes, "
+                         f"tensor has {t.order}")
     if policy == "auto":
         modes = tuple(
             plan_mode(t, m, rank=rank, backend=backend, block=block,
-                      row_tile=row_tile, allow=allow, calibrate=calibrate)
+                      row_tile=row_tile, allow=allow, calibrate=calibrate,
+                      stats=None if stats is None else stats[m])
             for m in range(t.order))
         return DecompPlan(modes=modes, policy=policy, backend=backend,
                           rank=rank)
@@ -217,8 +234,17 @@ def plan_decomposition(
         raise ValueError(
             f"impl {policy!r} does not support order-{t.order} tensors "
             "(capability supports_order_gt3=False)")
-    stats_per_mode = (tensor_stats(t, block=block, row_tile=row_tile)
-                      if with_stats or calibrate else [None] * t.order)
+    if stats is not None:
+        for s in stats:
+            if (s.block, s.row_tile) != (block, row_tile):
+                raise ValueError(
+                    f"precomputed stats were measured for (block={s.block}, "
+                    f"row_tile={s.row_tile}), planner asked (block={block}, "
+                    f"row_tile={row_tile})")
+        stats_per_mode = list(stats)
+    else:
+        stats_per_mode = (tensor_stats(t, block=block, row_tile=row_tile)
+                          if with_stats or calibrate else [None] * t.order)
     modes = []
     for m, stats in enumerate(stats_per_mode):
         if calibrate:

@@ -12,6 +12,14 @@ exactly the quantities the registry's cost models consume:
   of the block.  This is the contention the scatter-add serializes and the
   one-hot MXU matmul absorbs.  Computed exactly from the row histogram:
   E[unique rows in a k-sample] = sum_i (1 - (1 - c_i/nnz)^k).
+* ``block_collision_rate`` — the *measured* analogue of ``collision_rate``
+  on the tensor's actual storage order: the fraction of entries that share
+  their output row with another entry of the same consecutive size-``block``
+  chunk of the non-zero list.  Unlike the histogram expectation (which is
+  invariant under any relabeling/reordering), this depends on how the
+  non-zeros are linearized — it is the quantity ``repro.ingest``'s
+  locality-aware reorderings act on (ALTO's observation, arXiv:2403.06348:
+  non-zero linearization dominates locality and contention).
 * ``padding_overhead`` — fraction of the unified CSF workspace that would be
   padding for this mode (tile-align + block-pad), computed without building
   the workspace.  This is the sorted path's cost.
@@ -51,6 +59,10 @@ class ModeStats:
     padding_overhead: float  # padding fraction of the tiled CSF workspace
     block: int
     row_tile: int
+    # measured colliding fraction over consecutive storage-order chunks
+    # (layout-dependent; see module docstring).  Defaults keep older
+    # construction sites / cached payloads valid.
+    block_collision_rate: float = 0.0
 
     @property
     def regime(self) -> str:
@@ -67,6 +79,25 @@ def _collision_rate(counts: np.ndarray, nnz: int, block: int) -> float:
     p = counts[counts > 0].astype(np.float64) / float(nnz)
     expected_unique = float(np.sum(1.0 - np.power(1.0 - p, k)))
     return float(max(0.0, 1.0 - expected_unique / k))
+
+
+def measured_block_collision(idx: np.ndarray, block: int) -> float:
+    """Measured intra-block collision of ``idx`` (output rows in storage
+    order): ``1 - unique rows per consecutive size-``block`` chunk / chunk
+    size`` — the same functional form as the expected ``collision_rate``,
+    but over the *actual* chunks a vectorized scatter-add would process.
+
+    Unlike the histogram expectation (invariant under any relabeling), this
+    changes when the non-zero list is relinearized
+    (``repro.ingest.relabel``)."""
+    idx = np.asarray(idx)
+    n = int(idx.shape[0])
+    if n <= 1:
+        return 0.0
+    chunk = (np.arange(n, dtype=np.int64) // block)
+    key = chunk * (int(idx.max()) + 1) + idx.astype(np.int64)
+    unique_per_chunk_total = np.unique(key).shape[0]
+    return float(max(0.0, 1.0 - unique_per_chunk_total / n))
 
 
 def _padding_overhead(rows_sorted_counts_per_tile: np.ndarray, nnz: int,
@@ -104,6 +135,7 @@ def mode_stats(t: SparseTensor, mode: int, *, block: int,
         padding_overhead=_padding_overhead(tile_counts, nnz, block),
         block=block,
         row_tile=row_tile,
+        block_collision_rate=measured_block_collision(idx, block),
     )
 
 

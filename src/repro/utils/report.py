@@ -14,18 +14,23 @@ def load_cells(d: Path) -> list[dict]:
     return [json.loads(p.read_text()) for p in sorted(d.glob("*.json"))]
 
 
-def plan_report(plan) -> str:
+def plan_report(plan, *, reorder_deltas=None) -> str:
     """Per-mode planner table for a :class:`repro.plan.DecompPlan`.
 
     One row per mode: workspace layout, chosen impl, measured collision rate
     and padding overhead, and the predicted §V-D regime — what the dry-run
     and the serving launcher print so the per-mode choice is inspectable.
+
+    ``reorder_deltas``: per-mode dicts of (after - before) stat deltas from
+    ``repro.ingest.Ingested.reorder_deltas()`` — renders a "reorder" column
+    showing what the locality-aware reordering bought (negative collision /
+    padding deltas are wins).
     """
     head = (f"# plan: policy={plan.policy} backend={plan.backend} "
             f"rank={plan.rank}")
-    rows = ["| mode | rows | nnz/row | collision | padding | layout | impl "
-            "| regime | reason |",
-            "|---|---|---|---|---|---|---|---|---|"]
+    rows = ["| mode | rows | nnz/row | collision | padding | reorder "
+            "| layout | impl | regime | reason |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
     for p in plan.modes:
         s = p.stats
         if s is not None:
@@ -33,8 +38,14 @@ def plan_report(plan) -> str:
                      f"| {s.collision_rate:.2f} | {s.padding_overhead:.2f}")
         else:  # fixed policy planned with with_stats=False
             cells = "- | - | - | -"
+        if reorder_deltas is not None:
+            d = reorder_deltas[p.mode]
+            re_cell = (f"coll {d['collision']:+.2f} "
+                       f"pad {d['padding']:+.2f}")
+        else:
+            re_cell = "-"
         rows.append(
-            f"| {p.mode} | {cells} "
+            f"| {p.mode} | {cells} | {re_cell} "
             f"| {p.layout} | **{p.impl}** | {p.predicted_regime} "
             f"| {p.reason} |")
     return "\n".join([head] + rows)

@@ -116,6 +116,38 @@ def test_dedupe_idempotent_and_norm_preserving(t):
 
 
 @settings(**SET)
+@given(sparse_tensors(),
+       st.sampled_from(["identity", "degree_sort", "random_block",
+                        "compact"]))
+def test_relabel_inverse_is_identity(t, kind):
+    """relabel . inverse == identity, exactly (indices, values AND entry
+    order), for every transform on arbitrary tensors."""
+    from repro.ingest import relabel as R
+
+    rel = (R.compact(t) if kind == "compact"
+           else R.make_reorder(t, kind, seed=7))
+    t2 = rel.apply(t)
+    t3 = rel.invert().apply(t2)
+    np.testing.assert_array_equal(np.asarray(t3.inds),
+                                  np.asarray(t.inds[: t.nnz]))
+    np.testing.assert_array_equal(np.asarray(t3.vals),
+                                  np.asarray(t.vals[: t.nnz]))
+
+
+@settings(**SET)
+@given(sparse_tensors(), st.integers(1, 5), st.integers(0, 2**31 - 1))
+def test_relabel_factor_roundtrip_property(t, rank, seed):
+    """restore_factors . apply_factors == identity on random factors."""
+    from repro.ingest import relabel as R
+
+    rel = R.degree_sort(t)
+    factors = init_factors(t.dims, rank, jax.random.PRNGKey(seed))
+    back = rel.restore_factors(rel.apply_factors(factors))
+    for a, b in zip(factors, back):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(**SET)
 @given(sparse_tensors(), st.integers(2, 5))
 def test_pallas_mttkrp_property(t, rank):
     """Kernel == oracle on arbitrary tensors (hypothesis-driven shapes)."""
