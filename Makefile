@@ -4,7 +4,7 @@
 PY        ?= python
 PYTHONPATH := src
 
-.PHONY: test bench bench-quick lint quickstart
+.PHONY: test bench bench-quick lint quickstart clean
 
 test:
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m pytest -x -q
@@ -24,11 +24,22 @@ bench-plan:
 bench-ingest:
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.bench_ingest
 
+bench-methods:
+	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.bench_methods
+
 # no third-party linter is baked into the image; byte-compile every tree
 # (syntax + tabs/indentation errors) and import the package graph.
 lint:
 	$(PY) -m compileall -q src tests benchmarks examples
-	PYTHONPATH=$(PYTHONPATH) $(PY) -c "import repro.core, repro.dist, repro.ingest, repro.plan, repro.kernels, repro.launch.mesh, repro.launch.steps, repro.models, repro.optim, repro.checkpoint, repro.data, repro.utils.roofline, repro.configs"
+	PYTHONPATH=$(PYTHONPATH) $(PY) -c "import repro.core, repro.dist, repro.ingest, repro.plan, repro.methods, repro.kernels, repro.launch.mesh, repro.launch.steps, repro.models, repro.optim, repro.checkpoint, repro.data, repro.utils.roofline, repro.configs"
 
 quickstart:
 	PYTHONPATH=$(PYTHONPATH) $(PY) examples/quickstart.py
+
+# remove generated artifacts: bytecode caches (src/tests/benchmarks/examples),
+# benchmark JSONs, and the pytest cache.  The ingest/dataset cache under
+# .cache/ is intentionally kept (delete it explicitly to force cold runs).
+clean:
+	find src tests benchmarks examples -type d -name __pycache__ -prune -exec rm -rf {} +
+	rm -rf .pytest_cache
+	rm -f BENCH_*.json

@@ -4,14 +4,23 @@ Runs 20 ALS iterations at rank 35 (the paper's setting) on YELP- and
 NELL-2-shaped synthetic tensors (CPU-scaled) and reports seconds per routine
 (sort / mttkrp / ata / inverse / norm / fit), for the naive and optimized
 MTTKRP paths.
+
+  PYTHONPATH=src python -m benchmarks.bench_cpals_routines \
+      [--quick] [--json BENCH_cpals.json]
 """
 from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
 
 import jax
 
 from repro.core import cp_als
 
 from .common import emit, paper_dataset_cached
+
+ROUTINES = ("sort", "mttkrp", "ata", "inverse", "norm", "fit")
 
 
 def run(scale: float = 0.002, rank: int = 35, niters: int = 20):
@@ -28,11 +37,40 @@ def run(scale: float = 0.002, rank: int = 35, niters: int = 20):
                          timers=timers)
             row = {"bench": "cpals_routines", "dataset": name, "impl": impl,
                    "nnz": t.nnz, "fit": round(float(dec.fit), 4)}
-            for k in ("sort", "mttkrp", "ata", "inverse", "norm", "fit"):
+            for k in ROUTINES:
                 row[f"{k}_s"] = round(timers.get(k, 0.0), 4)
             rows.append(row)
     return rows
 
 
+def summarize(rows: list[dict]) -> dict:
+    """JSON summary for the BENCH_cpals.json trajectory artifact: the
+    per-routine timings and final fit the paper's Table III measures."""
+    cells = {}
+    for r in rows:
+        cells[f"{r['dataset']}/{r['impl']}"] = {
+            "nnz": r["nnz"], "fit": r["fit"],
+            "routines_s": {k: r[f"{k}_s"] for k in ROUTINES},
+            "total_s": round(sum(r[f"{k}_s"] for k in ROUTINES), 4),
+        }
+    return {"bench": "cpals_routines", "cells": cells}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--scale", type=float, default=None)
+    ap.add_argument("--json", type=Path, default=None,
+                    help="also write the summarize() JSON here")
+    args = ap.parse_args()
+    scale = args.scale if args.scale is not None else (
+        0.001 if args.quick else 0.002)
+    rows = run(scale=scale, niters=5 if args.quick else 20)
+    emit(rows)
+    if args.json is not None:
+        args.json.write_text(json.dumps(summarize(rows), indent=1))
+        print(f"# wrote {args.json}")
+
+
 if __name__ == "__main__":
-    emit(run())
+    main()

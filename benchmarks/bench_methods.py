@@ -1,0 +1,86 @@
+"""Fit-vs-time across the decomposition-method registry on the scaled paper
+tensors: every registered method decomposes the same YELP- and NELL-2-shaped
+synthetic tensors and reports final fit, wall time, and per-iteration cost —
+the cross-method counterpart of the per-impl MTTKRP benches.
+
+  PYTHONPATH=src python -m benchmarks.bench_methods [--quick] [--json OUT]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+
+from repro.methods import available_methods, fit, get_method
+
+from .common import emit, paper_dataset_cached
+
+# Per-method iteration budgets at matched wall-time class: HALS does R
+# rank-one updates where ALS does one solve, HOOI converges in a few sweeps.
+_NITERS = {"cp_als": 20, "cp_nn_hals": 40, "tucker_hooi": 8,
+           "cp_als_streaming": 20}
+
+
+def run(scale: float = 0.002, rank: int = 16, seed: int = 5,
+        n_chunks: int = 4) -> list[dict]:
+    key = jax.random.PRNGKey(seed)
+    rows = []
+    for name in ("yelp", "nell-2"):
+        t = paper_dataset_cached(name, scale=scale, seed=seed)
+        for method in available_methods(order=t.order):
+            spec = get_method(method)
+            niters = _NITERS.get(method, 20)
+            kwargs = {"n_chunks": n_chunks} if spec.supports_streaming else {}
+            # warm the jit caches so the timed run measures execution
+            fit(t, rank, method=method, niters=1, key=key, **kwargs)
+            t0 = time.perf_counter()
+            dec = fit(t, rank, method=method, niters=niters, key=key,
+                      **kwargs)
+            jax.block_until_ready(dec.fit)
+            wall = time.perf_counter() - t0
+            rows.append({
+                "bench": "methods", "dataset": name, "method": method,
+                "family": spec.family, "kernel": spec.kernel,
+                "nnz": t.nnz, "rank": rank, "niters": niters,
+                "fit": round(float(dec.fit), 4),
+                "wall_s": round(wall, 4),
+                "iter_ms": round(wall / niters * 1e3, 2),
+            })
+    return rows
+
+
+def summarize(rows: list[dict]) -> dict:
+    """JSON summary for the BENCH_methods.json trajectory artifact."""
+    by_method: dict[str, dict] = {}
+    for r in rows:
+        m = by_method.setdefault(r["method"], {
+            "family": r["family"], "kernel": r["kernel"], "datasets": {}})
+        m["datasets"][r["dataset"]] = {
+            "fit": r["fit"], "wall_s": r["wall_s"], "iter_ms": r["iter_ms"],
+            "niters": r["niters"], "nnz": r["nnz"]}
+    return {"bench": "methods", "rank": rows[0]["rank"] if rows else None,
+            "methods": by_method}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--scale", type=float, default=None)
+    ap.add_argument("--rank", type=int, default=16)
+    ap.add_argument("--json", type=Path, default=None,
+                    help="also write the summarize() JSON here")
+    args = ap.parse_args()
+    scale = args.scale if args.scale is not None else (
+        0.001 if args.quick else 0.002)
+    rows = run(scale=scale, rank=args.rank)
+    emit(rows)
+    if args.json is not None:
+        args.json.write_text(json.dumps(summarize(rows), indent=1))
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

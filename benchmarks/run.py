@@ -11,8 +11,8 @@ import time
 from pathlib import Path
 
 from . import (bench_conflict, bench_cpals_routines, bench_ingest,
-               bench_mttkrp_variants, bench_plan, bench_scaling,
-               bench_sort_build)
+               bench_methods, bench_mttkrp_variants, bench_plan,
+               bench_scaling, bench_sort_build)
 from .common import emit
 
 
@@ -24,6 +24,10 @@ def main() -> None:
                     default=Path(__file__).resolve().parents[1] / "BENCH_plan.json")
     ap.add_argument("--ingest-json", type=Path,
                     default=Path(__file__).resolve().parents[1] / "BENCH_ingest.json")
+    ap.add_argument("--cpals-json", type=Path,
+                    default=Path(__file__).resolve().parents[1] / "BENCH_cpals.json")
+    ap.add_argument("--methods-json", type=Path,
+                    default=Path(__file__).resolve().parents[1] / "BENCH_methods.json")
     args = ap.parse_args()
     q = args.quick
 
@@ -56,8 +60,19 @@ def main() -> None:
     emit(bench_conflict.run(nnz=60_000 if q else 200_000))
     print()
     print("# bench_cpals_routines (paper Table III / Figs 5-8)")
-    emit(bench_cpals_routines.run(scale=0.001 if q else 0.002,
-                                  niters=5 if q else 20))
+    cpals_rows = bench_cpals_routines.run(scale=0.001 if q else 0.002,
+                                          niters=5 if q else 20)
+    emit(cpals_rows)
+    args.cpals_json.write_text(
+        json.dumps(bench_cpals_routines.summarize(cpals_rows), indent=1))
+    print(f"# wrote {args.cpals_json}")
+    print()
+    print("# bench_methods (fit-vs-time across the method registry)")
+    method_rows = bench_methods.run(scale=0.001 if q else 0.002)
+    emit(method_rows)
+    args.methods_json.write_text(
+        json.dumps(bench_methods.summarize(method_rows), indent=1))
+    print(f"# wrote {args.methods_json}")
     print()
     if not args.skip_scaling:
         print("# bench_scaling (paper Figs 9/10 analogue: host devices)")

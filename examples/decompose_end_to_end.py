@@ -1,34 +1,68 @@
-"""End-to-end reproduction of the paper's experiment: 20 CP-ALS iterations at
-rank 35 on YELP- and NELL-2-shaped tensors with the per-routine runtime
-breakdown of Table III, comparing the implementation-strategy ablation
-(gather_scatter = atomic regime, segment = no-lock regime).
+"""End-to-end reproduction of the paper's experiment, on the current stack:
+ingest -> per-mode plan -> decomposition-method registry.
+
+Stage 1 reproduces Table III: 20 CP-ALS iterations at rank 35 on YELP- and
+NELL-2-shaped tensors with the per-routine runtime breakdown, comparing the
+implementation-strategy ablation (gather_scatter = atomic regime, segment =
+no-lock regime, auto = the per-mode planner).
+
+Stage 2 goes past the paper: the same ingested tensors through every method
+in the registry (nonnegative HALS, Tucker/HOOI over the TTMc kernel,
+streaming CP-ALS over chunk batches) — fit vs wall time.
 
   PYTHONPATH=src python examples/decompose_end_to_end.py [--scale 0.004]
 """
 import argparse
+import time
 
 import jax
 
-from repro.core import cp_als, paper_dataset
+from repro.core import paper_dataset
+from repro.ingest import ingest
+from repro.methods import available_methods, fit, get_method
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--scale", type=float, default=0.004,
                 help="fraction of the published nnz (CPU-sized default)")
 ap.add_argument("--rank", type=int, default=35)
 ap.add_argument("--iters", type=int, default=20)
+ap.add_argument("--skip-methods", action="store_true",
+                help="only the Table III CP-ALS ablation")
 args = ap.parse_args()
 
 key = jax.random.PRNGKey(7)
 for name in ("yelp", "nell-2"):
     t = paper_dataset(name, key, scale=args.scale)
+    ing = ingest(t)
     print(f"\n=== {name}: dims={t.dims} nnz={t.nnz:,} (scale {args.scale}) ===")
+
+    # --- Table III ablation: one method (cp_als), three impl policies ---
     for impl in ("gather_scatter", "segment", "auto"):
-        cp_als(t, rank=args.rank, niters=2, impl=impl, key=key, timers={})
+        fit(ing, args.rank, method="cp_als", niters=2, impl=impl, key=key,
+            timers={})
         timers: dict = {}
-        dec = cp_als(t, rank=args.rank, niters=args.iters, impl=impl,
-                     key=key, timers=timers)
+        dec = fit(ing, args.rank, method="cp_als", niters=args.iters,
+                  impl=impl, key=key, timers=timers)
         total = sum(timers.values())
-        print(f"[{impl:>14s}] fit={float(dec.fit):.4f} total={total:.2f}s | "
+        print(f"[cp_als/{impl:>14s}] fit={float(dec.fit):.4f} "
+              f"total={total:.2f}s | "
               + "  ".join(f"{k}={timers.get(k, 0.0):.3f}s"
                           for k in ("sort", "mttkrp", "ata", "inverse",
                                     "norm", "fit")))
+
+    # --- the registry: every method on the same ingested tensor ---
+    if args.skip_methods:
+        continue
+    for method in available_methods(order=t.order):
+        spec = get_method(method)
+        kwargs = {"n_chunks": 4} if spec.supports_streaming else {}
+        x = ing.tensor if spec.supports_streaming else ing
+        # HOOI converges in a few sweeps (and each sweep carries a thin SVD)
+        niters = args.iters if spec.family == "cp" else min(args.iters, 5)
+        t0 = time.perf_counter()
+        dec = fit(x, args.rank, method=method, niters=niters, key=key,
+                  **kwargs)
+        jax.block_until_ready(dec.fit)
+        wall = time.perf_counter() - t0
+        print(f"[{method:>22s}] family={spec.family} kernel={spec.kernel} "
+              f"fit={float(dec.fit):.4f} wall={wall:.2f}s")

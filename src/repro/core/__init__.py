@@ -5,6 +5,9 @@ from .mttkrp import (mttkrp, mttkrp_dense, mttkrp_gather_scatter,
                      mttkrp_segment, mttkrp_rowloop, mttkrp_pallas, IMPLS,
                      ImplSpec, REGISTRY, register_impl, get_impl,
                      available_impls)
+from .ttmc import (ttmc, ttmc_dense, ttmc_gather_scatter, ttmc_segment,
+                   ttmc_pallas, TTMC_IMPLS, TTMC_REGISTRY,
+                   register_ttmc_impl, get_ttmc_impl, available_ttmc_impls)
 from .gram import gram, hadamard_grams, solve_cholesky, normalize, kruskal_fit, kruskal_norm_sq, kruskal_inner
 from .cpals import (cp_als, CPDecomp, CPALSState, build_workspace,
                     resolve_plan, init_factors)
@@ -17,6 +20,9 @@ __all__ = [
     "mttkrp_gather_scatter", "mttkrp_segment", "mttkrp_rowloop",
     "mttkrp_pallas", "IMPLS", "ImplSpec", "REGISTRY", "register_impl",
     "get_impl", "available_impls",
+    "ttmc", "ttmc_dense", "ttmc_gather_scatter", "ttmc_segment",
+    "ttmc_pallas", "TTMC_IMPLS", "TTMC_REGISTRY", "register_ttmc_impl",
+    "get_ttmc_impl", "available_ttmc_impls",
     "gram", "hadamard_grams", "solve_cholesky", "normalize", "kruskal_fit",
     "kruskal_norm_sq", "kruskal_inner", "cp_als", "CPDecomp", "CPALSState",
     "build_workspace", "resolve_plan", "init_factors",

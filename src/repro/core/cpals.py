@@ -192,7 +192,10 @@ def _iteration(ws, factors, grams, norm_x_sq, *, impls, norm_kind,
     if with_fit:
         fit = kruskal_fit(norm_x_sq, lam, grams, m_last, factors[-1])
     else:
-        fit = jnp.array(0.0, dtype=factors[0].dtype)
+        # No fit was computed: return NaN, not a fake 0.0 that downstream
+        # reports would read as "converged to fit 0".  The driver keeps the
+        # last *computed* fit (previous iteration / restored state) instead.
+        fit = jnp.array(jnp.nan, dtype=factors[0].dtype)
     return tuple(factors), tuple(grams), lam, fit
 
 
@@ -227,7 +230,8 @@ _jit_normalize = jax.jit(normalize, static_argnames=("kind",))
 _jit_fit = jax.jit(kruskal_fit)
 
 
-def _iteration_timed(ws, factors, grams, norm_x_sq, timers, *, impls, norm_kind):
+def _iteration_timed(ws, factors, grams, norm_x_sq, timers, *, impls,
+                     norm_kind, with_fit=True):
     factors = list(factors)
     grams = list(grams)
     lam = m_last = None
@@ -239,138 +243,29 @@ def _iteration_timed(ws, factors, grams, norm_x_sq, timers, *, impls, norm_kind)
         grams[n] = _timed(timers, "ata", _jit_gram, a_new)
         factors[n] = a_new
         m_last = m_mat
-    fit = _timed(
-        timers, "fit", _jit_fit, norm_x_sq, lam, tuple(grams), m_last, factors[-1]
-    )
+    if with_fit:
+        fit = _timed(timers, "fit", _jit_fit, norm_x_sq, lam, tuple(grams),
+                     m_last, factors[-1])
+    else:
+        # skipped entirely: no fit work done, no "fit" seconds charged
+        fit = jnp.array(jnp.nan, dtype=factors[0].dtype)
     return tuple(factors), tuple(grams), lam, fit
 
 
 # ---------------------------------------------------------------------------
-# driver
+# driver — the ALS loop itself lives behind the method registry
+# (repro.methods.cp_als); this thin re-export keeps the historical
+# ``repro.core.cp_als`` entry point working unchanged.
 # ---------------------------------------------------------------------------
 
 
-def cp_als(
-    t: SparseTensor,
-    rank: int,
-    *,
-    niters: int = 20,
-    tol: float = 0.0,
-    impl: str = "segment",
-    plan=None,
-    key: Array | None = None,
-    block: int | None = None,
-    row_tile: int | None = None,
-    timers: dict | None = None,
-    verbose: bool = False,
-    first_norm: str = "max",
-    state: CPALSState | None = None,
-    checkpoint_cb: Callable[[CPALSState], None] | None = None,
-) -> CPDecomp:
-    """Run CP-ALS per Algorithm 1.
+def cp_als(t, rank: int, **kwargs) -> CPDecomp:
+    """Run CP-ALS per Algorithm 1 (see :func:`repro.methods.cp_als.cp_als`,
+    which owns the iteration loop behind the decomposition-method registry).
 
-    tol == 0 reproduces the paper's fixed-20-iteration experiments; tol > 0
-    stops when |fit - fit_prev| < tol (the "fit ceases to improve" branch).
-    ``state``/``checkpoint_cb`` give restartable long decompositions.
+    Lazy import: ``repro.methods`` imports this module for the iteration
+    machinery (:func:`_iteration`, the state pytrees), so the dependency is
+    only taken at call time."""
+    from repro.methods.cp_als import cp_als as _cp_als
 
-    Execution strategy: ``impl`` is a planner policy — ``"auto"`` selects an
-    MTTKRP implementation *per mode* from measured tensor statistics (the
-    paper's §V-D regime rules), any registered name pins all modes.  Pass a
-    prebuilt ``plan`` (:class:`repro.plan.DecompPlan`) to skip planning.
-
-    ``t`` may also be a :class:`repro.ingest.Ingested` handle: planning then
-    reuses the stats measured at ingest, workspaces come from the ingest
-    cache when warm (skipping the sort entirely), and the returned factors
-    are mapped back to the tensor's ORIGINAL labels through the handle's
-    inverse relabeling.  (``state``/``checkpoint_cb`` operate in the
-    relabeled space.)
-    """
-    if key is None:
-        key = jax.random.PRNGKey(0)
-
-    ing = None
-    if not isinstance(t, SparseTensor):
-        from repro.ingest import Ingested
-
-        if not isinstance(t, Ingested):
-            raise TypeError(
-                f"cp_als takes a SparseTensor or repro.ingest.Ingested, "
-                f"got {type(t).__name__}")
-        ing = t
-        t = ing.tensor
-        # the ingest-time tile geometry is authoritative; an explicit
-        # conflicting request must fail loudly, not be silently ignored
-        for name, asked, have in (("block", block, ing.block),
-                                  ("row_tile", row_tile, ing.row_tile)):
-            if asked is not None and asked != have:
-                raise ValueError(
-                    f"cp_als was asked for {name}={asked} but this tensor "
-                    f"was ingested with {name}={have}; re-ingest with "
-                    "tile=(block, row_tile) instead")
-    if block is None:
-        block = 512
-    if row_tile is None:
-        row_tile = 128
-
-    # --- Plan + Sort / CSF build (paper's pre-processing stage: the stats
-    # pass and the workspace sort are both host-side, per-mode O(nnz) work,
-    # timed together under the paper's "Sort" key; with an Ingested handle
-    # both stages may be pure cache reads) ---
-    def _plan_and_build():
-        if ing is not None:
-            p = plan if plan is not None else ing.plan(impl, rank=rank)
-            return p, ing.workspace(p)
-        p = resolve_plan(t, impl, plan, rank=rank, block=block,
-                         row_tile=row_tile)
-        return p, build_workspace(t, p)
-
-    if timers is not None:
-        plan, ws = _timed(timers, "sort", _plan_and_build)
-    else:
-        plan, ws = _plan_and_build()
-    impls = plan.impls
-
-    norm_x_sq = jnp.sum(t.vals.astype(jnp.float32) ** 2)
-
-    if state is None:
-        factors = init_factors(t.dims, rank, key, dtype=t.vals.dtype)
-        lmbda = jnp.ones((rank,), dtype=t.vals.dtype)
-        fit = jnp.array(0.0, dtype=t.vals.dtype)
-        fit_prev = jnp.array(0.0, dtype=t.vals.dtype)
-        start_iter = 0
-    else:
-        factors = tuple(state.factors)
-        lmbda, fit, fit_prev = state.lmbda, state.fit, state.fit_prev
-        start_iter = int(state.iteration)
-
-    grams = tuple(gram(a) for a in factors)
-
-    for it in range(start_iter, niters):
-        norm_kind = first_norm if it == 0 else "2"
-        if timers is not None:
-            factors, grams, lmbda, fit = _iteration_timed(
-                ws, factors, grams, norm_x_sq, timers, impls=impls, norm_kind=norm_kind
-            )
-        else:
-            factors, grams, lmbda, fit = _iteration(
-                ws, tuple(factors), grams, norm_x_sq, impls=impls, norm_kind=norm_kind
-            )
-        if verbose:
-            print(f"  its = {it + 1}  fit = {float(fit):.6f}  "
-                  f"delta = {float(fit - fit_prev):+.3e}")
-        if checkpoint_cb is not None:
-            checkpoint_cb(
-                CPALSState(
-                    tuple(factors), lmbda, fit, fit_prev,
-                    jnp.array(it + 1, dtype=jnp.int32),
-                )
-            )
-        if tol > 0.0 and it > 0 and abs(float(fit) - float(fit_prev)) < tol:
-            fit_prev = fit
-            break
-        fit_prev = fit
-
-    decomp = CPDecomp(factors=tuple(factors), lmbda=lmbda, fit=fit)
-    if ing is not None:
-        decomp = ing.restore(decomp)
-    return decomp
+    return _cp_als(t, rank, **kwargs)

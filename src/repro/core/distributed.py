@@ -243,7 +243,7 @@ def dist_cp_als(t: SparseTensor, rank: int, mesh: Mesh, *, niters: int = 10,
                 key: Array | None = None, verbose: bool = False,
                 shard_c: bool = False, init: tuple | None = None,
                 mode_order: str = "natural", monitor=None,
-                impl: str = "auto", plan=None):
+                impl: str = "auto", plan=None, method: str = "cp_als"):
     """Distributed CP-ALS; numerically equivalent to the shared-memory path
     (modulo f32 reduction order).  Returns (factors, lmbda, fit).
 
@@ -267,8 +267,25 @@ def dist_cp_als(t: SparseTensor, rank: int, mesh: Mesh, *, niters: int = 10,
 
     ``t`` may be a :class:`repro.ingest.Ingested` handle: planning reuses
     the ingest-time stats and the returned factors are mapped back to the
-    original labels through the handle's inverse relabeling."""
+    original labels through the handle's inverse relabeling.
+
+    ``method``: a name from the decomposition-method registry
+    (``repro.methods``).  The shard_map body implements the CP-ALS update;
+    methods whose :class:`~repro.methods.MethodSpec` declares
+    ``supports_dist=False`` (sequential HALS column updates, chunk
+    streaming, the Kronecker-width TTMc) are rejected with the capability
+    listing instead of silently computing something else."""
     from .cpals import init_factors
+    from repro.methods import available_methods, get_method
+
+    spec = get_method(method)
+    if not spec.supports_dist:
+        raise ValueError(
+            f"method {method!r} cannot run under the medium-grained "
+            f"shard_map driver (MethodSpec.supports_dist=False); "
+            f"distributed-capable methods: "
+            f"{available_methods(dist=True)}.  Run it single-host via "
+            f"repro.methods.fit(..., method={method!r}) instead")
 
     DIST_IMPLS = ("gather_scatter", "segment")
     ing = None
@@ -312,7 +329,7 @@ def dist_cp_als(t: SparseTensor, rank: int, mesh: Mesh, *, niters: int = 10,
         factors, lam, fit = dist_cp_als(
             tp, rank, mesh, niters=niters, key=key, verbose=verbose,
             shard_c=shard_c, init=init, mode_order="natural",
-            monitor=monitor, impl=impl, plan=pplan)
+            monitor=monitor, impl=impl, plan=pplan, method=method)
         inv = [0] * 3
         for pos, m in enumerate(perm):
             inv[m] = pos

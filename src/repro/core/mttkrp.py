@@ -274,26 +274,35 @@ def register_impl(spec: ImplSpec) -> ImplSpec:
     return spec
 
 
-def get_impl(name: str) -> ImplSpec:
+def get_impl(name: str, *, registry: Optional[dict] = None) -> ImplSpec:
+    """Look up an :class:`ImplSpec` by name.
+
+    ``registry`` defaults to the MTTKRP registry; other kernel families
+    (``repro.core.ttmc``) pass their own table so the planner can score any
+    registered sparse kernel with one code path."""
+    registry = REGISTRY if registry is None else registry
     try:
-        return REGISTRY[name]
+        return registry[name]
     except KeyError:
         raise ValueError(
-            f"unknown impl {name!r}; one of {tuple(REGISTRY)}") from None
+            f"unknown impl {name!r}; one of {tuple(registry)}") from None
 
 
 def available_impls(*, order: int = 3, backend: Optional[str] = None,
                     include_benchmark: bool = False,
                     include_oracle: bool = False,
-                    allow: Optional[Sequence[str]] = None) -> tuple[str, ...]:
+                    allow: Optional[Sequence[str]] = None,
+                    registry: Optional[dict] = None) -> tuple[str, ...]:
     """Names of impls whose declared capabilities cover (order, backend).
 
     This is the planner's candidate filter: benchmark-only and oracle impls
     are excluded unless asked for, and backend-specific impls only qualify on
-    their native backend.
+    their native backend.  ``registry`` selects the kernel family (MTTKRP by
+    default; ``repro.core.ttmc.TTMC_REGISTRY`` for the Tucker chain).
     """
+    registry = REGISTRY if registry is None else registry
     out = []
-    for name, spec in REGISTRY.items():
+    for name, spec in registry.items():
         if allow is not None and name not in allow:
             continue
         if spec.benchmark_only and not include_benchmark:

@@ -1,0 +1,189 @@
+"""TTMc — chain-of-modes tensor-times-matrix contraction for sparse Tucker.
+
+Where MTTKRP contracts a sparse tensor against the *Khatri-Rao* (columnwise
+Hadamard) product of the other modes' factors, the Tucker/HOOI family needs
+the *Kronecker* counterpart:
+
+    Y_(n)[i, :] = sum_{nnz with i_n == i} x * kron_{m != n} U_m[i_m, :]
+
+i.e. the mode-n matricization of ``X x_{m != n} U_m^T`` — an
+(I_n, prod_{m != n} R_m) matrix whose thin SVD gives the updated HOOI factor
+and whose final-mode instance recovers the core tensor (see
+``repro.methods.tucker_hooi``).  Phipps & Kolda (2018) make the case that
+CP and Tucker share exactly this sparse-kernel seam; structurally the TTMc
+is the same semiring contraction as MTTKRP with the per-entry Hadamard
+product replaced by an outer (Kronecker) product, so every reduction
+strategy from ``core/mttkrp.py`` transfers:
+
+``segment``          sorted CSF workspace + conflict-free segment-sum
+                     (SPLATT's no-lock schedule).
+``gather_scatter``   flat gather + scatter-add off COO or CSF (the
+                     mutex/atomic regime; wins on collision-light modes).
+``pallas``           the TPU one-hot segment-matmul kernel, reused verbatim:
+                     the Kronecker rows are formed XLA-side and fed through
+                     ``kernels.ops.ttmc`` (collisions inside a block are
+                     again resolved by the MXU matmul).
+``dense``            dense einsum oracle (tests only).
+
+Kronecker column order: ascending other-mode order, row-major — for a 3rd
+order tensor at mode 0 the output column is ``r_1 * R_2 + r_2``.  Every impl
+here and the dense oracle agree on this convention; ``repro.methods``
+relies on it when reshaping the recovered core.
+
+The impls are registered in :data:`TTMC_REGISTRY` (same :class:`ImplSpec`
+shape as the MTTKRP table) with cost models in the same relative units, so
+``repro.plan.plan_decomposition(..., kernel="ttmc")`` can score them per
+mode exactly like it scores MTTKRP strategies.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .coo import SparseTensor
+from .csf import CSF
+from .mttkrp import (ImplSpec, available_impls, get_impl,
+                     _cost_gather_scatter, _cost_pallas, _cost_segment)
+
+Array = jax.Array
+
+
+def kron_chain(rows: Sequence[Array]) -> Array:
+    """Row-wise Kronecker product: [(n, R_a), (n, R_b), ...] -> (n, prod R).
+
+    Ascending input order is the slow axis (row-major), matching the dense
+    oracle's einsum output ordering.  This is THE column-order convention
+    every TTMc impl (including ``kernels/ops.ttmc`` and the ``ttmc_ref``
+    oracle) must share — ``repro.methods`` relies on it when un-matricizing
+    the recovered Tucker core, so there is exactly one implementation."""
+    out = rows[0]
+    for r in rows[1:]:
+        out = (out[:, :, None] * r[:, None, :]).reshape(out.shape[0], -1)
+    return out
+
+
+def _kron_rows_coo(t: SparseTensor, factors: Sequence[Array],
+                   mode: int) -> Array:
+    rows = [factors[m][t.inds[:, m]] for m in range(t.order) if m != mode]
+    return t.vals[:, None].astype(factors[0].dtype) * kron_chain(rows)
+
+
+def _kron_rows_csf(csf: CSF, factors: Sequence[Array]) -> Array:
+    """CSF analogue (padding entries carry value 0 -> exact zero rows)."""
+    rows = [factors[m][csf.other_ids[:, i]]
+            for i, m in enumerate(csf.other_modes)]
+    return csf.vals[:, None].astype(factors[0].dtype) * kron_chain(rows)
+
+
+def ttmc_dense(t: SparseTensor, factors: Sequence[Array], mode: int) -> Array:
+    """Dense oracle: densify X and contract every other mode. Tests only."""
+    if isinstance(t, CSF):
+        raise TypeError("dense oracle consumes COO (SparseTensor), not CSF")
+    order = t.order
+    letters = "abcdefgh"[:order]
+    ranks = "pqrstuvw"
+    others = [m for m in range(order) if m != mode]
+    terms = [f"{letters[m]}{ranks[j]}" for j, m in enumerate(others)]
+    eq = (f"{letters}," + ",".join(terms)
+          + f"->{letters[mode]}{''.join(ranks[j] for j in range(len(others)))}")
+    out = jnp.einsum(eq, t.to_dense(), *[factors[m] for m in others])
+    return out.reshape(t.dims[mode], -1)
+
+
+def ttmc_gather_scatter(t, factors: Sequence[Array], mode: int) -> Array:
+    """Flat gather + Kronecker rows + scatter-add (COO or CSF input)."""
+    if isinstance(t, CSF):
+        if t.mode != mode:
+            raise ValueError(f"CSF is built for mode {t.mode}, asked {mode}")
+        prod = _kron_rows_csf(t, factors)
+        out = jnp.zeros((t.dims[mode], prod.shape[1]), dtype=prod.dtype)
+        return out.at[t.row_ids].add(prod, mode="drop")
+    prod = _kron_rows_coo(t, factors, mode)
+    out = jnp.zeros((t.dims[mode], prod.shape[1]), dtype=prod.dtype)
+    return out.at[t.inds[:, mode]].add(prod, mode="drop")
+
+
+def ttmc_segment(csf: CSF, factors: Sequence[Array],
+                 mode: Optional[int] = None) -> Array:
+    """Kronecker rows + sorted segment-sum over the unified CSF workspace."""
+    if not isinstance(csf, CSF):
+        raise TypeError("segment impl needs a CSF workspace (build_csf(t, mode))")
+    if mode is not None and csf.mode != mode:
+        raise ValueError(f"CSF is built for mode {csf.mode}, asked {mode}")
+    prod = _kron_rows_csf(csf, factors)
+    return jax.ops.segment_sum(prod, csf.row_ids, num_segments=csf.num_rows,
+                               indices_are_sorted=True)
+
+
+def ttmc_pallas(csf: CSF, factors: Sequence[Array],
+                mode: Optional[int] = None) -> Array:
+    """The TPU one-hot segment-matmul kernel over Kronecker rows
+    (interpret mode off-TPU, like the MTTKRP kernel)."""
+    if not isinstance(csf, CSF):
+        raise TypeError("pallas impl needs a CSF workspace (build_csf(t, mode))")
+    if mode is not None and csf.mode != mode:
+        raise ValueError(f"CSF is built for mode {csf.mode}, asked {mode}")
+    from repro.kernels import ops as kops  # local import: optional dep
+
+    return kops.ttmc(csf, factors)
+
+
+# ---------------------------------------------------------------------------
+# the registry — scored by the planner via plan_decomposition(kernel="ttmc")
+# ---------------------------------------------------------------------------
+#
+# Cost models are the MTTKRP ones applied at the TTMc's output width: the
+# planner passes rank = prod_{m != mode} R_m, which is exactly the per-entry
+# work multiplier of the Kronecker chain, so the regime constants (scatter
+# serialization, padding overhead, MXU speedup) transfer unchanged.
+
+TTMC_REGISTRY: dict[str, ImplSpec] = {}
+
+
+def register_ttmc_impl(spec: ImplSpec) -> ImplSpec:
+    if spec.layout not in ("csf", "coo", "any"):
+        raise ValueError(f"bad layout {spec.layout!r} for impl {spec.name!r}")
+    TTMC_REGISTRY[spec.name] = spec
+    return spec
+
+
+def get_ttmc_impl(name: str) -> ImplSpec:
+    return get_impl(name, registry=TTMC_REGISTRY)
+
+
+def available_ttmc_impls(**kw) -> tuple[str, ...]:
+    return available_impls(registry=TTMC_REGISTRY, **kw)
+
+
+register_ttmc_impl(ImplSpec(
+    name="gather_scatter", fn=ttmc_gather_scatter, layout="any",
+    needs_sorted=False, supports_order_gt3=True,
+    cost_model=_cost_gather_scatter))
+register_ttmc_impl(ImplSpec(
+    name="segment", fn=ttmc_segment, layout="csf",
+    needs_sorted=True, supports_order_gt3=True,
+    cost_model=_cost_segment))
+register_ttmc_impl(ImplSpec(
+    name="pallas", fn=ttmc_pallas, layout="csf",
+    needs_sorted=True, supports_order_gt3=True, backend="tpu",
+    cost_model=_cost_pallas))
+register_ttmc_impl(ImplSpec(
+    name="dense", fn=ttmc_dense, layout="coo",
+    needs_sorted=False, supports_order_gt3=True, oracle=True))
+
+TTMC_IMPLS = tuple(TTMC_REGISTRY)
+
+
+def ttmc(x, factors: Sequence[Array], mode: int, *,
+         impl: str = "segment") -> Array:
+    """Dispatch a TTMc on the registry; ``x`` is a SparseTensor (COO impls)
+    or the per-mode CSF workspace.  Returns (dims[mode], prod other R)."""
+    if impl == "auto":
+        raise ValueError(
+            "impl='auto' is a planner policy; resolve it with "
+            "repro.plan.plan_decomposition(kernel='ttmc') and dispatch on "
+            "the per-mode plan")
+    spec = get_ttmc_impl(impl)
+    return spec.fn(x, factors, mode)

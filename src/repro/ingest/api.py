@@ -83,17 +83,21 @@ class Ingested:
         return self.tensor.dims
 
     # -- planning ----------------------------------------------------------
-    def plan(self, policy: str = "auto", *, rank: int = 16,
+    def plan(self, policy: str = "auto", *, rank=16,
              backend: Optional[str] = None,
              allow: Optional[Sequence[str]] = None,
-             calibrate: bool = False):
-        """Plan the decomposition, reusing the stats measured at ingest."""
+             calibrate: bool = False, kernel: str = "mttkrp"):
+        """Plan the decomposition, reusing the stats measured at ingest.
+
+        ``kernel`` selects the scored kernel family ("mttkrp" for the CP
+        methods, "ttmc" for Tucker/HOOI) — the stats are kernel-agnostic
+        tensor properties, so both reuse the same ingest-time measurement."""
         from repro.plan import plan_decomposition
 
         return plan_decomposition(
             self.tensor, policy, rank=rank, backend=backend,
             block=self.block, row_tile=self.row_tile, allow=allow,
-            calibrate=calibrate, stats=self.stats)
+            calibrate=calibrate, stats=self.stats, kernel=kernel)
 
     # -- workspaces --------------------------------------------------------
     def csf_for(self, mode: int):

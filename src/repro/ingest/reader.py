@@ -66,26 +66,7 @@ def read_tns(
     if duplicates not in DUPLICATE_POLICIES:
         raise ValueError(
             f"duplicates policy {duplicates!r} not in {DUPLICATE_POLICIES}")
-    arity: Optional[int] = None
-    chunks: list[np.ndarray] = []
-    with open(path, "r") as f:
-        lineno = 0
-        batch: list[str] = []
-        batch_nos: list[int] = []
-        while True:
-            line = f.readline()
-            at_eof = not line
-            if not at_eof:
-                lineno += 1
-                if _is_data_line(line):
-                    batch.append(line)
-                    batch_nos.append(lineno)
-            if batch and (at_eof or len(batch) >= chunk_lines):
-                chunks.append(_parse_batch(batch, batch_nos, arity, path))
-                arity = chunks[-1].shape[1]
-                batch, batch_nos = [], []
-            if at_eof:
-                break
+    chunks = list(_iter_tns_arrays(path, chunk_lines=chunk_lines))
     if not chunks:
         raise ValueError(f"{path}: no data lines")
     raw = chunks[0] if len(chunks) == 1 else np.concatenate(chunks)
@@ -279,6 +260,171 @@ def is_tnsb(path: str | os.PathLike) -> bool:
             return f.read(4) == TNSB_MAGIC
     except OSError:
         return False
+
+
+# ---------------------------------------------------------------------------
+# chunk sources — what cp_als_streaming consumes
+# ---------------------------------------------------------------------------
+#
+# A "chunk source" is a re-iterable sequence of SparseTensor chunks that all
+# share the FULL tensor dims (each chunk owns a disjoint subset of the
+# non-zeros), so per-chunk kernel partials sum to the batch result.  Only
+# one chunk is materialized at a time: the .tnsb source slices the mmap, the
+# .tns source re-streams the text file, and the in-memory source slices the
+# resident tensor (a convenience for tests/benchmarks, not a memory win).
+# Streaming assumes coordinates are already unique across chunks (a global
+# duplicate-sum needs the full tensor — exactly what streaming avoids);
+# .tnsb files written by the ingest/benchmark caches are deduped.
+
+
+class ChunkSource:
+    """Re-iterable chunk sequence with known ``dims`` and ``nnz``.
+
+    ``make_iter`` is a zero-arg callable returning a fresh iterator of
+    :class:`SparseTensor` chunks — each pass over the source calls it again,
+    so file-backed sources re-stream instead of buffering.
+    """
+
+    def __init__(self, dims: Sequence[int], nnz: int, make_iter):
+        self.dims = tuple(int(d) for d in dims)
+        self.nnz = int(nnz)
+        self._make_iter = make_iter
+
+    def __iter__(self):
+        return self._make_iter()
+
+
+def scan_tns_dims(path: str | os.PathLike,
+                  chunk_lines: int = 1 << 20) -> tuple[tuple[int, ...], int]:
+    """One streaming pass over a ``.tns``: (inferred dims, line count).
+
+    Used by the streaming driver when the caller does not pass ``dims=`` —
+    the pass is index-only (no value parsing kept) and never materializes
+    the tensor."""
+    arity: Optional[int] = None
+    maxes: Optional[np.ndarray] = None
+    count = 0
+    for raw in _iter_tns_arrays(path, chunk_lines=chunk_lines):
+        arity = raw.shape[1]
+        icols = raw[:, :-1]
+        if icols.size and icols.min() < 1:
+            raise ValueError(f"{path}: FROSTT indices are 1-based; found "
+                             f"index {int(icols.min())}")
+        m = icols.max(axis=0)
+        maxes = m if maxes is None else np.maximum(maxes, m)
+        count += raw.shape[0]
+    if maxes is None:
+        raise ValueError(f"{path}: no data lines")
+    return tuple(int(v) for v in maxes), count
+
+
+def _iter_tns_arrays(path, *, chunk_lines: int):
+    """Yield parsed (n, arity) float64 arrays per text chunk (shared by the
+    scan pass and the chunk iterator)."""
+    arity: Optional[int] = None
+    with open(path, "r") as f:
+        lineno = 0
+        batch: list[str] = []
+        batch_nos: list[int] = []
+        while True:
+            line = f.readline()
+            at_eof = not line
+            if not at_eof:
+                lineno += 1
+                if _is_data_line(line):
+                    batch.append(line)
+                    batch_nos.append(lineno)
+            if batch and (at_eof or len(batch) >= chunk_lines):
+                raw = _parse_batch(batch, batch_nos, arity, path)
+                arity = raw.shape[1]
+                yield raw
+                batch, batch_nos = [], []
+            if at_eof:
+                break
+
+
+def iter_tns_chunks(path: str | os.PathLike, *, dims: Sequence[int],
+                    chunk_nnz: int = 1 << 20, dtype=np.float32):
+    """Yield :class:`SparseTensor` chunks of a FROSTT text file.
+
+    ``dims`` is required: every chunk must carry the FULL tensor shape (use
+    :func:`scan_tns_dims` for one cheap inference pass).  Duplicates are
+    kept verbatim (see the chunk-source contract above)."""
+    for raw in _iter_tns_arrays(path, chunk_lines=chunk_nnz):
+        yield _assemble(raw, path=path, dtype=dtype, dims=dims,
+                        duplicates="keep")
+
+
+def iter_tnsb_chunks(path: str | os.PathLike, *, chunk_nnz: int = 1 << 20):
+    """Yield chunks of a binary ``.tnsb`` by slicing the mmap — the OS pages
+    in only the active chunk, so tensors larger than memory stream fine."""
+    t = read_tnsb(path, mmap=True)
+    yield from iter_chunks(t, chunk_nnz=chunk_nnz)
+
+
+def iter_chunks(t: SparseTensor, *, chunk_nnz: Optional[int] = None,
+                n_chunks: Optional[int] = None):
+    """Slice a tensor's non-zeros into chunks sharing the full dims."""
+    if (chunk_nnz is None) == (n_chunks is None):
+        raise ValueError("pass exactly one of chunk_nnz= / n_chunks=")
+    if n_chunks is not None:
+        chunk_nnz = -(-t.nnz // int(n_chunks))
+    chunk_nnz = max(1, int(chunk_nnz))
+    for s in range(0, t.nnz, chunk_nnz):
+        e = min(t.nnz, s + chunk_nnz)
+        yield SparseTensor(inds=jnp.asarray(np.asarray(t.inds[s:e])),
+                           vals=jnp.asarray(np.asarray(t.vals[s:e])),
+                           dims=t.dims, nnz=e - s)
+
+
+def open_chunk_source(source, *, dims: Optional[Sequence[int]] = None,
+                      chunk_nnz: int = 1 << 20,
+                      n_chunks: Optional[int] = None) -> ChunkSource:
+    """Normalize anything chunk-shaped into a re-iterable :class:`ChunkSource`.
+
+    Accepts a :class:`SparseTensor` (sliced in memory), a ``.tns``/``.tnsb``
+    path (re-streamed per pass; ``.tns`` without ``dims=`` costs one extra
+    scan pass), or an existing list/tuple of same-dims chunks."""
+    if isinstance(source, SparseTensor):
+        if n_chunks is not None:
+            chunk_nnz = -(-source.nnz // int(n_chunks))
+        cn = max(1, int(chunk_nnz))
+        return ChunkSource(source.dims, source.nnz,
+                           lambda: iter_chunks(source, chunk_nnz=cn))
+    if isinstance(source, (list, tuple)):
+        chunks = list(source)
+        if not chunks:
+            raise ValueError("empty chunk list")
+        d0 = chunks[0].dims
+        for i, c in enumerate(chunks):
+            if not isinstance(c, SparseTensor) or c.dims != d0:
+                raise ValueError(
+                    f"chunk {i} is not a SparseTensor with dims {d0}")
+        return ChunkSource(d0, sum(c.nnz for c in chunks),
+                           lambda: iter(chunks))
+    if isinstance(source, (str, os.PathLike)):
+        path = Path(source)
+        if is_tnsb(path):
+            t = read_tnsb(path, mmap=True)
+            if n_chunks is not None:
+                chunk_nnz = -(-t.nnz // int(n_chunks))
+            cn = max(1, int(chunk_nnz))
+            return ChunkSource(t.dims, t.nnz,
+                               lambda: iter_tnsb_chunks(path, chunk_nnz=cn))
+        if dims is None:
+            dims, count = scan_tns_dims(path)
+        else:
+            count = sum(r.shape[0]
+                        for r in _iter_tns_arrays(path, chunk_lines=chunk_nnz))
+        if n_chunks is not None:
+            chunk_nnz = -(-count // int(n_chunks))
+        cn = max(1, int(chunk_nnz))
+        d = tuple(int(x) for x in dims)
+        return ChunkSource(d, count,
+                           lambda: iter_tns_chunks(path, dims=d, chunk_nnz=cn))
+    raise TypeError(
+        f"cannot stream chunks from {type(source).__name__}; pass a "
+        "SparseTensor, a .tns/.tnsb path, or a list of SparseTensor chunks")
 
 
 def read_any(path: str | os.PathLike, *, dims=None, duplicates: str = "sum",

@@ -71,6 +71,43 @@ def mttkrp(csf: CSF, factors: Sequence[Array], *,
     return out[: csf.num_rows, :rank].astype(factors[0].dtype)
 
 
+@partial(jax.jit, static_argnames=("interpret",))
+def ttmc(csf: CSF, factors: Sequence[Array], *,
+         interpret: Optional[bool] = None) -> Array:
+    """Chain-of-modes TTMc for the mode ``csf`` was built for.
+
+    Returns (num_rows, prod_{m != mode} R_m).  The kernel is the MTTKRP
+    one-hot segment-matmul reused verbatim: the row-wise Kronecker chain of
+    the other modes' factor rows is formed XLA-side (it is just a reshaped
+    outer product — HBM-bandwidth work, like the factor gathers) and fed in
+    as the first operand with an all-ones second operand, so the fused
+    ``vals * brows * crows`` multiply and the conflict-resolving one-hot
+    matmul run unchanged at the wider Kronecker rank.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    from repro.core.ttmc import kron_chain  # one column-order convention
+
+    kron = kron_chain([factors[m][csf.other_ids[:, i]]
+                       for i, m in enumerate(csf.other_modes)])
+    width = kron.shape[-1]
+    kron = _pad_lanes(kron)
+
+    nblocks, block = csf.num_blocks, csf.block
+    rp = kron.shape[-1]
+    out = mttkrp_pallas_call(
+        csf.row_ids.reshape(nblocks, block),
+        csf.vals.reshape(nblocks, block),
+        kron.reshape(nblocks, block, rp),
+        jnp.ones((nblocks, block, rp), dtype=kron.dtype),
+        csf.block_tile,
+        num_row_tiles=csf.num_row_tiles,
+        row_tile=csf.row_tile,
+        interpret=interpret,
+    )
+    return out[: csf.num_rows, :width].astype(factors[0].dtype)
+
+
 @partial(jax.jit, static_argnames=("blk", "interpret"))
 def syrk(a: Array, *, blk: int = 512,
          interpret: Optional[bool] = None) -> Array:

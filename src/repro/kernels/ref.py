@@ -26,6 +26,17 @@ def mttkrp_ref(csf: CSF, factors: Sequence[Array]) -> Array:
     return seg
 
 
+def ttmc_ref(csf: CSF, factors: Sequence[Array]) -> Array:
+    """Segment-sum oracle for the TTMc kernel (Kronecker-chain analogue of
+    :func:`mttkrp_ref`; same no-masking padding argument)."""
+    from repro.core.ttmc import kron_chain  # one column-order convention
+
+    kron = kron_chain([factors[m][csf.other_ids[:, i]].astype(jnp.float32)
+                       for i, m in enumerate(csf.other_modes)])
+    prod = csf.vals[:, None].astype(jnp.float32) * kron
+    return jax.ops.segment_sum(prod, csf.row_ids, num_segments=csf.num_rows)
+
+
 def syrk_ref(a: Array) -> Array:
     af = a.astype(jnp.float32)
     return af.T @ af

@@ -254,38 +254,60 @@ def _probe_costs(arch: str, shape_name: str, *, multi_pod: bool,
 
 
 def plan_cpals_workload(workload: str, *, policy: str = "auto",
-                        nnz_cap: int = 200_000, cache: str | None = None):
-    """Plan a paper CP-ALS workload from a scaled synthetic replica.
+                        nnz_cap: int = 200_000, cache: str | None = None,
+                        method: str = "cp_als"):
+    """Plan a paper decomposition workload from a scaled synthetic replica.
 
     The dry-run never materializes the full tensor; per-mode statistics are
     shape/skew properties, so a scaled-density replica (capped at ``nnz_cap``
     non-zeros) is enough evidence for the planner's regime rules.  The
     replica goes through ``repro.ingest`` so stats are measured once (and,
-    with ``cache=``, persist across dry-run invocations)."""
-    from repro import configs
-    from repro.core import paper_dataset
-    from repro.ingest import ingest
+    with ``cache=``, persist across dry-run invocations).
 
+    ``method`` selects the registry entry whose kernel family is planned:
+    the CP methods score the mttkrp registry at the workload's rank, Tucker
+    scores the ttmc registry at each mode's Kronecker width."""
+    from repro import configs
+    from repro.ingest import ingest
+    from repro.core import paper_dataset
+    from repro.methods import get_method
+
+    spec = get_method(method)
     dims, nnz, rank = configs.CPALS_WORKLOADS[workload]
     scale = min(1.0, nnz_cap / nnz)
     t = paper_dataset(configs.CPALS_DATASET[workload], jax.random.PRNGKey(0),
                       scale=scale)
     ing = ingest(t, cache=cache)
+    if spec.kernel == "ttmc":
+        from repro.methods.tucker_hooi import _kron_widths, _resolve_ranks
+
+        widths = _kron_widths(_resolve_ranks(rank, ing.dims))
+        return ing.plan(policy, rank=widths, kernel="ttmc")
     return ing.plan(policy, rank=rank)
 
 
 def run_cpals(workload: str, *, multi_pod: bool, out_dir: Path = ARTIFACTS,
               shard_c: bool = False, mode_order: str = "natural",
-              impl: str = "auto", tag: str = "") -> dict:
+              impl: str = "auto", tag: str = "",
+              method: str = "cp_als") -> dict:
     """Dry-run the paper's own CP-ALS workload (distributed, medium-grained).
 
     The per-mode plan is derived from a scaled synthetic replica and threads
-    into the lowered iteration (each mode's local MTTKRP strategy)."""
+    into the lowered iteration (each mode's local MTTKRP strategy).  The
+    lowered iteration is the shard_map CP-ALS body, so ``method`` must be
+    distributed-capable (``MethodSpec.supports_dist``) — others are rejected
+    up front with the capability listing, same as ``dist_cp_als``."""
     from repro.core.distributed import _local_impls_of, build_dist_cpals_lowered
+    from repro.methods import available_methods, get_method
     from repro.utils.report import plan_report
 
-    plan = plan_cpals_workload(workload, policy=impl)
-    print(plan_report(plan))
+    if not get_method(method).supports_dist:
+        raise ValueError(
+            f"method {method!r} has no distributed iteration to dry-run "
+            f"(MethodSpec.supports_dist=False); distributed-capable "
+            f"methods: {available_methods(dist=True)}")
+    plan = plan_cpals_workload(workload, policy=impl, method=method)
+    print(plan_report(plan, method=method))
     local_impls = _local_impls_of(plan)
     if mode_order == "auto":
         # the lowering sorts modes longest-first; realign the per-mode impls
@@ -298,6 +320,7 @@ def run_cpals(workload: str, *, multi_pod: bool, out_dir: Path = ARTIFACTS,
                                              mode_order=mode_order,
                                              local_impls=local_impls)
     info["plan"] = {f"mode{p.mode}": p.impl for p in plan.modes}
+    info["method"] = method
     t_lower = time.time() - t0
     t0 = time.time()
     compiled = lowered.compile()
@@ -417,6 +440,7 @@ def main() -> None:
                   shard_c=bool(overrides.get("shard_c")),
                   mode_order=overrides.get("mode_order", "natural"),
                   impl=overrides.get("impl", "auto"),
+                  method=overrides.get("method", "cp_als"),
                   tag=args.tag)
     else:
         run_cell(args.arch, args.shape, multi_pod=mp,

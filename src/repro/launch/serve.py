@@ -81,39 +81,67 @@ def serve(arch: str, *, smoke: bool, batch: int, prompt_len: int, gen: int,
 def serve_cpd(workload: str, *, smoke: bool, batch: int, queries: int,
               rank: int = 16, niters: int = 10, policy: str = "auto",
               seed: int = 0, reorder: str = "identity",
-              cache: str | None = None) -> dict:
+              cache: str | None = None, method: str = "cp_als") -> dict:
     """Decompose a paper workload under a per-mode plan, then serve batched
-    reconstruction queries (``CPDecomp.values_at``) from the factor model.
+    reconstruction queries (``values_at``) from the factor model.
 
-    This is the decomposition-serving scenario: the CP model is the
+    This is the decomposition-serving scenario: the decomposition is the
     compressed representation; a query is a coordinate batch and the answer
     is the reconstructed values.  ``--smoke`` scales the tensor to CPU size;
     the plan (and its report) is printed so the per-mode impl choice is
     visible at launch.
 
+    ``--method`` selects from the decomposition-method registry
+    (``repro.methods``): ``cp_als`` (default), ``cp_nn_hals``,
+    ``tucker_hooi`` (planned against the ttmc kernel; ``--rank`` broadcasts
+    to every mode), or ``cp_als_streaming`` (folds the tensor in as chunk
+    batches).  Every method serves queries through the same ``values_at``
+    interface, so the serving loop below is method-agnostic.
+
     The tensor goes through ``repro.ingest``: ``--reorder`` applies a
     locality-aware reordering (queries/factors stay in original labels —
     the handle inverts the relabeling on the way out) and ``--cache`` makes
     a repeat launch on the same tensor skip sort + stats entirely."""
-    from repro.core import cp_als, paper_dataset
+    from repro.core import paper_dataset
     from repro.ingest import ingest
+    from repro.methods import fit as fit_method, get_method
     from repro.utils.report import plan_report
 
+    spec = get_method(method)  # raises with the registry listing if unknown
     key = jax.random.PRNGKey(seed)
     scale = 0.002 if smoke else 1.0
     t = paper_dataset(CPALS_DATASET[workload], key, scale=scale)
     t0 = time.time()
     ing = ingest(t, reorder=reorder, cache=cache)
     t_ingest = time.time() - t0
-    plan = ing.plan(policy, rank=rank)
-    print(plan_report(plan, reorder_deltas=ing.reorder_deltas()))
 
-    # decompose under the plan (one driver — cp_als — owns the ALS loop;
-    # make_cpals_step in launch/steps.py is the per-iteration entry for
-    # callers that need to own the loop themselves)
-    t0 = time.time()
-    dec = cp_als(ing, rank, niters=niters, plan=plan, key=key)
-    jax.block_until_ready(dec.lmbda)
+    # decompose via the registry's fit() (make_cpals_step in
+    # launch/steps.py is the per-iteration entry for callers that need to
+    # own the loop themselves)
+    if spec.supports_streaming:
+        # streaming folds chunk batches through COO reductions and never
+        # executes a per-mode plan — don't print one it won't run
+        print(f"# method={method}: chunked gather_scatter fold, "
+              "no per-mode plan")
+        plan_summary = "streaming:gather_scatter"
+        t0 = time.time()
+        dec = fit_method(ing, rank, method=method, niters=niters, key=key,
+                         n_chunks=8)
+    else:
+        if spec.kernel == "ttmc":
+            from repro.methods.tucker_hooi import _kron_widths, _resolve_ranks
+
+            widths = _kron_widths(_resolve_ranks(rank, ing.dims))
+            plan = ing.plan(policy, rank=widths, kernel="ttmc")
+        else:
+            plan = ing.plan(policy, rank=rank)
+        print(plan_report(plan, reorder_deltas=ing.reorder_deltas(),
+                          method=method))
+        plan_summary = plan.summary()
+        t0 = time.time()
+        dec = fit_method(ing, rank, method=method, niters=niters, plan=plan,
+                         key=key)
+    jax.block_until_ready(dec.fit)
     t_decomp = time.time() - t0
 
     # serve: batched coordinate -> reconstructed-value queries, in the
@@ -132,7 +160,7 @@ def serve_cpd(workload: str, *, smoke: bool, batch: int, queries: int,
     t_serve = time.time() - t0
 
     return {"fit": float(dec.fit), "decompose_s": t_decomp,
-            "serve_s": t_serve, "plan": plan.summary(),
+            "serve_s": t_serve, "plan": plan_summary, "method": method,
             "ingest_s": t_ingest, "cache_hit": ing.cache_hit,
             "qps": n_batches * batch / max(t_serve, 1e-9)}
 
@@ -151,6 +179,10 @@ def main() -> None:
     ap.add_argument("--iters", type=int, default=10)
     ap.add_argument("--impl", default="auto",
                     help="cpals serving: planner policy (auto or impl name)")
+    ap.add_argument("--method", default="cp_als",
+                    help="cpals serving: decomposition method "
+                    "(repro.methods registry: cp_als/cp_nn_hals/"
+                    "tucker_hooi/cp_als_streaming)")
     ap.add_argument("--reorder", default="identity",
                     help="cpals serving: ingest reordering "
                     "(identity/degree_sort/random_block)")
@@ -162,8 +194,10 @@ def main() -> None:
         out = serve_cpd(args.arch, smoke=args.smoke,
                         batch=args.batch, queries=args.queries,
                         rank=args.rank, niters=args.iters, policy=args.impl,
-                        reorder=args.reorder, cache=args.cache)
-        print(f"[serve] plan {out['plan']}  fit {out['fit']:.4f}  "
+                        reorder=args.reorder, cache=args.cache,
+                        method=args.method)
+        print(f"[serve] method {out['method']}  plan {out['plan']}  "
+              f"fit {out['fit']:.4f}  "
               f"ingest {out['ingest_s']:.2f}s"
               f"{' (cache hit)' if out['cache_hit'] else ''}  "
               f"decompose {out['decompose_s']:.2f}s  "

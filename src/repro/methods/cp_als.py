@@ -1,0 +1,225 @@
+"""CP-ALS (the paper's Algorithm 1) behind the method registry.
+
+The iteration machinery (fused/timed iteration bodies, the state pytrees,
+the workspace builders) stays in ``repro.core.cpals`` — it is shared with
+``launch/steps.make_cpals_step`` and the distributed driver.  What lives
+here is the *driver loop*: plan -> sort -> iterate -> (checkpoint / early
+stop), now one registered method among several instead of the hardcoded
+only algorithm.  ``repro.core.cp_als`` re-exports this function, so every
+historical call site keeps working.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.coo import SparseTensor
+from repro.core.cpals import (CPALSState, CPDecomp, _iteration,
+                              _iteration_timed, _timed, build_workspace,
+                              init_factors, resolve_plan)
+from repro.core.gram import gram
+
+from .registry import DecompState, MethodSpec, make_state, register_method
+
+Array = jax.Array
+
+
+def _as_cpals_state(state) -> CPALSState:
+    """Accept either the historical CPALSState or the shared DecompState."""
+    if state is None or isinstance(state, CPALSState):
+        return state
+    if isinstance(state, DecompState):
+        return CPALSState(tuple(state.factors), state.aux["lmbda"],
+                          state.fit, state.fit_prev, state.iteration)
+    raise TypeError(
+        f"state must be a CPALSState or repro.methods.DecompState, "
+        f"got {type(state).__name__}")
+
+
+def cpals_state_to_decomp(state: CPALSState) -> DecompState:
+    """CPALSState -> the shared protocol (lmbda rides in ``aux``)."""
+    return DecompState(tuple(state.factors), {"lmbda": state.lmbda},
+                       state.fit, state.fit_prev, state.iteration)
+
+
+def resolve_ingested(t, name: str, *, block, row_tile):
+    """Shared driver preamble: unwrap an ``Ingested`` handle (validating
+    that an explicit tile request does not conflict with the ingest-time
+    geometry) into ``(ingested_or_None, tensor, block, row_tile)``."""
+    ing = None
+    if not isinstance(t, SparseTensor):
+        from repro.ingest import Ingested
+
+        if not isinstance(t, Ingested):
+            raise TypeError(
+                f"{name} takes a SparseTensor or repro.ingest.Ingested, "
+                f"got {type(t).__name__}")
+        ing = t
+        t = ing.tensor
+        # the ingest-time tile geometry is authoritative; an explicit
+        # conflicting request must fail loudly, not be silently ignored
+        for pname, asked, have in (("block", block, ing.block),
+                                   ("row_tile", row_tile, ing.row_tile)):
+            if asked is not None and asked != have:
+                raise ValueError(
+                    f"{name} was asked for {pname}={asked} but this tensor "
+                    f"was ingested with {pname}={have}; re-ingest with "
+                    "tile=(block, row_tile) instead")
+    return ing, t, (block if block is not None else 512), (
+        row_tile if row_tile is not None else 128)
+
+
+def record_iteration(monitor, dt: float) -> None:
+    """Feed one iteration's wall time to a StragglerMonitor (if any)."""
+    if monitor is not None:
+        from repro.dist.straggler import record_step_times
+
+        record_step_times(monitor, dt)
+
+
+def cp_als(
+    t,
+    rank: int,
+    *,
+    niters: int = 20,
+    tol: float = 0.0,
+    impl: str = "segment",
+    plan=None,
+    key: Array | None = None,
+    block: int | None = None,
+    row_tile: int | None = None,
+    timers: dict | None = None,
+    verbose: bool = False,
+    first_norm: str = "max",
+    with_fit: bool = True,
+    state: CPALSState | DecompState | None = None,
+    checkpoint_cb: Callable[[CPALSState], None] | None = None,
+    monitor=None,
+) -> CPDecomp:
+    """Run CP-ALS per Algorithm 1.
+
+    tol == 0 reproduces the paper's fixed-20-iteration experiments; tol > 0
+    stops when |fit - fit_prev| < tol (the "fit ceases to improve" branch).
+    ``state``/``checkpoint_cb`` give restartable long decompositions
+    (``state`` may be the historical :class:`CPALSState` or the shared
+    :class:`repro.methods.DecompState`).
+
+    Execution strategy: ``impl`` is a planner policy — ``"auto"`` selects an
+    MTTKRP implementation *per mode* from measured tensor statistics (the
+    paper's §V-D regime rules), any registered name pins all modes.  Pass a
+    prebuilt ``plan`` (:class:`repro.plan.DecompPlan`) to skip planning.
+
+    ``with_fit=False`` skips the fit computation entirely (it needs the
+    final mode's MTTKRP and all grams — cheap but not free); the returned
+    fit is then the last *computed* one (a restored state's, else NaN) —
+    never a fabricated 0.0.
+
+    ``t`` may also be a :class:`repro.ingest.Ingested` handle: planning then
+    reuses the stats measured at ingest, workspaces come from the ingest
+    cache when warm (skipping the sort entirely), and the returned factors
+    are mapped back to the tensor's ORIGINAL labels through the handle's
+    inverse relabeling.  (``state``/``checkpoint_cb`` operate in the
+    relabeled space.)
+
+    ``monitor``: optional :class:`repro.dist.StragglerMonitor`; per-iteration
+    wall times are recorded so imbalance shows up at the driver.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    if not with_fit and tol > 0.0:
+        raise ValueError("tol > 0 needs the fit; drop with_fit=False")
+    state = _as_cpals_state(state)
+
+    ing, t, block, row_tile = resolve_ingested(t, "cp_als", block=block,
+                                               row_tile=row_tile)
+
+    # --- Plan + Sort / CSF build (paper's pre-processing stage: the stats
+    # pass and the workspace sort are both host-side, per-mode O(nnz) work,
+    # timed together under the paper's "Sort" key; with an Ingested handle
+    # both stages may be pure cache reads) ---
+    def _plan_and_build():
+        if ing is not None:
+            p = plan if plan is not None else ing.plan(impl, rank=rank)
+            return p, ing.workspace(p)
+        p = resolve_plan(t, impl, plan, rank=rank, block=block,
+                         row_tile=row_tile)
+        return p, build_workspace(t, p)
+
+    if timers is not None:
+        plan, ws = _timed(timers, "sort", _plan_and_build)
+    else:
+        plan, ws = _plan_and_build()
+    impls = plan.impls
+
+    norm_x_sq = jnp.sum(t.vals.astype(jnp.float32) ** 2)
+
+    if state is None:
+        factors = init_factors(t.dims, rank, key, dtype=t.vals.dtype)
+        lmbda = jnp.ones((rank,), dtype=t.vals.dtype)
+        fit = jnp.array(0.0 if with_fit else jnp.nan, dtype=t.vals.dtype)
+        fit_prev = jnp.array(0.0, dtype=t.vals.dtype)
+        start_iter = 0
+    else:
+        factors = tuple(state.factors)
+        lmbda, fit = state.lmbda, state.fit
+        # the next iteration's tol check compares against the last COMPUTED
+        # fit — state.fit, not the stored delta record — so a tol>0 resume
+        # stops at the same iteration as the uninterrupted run
+        fit_prev = state.fit
+        start_iter = int(state.iteration)
+
+    grams = tuple(gram(a) for a in factors)
+
+    for it in range(start_iter, niters):
+        norm_kind = first_norm if it == 0 else "2"
+        t0 = time.perf_counter()
+        if timers is not None:
+            factors, grams, lmbda, fit_new = _iteration_timed(
+                ws, factors, grams, norm_x_sq, timers, impls=impls,
+                norm_kind=norm_kind, with_fit=with_fit
+            )
+        else:
+            factors, grams, lmbda, fit_new = _iteration(
+                ws, tuple(factors), grams, norm_x_sq, impls=impls,
+                norm_kind=norm_kind, with_fit=with_fit
+            )
+        if with_fit:
+            fit = fit_new
+        record_iteration(monitor, time.perf_counter() - t0)
+        if verbose:
+            print(f"  its = {it + 1}  fit = {float(fit):.6f}  "
+                  f"delta = {float(fit - fit_prev):+.3e}")
+        if checkpoint_cb is not None:
+            checkpoint_cb(
+                CPALSState(
+                    tuple(factors), lmbda, fit, fit_prev,
+                    jnp.array(it + 1, dtype=jnp.int32),
+                )
+            )
+        if tol > 0.0 and it > 0 and abs(float(fit) - float(fit_prev)) < tol:
+            fit_prev = fit
+            break
+        fit_prev = fit
+
+    decomp = CPDecomp(factors=tuple(factors), lmbda=lmbda, fit=fit)
+    if ing is not None:
+        decomp = ing.restore(decomp)
+    return decomp
+
+
+register_method(MethodSpec(
+    name="cp_als",
+    fn=cp_als,
+    family="cp",
+    kernel="mttkrp",
+    supports_dist=True,
+    supports_streaming=False,
+    nonnegative=False,
+    supports_order_gt3=True,
+    monotone_fit=True,
+    description="SPLATT-style CP-ALS (paper Algorithm 1): Cholesky solve "
+                "per mode over the planned MTTKRP registry",
+))

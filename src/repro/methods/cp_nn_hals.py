@@ -1,0 +1,179 @@
+"""Nonnegative CP via hierarchical ALS (HALS) on the shared kernel stack.
+
+HALS (Cichocki & Phan's rank-one residual scheme) replaces CP-ALS's joint
+Cholesky solve per mode with R sequential column updates, each a closed-form
+nonnegative projection:
+
+    a_r  <-  [ (M[:, r] - sum_{s != r} a_s V[s, r]) / V[r, r] ]_+
+
+where M is the very same per-mode MTTKRP the planner schedules for CP-ALS
+and V the very same Hadamard-of-Grams — i.e. the sparse kernel work per
+iteration is *identical* to CP-ALS; only the tiny dense (I_n x R) update
+changes.  That is the Phipps & Kolda observation this subsystem is built
+around: nonnegative CP rides the performance-portable kernel layer
+unchanged.
+
+The objective is monotonically non-increasing under exact column updates,
+so the reported fit is non-decreasing (up to float noise) — asserted by
+``tests/test_methods.py``.  Factors stay elementwise >= 0 by construction
+(init is uniform-positive, every update clamps at 0); the returned
+:class:`~repro.core.cpals.CPDecomp` is column-normalized at the end so
+``lmbda`` is nonnegative too.
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cpals import CPDecomp, _timed, build_workspace, init_factors, \
+    resolve_plan
+from repro.core.gram import gram, hadamard_grams, kruskal_fit, normalize
+from repro.core.mttkrp import mttkrp
+
+from .cp_als import record_iteration, resolve_ingested
+from .registry import DecompState, MethodSpec, make_state, register_method
+
+Array = jax.Array
+
+# Floor on the column's curvature V[r, r] before dividing: a fully collapsed
+# column (all-zero factor column everywhere) has V[r, r] == 0 and must stay
+# zero instead of producing inf/NaN.
+_HALS_EPS = 1e-12
+
+
+@partial(jax.jit, static_argnames=("impls",))
+def _hals_iteration(ws, factors, grams, norm_x_sq, *, impls):
+    """One full HALS sweep (every mode, every column); returns the same
+    (factors, grams, fit) contract as the CP-ALS iteration body.  The column
+    loop is unrolled at trace time (R is static and small — paper uses 35).
+    """
+    factors = list(factors)
+    grams = list(grams)
+    order = len(factors)
+    rank = factors[0].shape[1]
+    m_last = None
+    for n in range(order):
+        v = hadamard_grams(grams, n)
+        m_mat = mttkrp(ws[n], factors, n, impl=impls[n])
+        a = factors[n]
+        for r in range(rank):
+            # M[:, r] - A V[:, r] + a_r V[r, r]  ==  M[:, r] - sum_{s != r} ...
+            resid = m_mat[:, r] - a @ v[:, r] + a[:, r] * v[r, r]
+            a = a.at[:, r].set(
+                jnp.maximum(resid / jnp.maximum(v[r, r], _HALS_EPS), 0.0))
+        factors[n] = a
+        grams[n] = gram(a)
+        m_last = m_mat
+    # <X, Xhat> falls out of the final mode's MTTKRP (SPLATT's inner-product
+    # trick) with unit lambda — the factors carry their own scale in HALS.
+    ones = jnp.ones((rank,), dtype=factors[0].dtype)
+    fit = kruskal_fit(norm_x_sq, ones, grams, m_last, factors[-1])
+    return tuple(factors), tuple(grams), fit
+
+
+def cp_nn_hals(
+    t,
+    rank: int,
+    *,
+    niters: int = 50,
+    tol: float = 0.0,
+    impl: str = "segment",
+    plan=None,
+    key: Array | None = None,
+    block: int | None = None,
+    row_tile: int | None = None,
+    timers: dict | None = None,
+    verbose: bool = False,
+    state: DecompState | None = None,
+    checkpoint_cb: Callable[[DecompState], None] | None = None,
+    monitor=None,
+) -> CPDecomp:
+    """Nonnegative CP decomposition via HALS.
+
+    Same planner interface as :func:`repro.methods.cp_als.cp_als` (``impl``
+    policy / prebuilt ``plan`` / ``Ingested`` handles); the MTTKRP registry
+    and gram machinery are reused unchanged.  Returns a
+    :class:`~repro.core.cpals.CPDecomp` with elementwise-nonnegative factors
+    and nonnegative ``lmbda`` (columns 2-normalized at the end).
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    ing, t, block, row_tile = resolve_ingested(t, "cp_nn_hals", block=block,
+                                               row_tile=row_tile)
+
+    def _plan_and_build():
+        if ing is not None:
+            p = plan if plan is not None else ing.plan(impl, rank=rank)
+            return p, ing.workspace(p)
+        p = resolve_plan(t, impl, plan, rank=rank, block=block,
+                         row_tile=row_tile)
+        return p, build_workspace(t, p)
+
+    if timers is not None:
+        plan_, ws = _timed(timers, "sort", _plan_and_build)
+    else:
+        plan_, ws = _plan_and_build()
+    impls = plan_.impls
+
+    norm_x_sq = jnp.sum(t.vals.astype(jnp.float32) ** 2)
+
+    if state is None:
+        # uniform-positive init: nonnegative from the first iterate
+        factors = init_factors(t.dims, rank, key, dtype=t.vals.dtype)
+        fit = jnp.array(0.0, dtype=t.vals.dtype)
+        fit_prev = jnp.array(0.0, dtype=t.vals.dtype)
+        start_iter = 0
+    else:
+        factors = tuple(state.factors)
+        # compare the next fit against the last COMPUTED one (see cp_als)
+        fit, fit_prev = state.fit, state.fit
+        start_iter = int(state.iteration)
+
+    grams = tuple(gram(a) for a in factors)
+
+    for it in range(start_iter, niters):
+        t0 = time.perf_counter()
+        factors, grams, fit = _hals_iteration(
+            ws, tuple(factors), grams, norm_x_sq, impls=impls)
+        record_iteration(monitor, time.perf_counter() - t0)
+        if verbose:
+            print(f"  its = {it + 1}  fit = {float(fit):.6f}  "
+                  f"delta = {float(fit - fit_prev):+.3e}")
+        if checkpoint_cb is not None:
+            checkpoint_cb(make_state(factors, {}, fit, fit_prev, it + 1))
+        if tol > 0.0 and it > 0 and abs(float(fit) - float(fit_prev)) < tol:
+            fit_prev = fit
+            break
+        fit_prev = fit
+
+    # canonical Kruskal form: unit-2-norm nonnegative columns, scale in
+    # lmbda (zero-safe: collapsed columns keep lmbda == 0)
+    normed, lams = zip(*(normalize(a, kind="2") for a in factors))
+    lmbda = jnp.ones((rank,), dtype=t.vals.dtype)
+    for lam in lams:
+        lmbda = lmbda * lam
+    decomp = CPDecomp(factors=tuple(normed), lmbda=lmbda, fit=fit)
+    if ing is not None:
+        decomp = ing.restore(decomp)
+    return decomp
+
+
+register_method(MethodSpec(
+    name="cp_nn_hals",
+    fn=cp_nn_hals,
+    family="cp",
+    kernel="mttkrp",
+    supports_dist=False,   # sequential column updates don't map onto the
+                           # medium-grained shard_map body (yet)
+    supports_streaming=False,
+    nonnegative=True,
+    supports_order_gt3=True,
+    monotone_fit=True,
+    description="nonnegative CP via hierarchical ALS: rank-one column "
+                "updates with nonnegative projection over the planned "
+                "MTTKRP registry",
+))

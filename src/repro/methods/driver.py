@@ -1,0 +1,103 @@
+"""``fit()`` — the one entry point over the decomposition-method registry.
+
+    from repro.methods import fit
+
+    dec = fit(ingest("data.tns"), rank=16)                      # CP-ALS
+    dec = fit(t, rank=16, method="cp_nn_hals", niters=80)       # nonneg CP
+    dec = fit(t, rank=(8, 8, 8), method="tucker_hooi")          # Tucker
+    dec = fit("big.tnsb", rank=16, method="cp_als_streaming",
+              chunk_nnz=1 << 22)                                # streaming
+
+Every method shares the planner/ingest stack (``plan=`` skips planning,
+``Ingested`` handles reuse ingest-time stats and cached workspaces, factors
+come back in original labels) and the :class:`DecompState` resume protocol
+(``state=`` / ``checkpoint_cb=``).  The iteration bodies are jitted; the
+driver itself is a thin capability-checked dispatch.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from .registry import DecompState, get_method
+
+
+def fit(
+    x,
+    rank,
+    *,
+    method: str = "cp_als",
+    niters: Optional[int] = None,
+    tol: float = 0.0,
+    impl: Optional[str] = None,
+    plan=None,
+    key=None,
+    state: Optional[DecompState] = None,
+    checkpoint_cb: Optional[Callable[[DecompState], None]] = None,
+    monitor=None,
+    verbose: bool = False,
+    **method_kwargs,
+):
+    """Decompose ``x`` with a registered method.
+
+    ``x``: a :class:`~repro.core.coo.SparseTensor`, a
+    :class:`~repro.ingest.Ingested` handle, or — for streaming-capable
+    methods — a ``.tns``/``.tnsb`` path or chunk list.
+    ``rank``: int for the CP family; int or per-mode tuple for Tucker.
+    ``method``: a name from :func:`repro.methods.available_methods`.
+    ``checkpoint_cb`` always receives the shared :class:`DecompState`
+    (method-specific state classes are converted), so one checkpointing
+    path serves every method.
+
+    Remaining keywords (``decay=``, ``chunk_nnz=``, ``first_norm=``,
+    ``timers=``, ...) forward to the method implementation.
+    """
+    spec = get_method(method)
+
+    is_tensorish = hasattr(x, "order")  # SparseTensor / Ingested both have it
+    if not is_tensorish and not spec.supports_streaming:
+        raise TypeError(
+            f"method {method!r} needs a materialized tensor "
+            f"(SparseTensor or Ingested), got {type(x).__name__}; only "
+            "streaming-capable methods accept paths/chunk sources "
+            f"(see available_methods(streaming=True))")
+    if is_tensorish and x.order > 3 and not spec.supports_order_gt3:
+        raise ValueError(
+            f"method {method!r} does not support order-{x.order} tensors")
+
+    ing = None
+    if spec.supports_streaming and is_tensorish:
+        from repro.core.coo import SparseTensor
+        from repro.ingest import Ingested
+
+        if isinstance(x, Ingested):
+            # streaming folds raw chunks and never builds the handle's
+            # sorted workspaces: unwrap the (relabeled) tensor here and
+            # restore original labels on the way out, like the batch
+            # methods do internally
+            ing = x
+            x = ing.tensor
+        elif not isinstance(x, SparseTensor):
+            raise TypeError(
+                f"method {method!r} takes a SparseTensor, an Ingested "
+                f"handle, a .tns/.tnsb path, or a chunk list; got "
+                f"{type(x).__name__}")
+
+    kwargs = dict(method_kwargs)
+    if niters is not None:
+        kwargs["niters"] = niters
+    if impl is not None:
+        kwargs["impl"] = impl
+    if spec.name == "cp_als" and checkpoint_cb is not None:
+        # cp_als natively emits the historical CPALSState; normalize to the
+        # shared protocol so callers see one state type for every method
+        from .cp_als import cpals_state_to_decomp
+
+        user_cb = checkpoint_cb
+        checkpoint_cb = lambda s: user_cb(cpals_state_to_decomp(s))
+
+    result = spec.fn(x, rank, tol=tol, plan=plan, key=key, state=state,
+                     checkpoint_cb=checkpoint_cb, monitor=monitor,
+                     verbose=verbose, **kwargs)
+    if ing is not None:
+        result = ing.restore(result)
+    return result

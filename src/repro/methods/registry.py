@@ -1,0 +1,175 @@
+"""The decomposition-method registry: capability-declared method specs and
+the shared checkpointable state protocol.
+
+The stack under this package — per-mode planner (``repro.plan``), unified
+CSF workspace + kernel registries (``repro.core``), ingest cache
+(``repro.ingest``), collectives (``repro.dist``) — is algorithm-agnostic
+plumbing.  This module is the seam that opens it to multiple decomposition
+algorithms, mirroring the ``core/mttkrp.py`` ImplSpec design one level up:
+each method is a first-class :class:`MethodSpec` that declares its family,
+the sparse kernel it plans against, and the execution contexts it supports
+(distributed shard_map, chunked streaming), so drivers validate capability
+instead of hardcoding method names.
+
+Registered methods (see the sibling modules):
+
+==================  =======================================================
+method              what it computes
+==================  =======================================================
+``cp_als``          SPLATT-style CP-ALS (the paper's Algorithm 1), moved
+                    here from ``core/cpals.py`` behind the protocol.
+``cp_nn_hals``      nonnegative CP via hierarchical ALS: rank-one column
+                    updates with nonnegative projection, reusing the MTTKRP
+                    registry and gram machinery unchanged.
+``tucker_hooi``     sparse Tucker via HOOI: per-mode chain-of-modes TTMc
+                    (``core/ttmc.py``) + thin-SVD truncation; the core
+                    tensor is recovered by the final TTMc.
+``cp_als_streaming`` online CP-ALS over chunk batches from
+                    ``ingest.reader`` with exponentially weighted MTTKRP
+                    accumulators — no full COO materialization.
+==================  =======================================================
+
+This table is kept in sync with ``docs/architecture.md`` ("The method
+registry").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# shared state protocol
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class DecompState:
+    """Checkpointable mid-run state shared by every registered method.
+
+    factors:   per-mode factor matrices (the one field every method has).
+    aux:       method-specific leaves as a dict pytree — ``{"lmbda": ...}``
+               for the CP family, ``{}`` for Tucker (the core is a function
+               of the factors and is recomputed on resume).
+    fit/fit_prev: the convergence trajectory (NaN when never computed).
+    iteration: int32 scalar; ``fit(..., state=s)`` resumes from here.
+
+    The pytree round-trips through ``repro.checkpoint.manager`` (every leaf
+    is an array), and (iteration, factors, aux) fully determine the rest of
+    the computation for every registered method — the bit-exact-resume
+    contract ``tests/test_checkpoint.py`` asserts.
+    """
+
+    factors: tuple[Array, ...]
+    aux: dict[str, Array]
+    fit: Array
+    fit_prev: Array
+    iteration: Array  # int32 scalar
+
+    def tree_flatten(self):
+        return (self.factors, self.aux, self.fit, self.fit_prev,
+                self.iteration), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux_data, children):
+        factors, aux, fit, fit_prev, iteration = children
+        return cls(tuple(factors), dict(aux), fit, fit_prev, iteration)
+
+
+def make_state(factors, aux, fit, fit_prev, iteration: int) -> DecompState:
+    return DecompState(tuple(factors), dict(aux), fit, fit_prev,
+                       jnp.array(iteration, dtype=jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# the registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MethodSpec:
+    """One decomposition method and its declared capabilities.
+
+    family:     "cp" (Kruskal result) or "tucker" (core + orthonormal
+                factors).
+    kernel:     the sparse kernel registry the planner scores for this
+                method — "mttkrp" or "ttmc" (``repro.plan``'s ``kernel=``).
+    supports_dist: whether the method can execute under the shard_map
+                medium-grained driver (``core/distributed.py``); drivers
+                raise a clear error for unsupported combos instead of
+                silently computing something else.
+    supports_streaming: whether the method consumes chunk sources (paths /
+                chunk iterators from ``ingest.reader``) without a full COO
+                materialization.
+    nonnegative: whether the returned factors are elementwise >= 0 by
+                construction.
+    monotone_fit: ALS-family guarantee the tests assert (fit non-decreasing
+                up to float tolerance).
+    """
+
+    name: str
+    fn: Callable[..., object]
+    family: str
+    kernel: str = "mttkrp"
+    supports_dist: bool = False
+    supports_streaming: bool = False
+    nonnegative: bool = False
+    supports_order_gt3: bool = True
+    monotone_fit: bool = True
+    description: str = ""
+
+
+METHODS: dict[str, MethodSpec] = {}
+
+
+def register_method(spec: MethodSpec) -> MethodSpec:
+    """Add (or replace) a method in the registry."""
+    if spec.family not in ("cp", "tucker"):
+        raise ValueError(
+            f"bad family {spec.family!r} for method {spec.name!r}")
+    if spec.kernel not in ("mttkrp", "ttmc"):
+        raise ValueError(
+            f"bad kernel {spec.kernel!r} for method {spec.name!r}")
+    METHODS[spec.name] = spec
+    return spec
+
+
+def get_method(name: str) -> MethodSpec:
+    try:
+        return METHODS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown method {name!r}; one of {tuple(METHODS)}") from None
+
+
+def available_methods(*, family: Optional[str] = None,
+                      dist: Optional[bool] = None,
+                      streaming: Optional[bool] = None,
+                      nonnegative: Optional[bool] = None,
+                      order: int = 3) -> tuple[str, ...]:
+    """Names of methods whose declared capabilities cover the ask.
+
+    Each keyword is a filter (None = don't care): ``dist=True`` keeps only
+    methods that run under shard_map, ``streaming=True`` only those that
+    consume chunk sources, etc.  This is what the distributed/serving
+    drivers consult before dispatch."""
+    out = []
+    for name, spec in METHODS.items():
+        if family is not None and spec.family != family:
+            continue
+        if dist is not None and spec.supports_dist != dist:
+            continue
+        if streaming is not None and spec.supports_streaming != streaming:
+            continue
+        if nonnegative is not None and spec.nonnegative != nonnegative:
+            continue
+        if order > 3 and not spec.supports_order_gt3:
+            continue
+        out.append(name)
+    return tuple(out)

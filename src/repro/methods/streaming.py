@@ -1,0 +1,196 @@
+"""Streaming CP-ALS: chunked MTTKRP accumulation, no full COO in memory.
+
+The batch drivers materialize the whole non-zero set (plus per-mode sorted
+workspaces).  This method instead consumes a *chunk source*
+(``repro.ingest.reader.open_chunk_source``: a ``.tnsb`` mmap, a re-streamed
+``.tns``, or an in-memory split) and reconstitutes each mode's MTTKRP as a
+sum of per-chunk partials:
+
+    M_n  =  sum_chunks  MTTKRP(chunk, factors, n)
+
+Per-chunk partials are exact (each chunk owns a disjoint subset of the
+non-zeros at full dims), so with ``decay=1`` (the default) an iteration is
+numerically the batch ALS iteration up to summation order — the acceptance
+contract (streamed fit == batch fit within 1e-3) in
+``tests/test_methods.py``.  The dense updates (Hadamard-of-Grams, Cholesky,
+normalize, fit) are the very routines ``core/cpals.py`` jits, reused
+unchanged.
+
+``decay < 1`` makes the fold *exponentially weighted*: the accumulator is
+``acc <- decay * acc + MTTKRP(chunk)`` as chunks arrive, so a chunk ``k``
+positions from the end of the stream enters with weight ``decay**k`` — the
+online-CP discounting for time-ordered streams where the newest data should
+dominate (the per-mode Grams discount implicitly through the factors the
+fold produces).  The fold stays within one pass, so it is stable for any
+decay: no stale-scale accumulator ever meets a fresh Gram solve.
+
+Memory: one padded chunk resident at a time; no CSF sort (chunks arrive
+unsorted, so the planner's COO-consuming ``gather_scatter`` impl is the
+local reduction).  I/O: ``order`` passes over the source per iteration —
+the price of exact Gauss-Seidel updates.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cpals import (CPDecomp, _jit_fit, _jit_gram, _jit_hadamard,
+                              _jit_mttkrp, _jit_normalize, _jit_solve,
+                              init_factors)
+from repro.core.coo import SparseTensor
+from repro.core.gram import gram
+from repro.ingest.reader import open_chunk_source
+
+from .cp_als import record_iteration
+from .registry import DecompState, MethodSpec, make_state, register_method
+
+Array = jax.Array
+
+# Chunks are padded to a multiple of this so the per-chunk jitted MTTKRP
+# compiles for at most a couple of distinct shapes per source.
+_CHUNK_PAD = 4096
+
+# COO-consuming impls only: chunks arrive unsorted and are never CSF-built.
+_STREAM_IMPLS = ("gather_scatter",)
+
+
+def cp_als_streaming(
+    source,
+    rank: int,
+    *,
+    niters: int = 20,
+    tol: float = 0.0,
+    impl: str = "gather_scatter",
+    plan=None,
+    decay: float = 1.0,
+    chunk_nnz: int = 1 << 20,
+    n_chunks: Optional[int] = None,
+    dims=None,
+    key: Array | None = None,
+    verbose: bool = False,
+    first_norm: str = "max",
+    state: DecompState | None = None,
+    checkpoint_cb: Callable[[DecompState], None] | None = None,
+    monitor=None,
+) -> CPDecomp:
+    """Online CP-ALS over a chunk source.
+
+    ``source``: a ``.tns``/``.tnsb`` path, a :class:`SparseTensor` (split
+    into ``n_chunks`` / ``chunk_nnz``-sized pieces), or a list of same-dims
+    chunks.  ``dims`` forwards to the text reader (skips the scan pass).
+
+    ``decay``: per-chunk exponential weight of the MTTKRP fold (1 = plain
+    sum, numerically the batch iteration; <1 discounts older chunks of a
+    time-ordered stream).  ``tol``/``state``/``checkpoint_cb`` as in
+    :func:`repro.methods.cp_als.cp_als` — the fold lives within one pass,
+    so resume needs no accumulator state.
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    if not 0.0 < decay <= 1.0:
+        raise ValueError(f"decay must be in (0, 1], got {decay}")
+    if impl not in _STREAM_IMPLS:
+        raise ValueError(
+            f"cp_als_streaming executes COO chunk reductions only "
+            f"({_STREAM_IMPLS}); impl {impl!r} needs a sorted workspace, "
+            "which streaming never builds")
+    if plan is not None and not set(plan.impls) <= set(_STREAM_IMPLS):
+        raise ValueError(
+            f"cp_als_streaming cannot execute plan {plan.summary()!r}: "
+            f"chunk reductions express only {_STREAM_IMPLS}")
+
+    src = open_chunk_source(source, dims=dims, chunk_nnz=chunk_nnz,
+                            n_chunks=n_chunks)
+    dims = src.dims
+    order = len(dims)
+    dtype = None
+
+    # one accumulation pass for ||X||^2 (cheap: values only)
+    norm_x_sq = 0.0
+    for chunk in src:
+        norm_x_sq += float(jnp.sum(chunk.vals.astype(jnp.float32) ** 2))
+        dtype = chunk.vals.dtype
+    norm_x_sq = jnp.asarray(norm_x_sq, dtype=jnp.float32)
+
+    if state is None:
+        factors = init_factors(dims, rank, key, dtype=dtype)
+        lmbda = jnp.ones((rank,), dtype=dtype)
+        fit = jnp.array(0.0, dtype=dtype)
+        fit_prev = jnp.array(0.0, dtype=dtype)
+        start_iter = 0
+    else:
+        factors = tuple(state.factors)
+        lmbda = state.aux["lmbda"]
+        # compare the next fit against the last COMPUTED one (see cp_als)
+        fit, fit_prev = state.fit, state.fit
+        start_iter = int(state.iteration)
+
+    factors = list(factors)
+    grams = [gram(a) for a in factors]
+
+    def _mode_mttkrp(n: int) -> Array:
+        """Exponentially weighted fold of per-chunk MTTKRP partials for mode
+        ``n`` (one source pass): acc <- decay * acc + partial.  decay == 1
+        is the plain (batch-exact) sum; padding entries scatter exact zeros,
+        so padded chunks are no-ops."""
+        acc = None
+        for chunk in src:
+            part = _jit_mttkrp(chunk.pad_to(_CHUNK_PAD), tuple(factors),
+                               mode=n, impl="gather_scatter")
+            if acc is None:
+                acc = part
+            elif decay == 1.0:
+                acc = acc + part
+            else:
+                acc = decay * acc + part
+        if acc is None:
+            raise ValueError("chunk source yielded no chunks")
+        return acc
+
+    for it in range(start_iter, niters):
+        norm_kind = first_norm if it == 0 else "2"
+        t0 = time.perf_counter()
+        m_last = None
+        for n in range(order):
+            m_new = _mode_mttkrp(n)
+            v = _jit_hadamard(tuple(grams), mode=n)
+            a_new = _jit_solve(m_new, v)
+            a_new, lmbda = _jit_normalize(a_new, kind=norm_kind)
+            grams[n] = _jit_gram(a_new)
+            factors[n] = a_new
+            m_last = m_new
+        fit = _jit_fit(norm_x_sq, lmbda, tuple(grams), m_last, factors[-1])
+        record_iteration(monitor, time.perf_counter() - t0)
+        if verbose:
+            print(f"  its = {it + 1}  fit = {float(fit):.6f}  "
+                  f"delta = {float(fit - fit_prev):+.3e}")
+        if checkpoint_cb is not None:
+            checkpoint_cb(make_state(factors, {"lmbda": lmbda}, fit,
+                                     fit_prev, it + 1))
+        if tol > 0.0 and it > 0 and abs(float(fit) - float(fit_prev)) < tol:
+            fit_prev = fit
+            break
+        fit_prev = fit
+
+    return CPDecomp(factors=tuple(factors), lmbda=lmbda, fit=fit)
+
+
+register_method(MethodSpec(
+    name="cp_als_streaming",
+    fn=cp_als_streaming,
+    family="cp",
+    kernel="mttkrp",
+    supports_dist=False,   # the shard_map body owns a static partition; a
+                           # chunk stream has no stable device ownership
+    supports_streaming=True,
+    nonnegative=False,
+    supports_order_gt3=True,
+    monotone_fit=True,     # holds for the default decay == 1 (batch-exact)
+                           # fold; decay < 1 tracks an evolving target and
+                           # voids the guarantee
+    description="online CP-ALS over ingest.reader chunk batches with "
+                "exponentially weighted MTTKRP accumulators",
+))

@@ -30,9 +30,30 @@ import jax
 
 from repro.core.coo import SparseTensor
 from repro.core.csf import DEFAULT_BLOCK, DEFAULT_ROW_TILE, build_csf
-from repro.core.mttkrp import available_impls, get_impl, mttkrp
+from repro.core.mttkrp import REGISTRY, available_impls, get_impl, mttkrp
 
 from .stats import ModeStats, mode_stats, tensor_stats
+
+
+def _kernel_registry(kernel: str) -> dict:
+    """Impl table for a kernel family: "mttkrp" (CP family) or "ttmc" (the
+    Tucker chain-of-modes contraction — same ImplSpec shape, own table)."""
+    if kernel == "mttkrp":
+        return REGISTRY
+    if kernel == "ttmc":
+        from repro.core.ttmc import TTMC_REGISTRY
+
+        return TTMC_REGISTRY
+    raise ValueError(f"unknown kernel {kernel!r}; one of ('mttkrp', 'ttmc')")
+
+
+def _rank_for_mode(rank, mode: int) -> int:
+    """Per-mode scoring width: an int applies to every mode; a sequence
+    gives each mode its own width (the Tucker driver passes
+    prod_{m != mode} R_m — the TTMc's per-entry work multiplier)."""
+    if isinstance(rank, (int, float)):
+        return int(rank)
+    return int(rank[mode])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,6 +71,7 @@ class ModePlan:
     stats: Optional[ModeStats]
     costs: dict[str, float]  # candidate impl -> predicted/measured cost
     reason: str
+    kernel: str = "mttkrp"   # kernel family the impl belongs to
 
     @property
     def predicted_regime(self) -> str:
@@ -90,8 +112,8 @@ class DecompPlan:
         return " ".join(f"m{p.mode}:{p.impl}" for p in self.modes)
 
 
-def _layout_for(impl: str) -> str:
-    spec = get_impl(impl)
+def _layout_for(impl: str, *, registry: Optional[dict] = None) -> str:
+    spec = get_impl(impl, registry=registry)
     # "any"-layout impls (gather_scatter) run straight off COO when they are
     # the only consumer of a mode, skipping that mode's sort entirely.
     return "csf" if spec.layout == "csf" else "coo"
@@ -137,17 +159,24 @@ def _calibrate_mode(t: SparseTensor, mode: int, names, *, rank: int,
     return measured
 
 
-def plan_mode(t: SparseTensor, mode: int, *, rank: int,
+def plan_mode(t: SparseTensor, mode: int, *, rank,
               backend: str, block: int, row_tile: int,
               allow: Optional[Sequence[str]] = None,
               calibrate: bool = False,
-              stats: Optional[ModeStats] = None) -> ModePlan:
+              stats: Optional[ModeStats] = None,
+              kernel: str = "mttkrp") -> ModePlan:
     """Score every capability-compatible impl for one mode, pick the argmin.
 
     ``calibrate=True`` replaces the declared cost models with measured
     timings on the actual tensor (costs are then in milliseconds).
     ``stats``: precomputed :class:`ModeStats` (e.g. measured once at ingest
-    — ``repro.ingest``); when given, the stats pass is skipped."""
+    — ``repro.ingest``); when given, the stats pass is skipped.
+    ``kernel``: the sparse kernel family being planned — ``"mttkrp"`` (CP
+    family) or ``"ttmc"`` (Tucker); ``rank`` is the per-entry output width
+    the cost models score (an int, or a per-mode sequence — the Tucker
+    driver passes prod of the *other* modes' ranks)."""
+    registry = _kernel_registry(kernel)
+    mode_rank = _rank_for_mode(rank, mode)
     if stats is None:
         stats = mode_stats(t, mode, block=block, row_tile=row_tile)
     elif (stats.block, stats.row_tile) != (block, row_tile):
@@ -155,20 +184,25 @@ def plan_mode(t: SparseTensor, mode: int, *, rank: int,
             f"precomputed stats were measured for (block={stats.block}, "
             f"row_tile={stats.row_tile}), planner asked (block={block}, "
             f"row_tile={row_tile})")
-    names = available_impls(order=t.order, backend=backend, allow=allow)
+    names = available_impls(order=t.order, backend=backend, allow=allow,
+                            registry=registry)
     if not names:
         raise ValueError(
-            f"no registered MTTKRP impl covers order={t.order} on "
+            f"no registered {kernel} impl covers order={t.order} on "
             f"backend={backend!r} (allow={allow})")
     if calibrate:
-        costs = _calibrate_mode(t, mode, names, rank=rank, block=block,
+        if kernel != "mttkrp":
+            raise ValueError(
+                f"calibrate=True is implemented for the mttkrp kernel only "
+                f"(asked kernel={kernel!r}); use the predicted cost models")
+        costs = _calibrate_mode(t, mode, names, rank=mode_rank, block=block,
                                 row_tile=row_tile)
         unit = "ms"
     else:
         costs = {}
         for name in names:
-            spec = get_impl(name)
-            costs[name] = (spec.cost_model(stats, rank)
+            spec = get_impl(name, registry=registry)
+            costs[name] = (spec.cost_model(stats, mode_rank)
                            if spec.cost_model is not None else float("inf"))
         unit = ""
     winner = min(costs, key=costs.get)
@@ -178,16 +212,17 @@ def plan_mode(t: SparseTensor, mode: int, *, rank: int,
         f"{stats.regime} regime (collision={stats.collision_rate:.2f}, "
         f"padding={stats.padding_overhead:.2f}); {how} cost "
         f"{costs[winner]:.3g}{unit} vs next {runner_up:.3g}{unit}")
-    return ModePlan(mode=mode, impl=winner, layout=_layout_for(winner),
+    return ModePlan(mode=mode, impl=winner,
+                    layout=_layout_for(winner, registry=registry),
                     block=block, row_tile=row_tile, stats=stats,
-                    costs=costs, reason=reason)
+                    costs=costs, reason=reason, kernel=kernel)
 
 
 def plan_decomposition(
     t: SparseTensor,
     policy: str = "auto",
     *,
-    rank: int = 16,
+    rank=16,
     backend: Optional[str] = None,
     block: int = DEFAULT_BLOCK,
     row_tile: int = DEFAULT_ROW_TILE,
@@ -195,6 +230,7 @@ def plan_decomposition(
     calibrate: bool = False,
     with_stats: bool = True,
     stats: Optional[Sequence[ModeStats]] = None,
+    kernel: str = "mttkrp",
 ) -> DecompPlan:
     """Emit a :class:`DecompPlan` for ``t`` under ``policy``.
 
@@ -212,7 +248,11 @@ def plan_decomposition(
     ``stats``: precomputed per-mode statistics (one per mode, same tile
     geometry) — what ``repro.ingest`` measures once at ingestion so the
     planner never re-walks the tensor.
+    ``kernel``: the sparse kernel family whose registry is scored —
+    ``"mttkrp"`` (CP-family methods) or ``"ttmc"`` (Tucker/HOOI; the
+    Tucker driver passes a per-mode ``rank`` sequence of Kronecker widths).
     """
+    registry = _kernel_registry(kernel)
     if backend is None:
         backend = jax.default_backend()
     if stats is not None and len(stats) != t.order:
@@ -222,12 +262,14 @@ def plan_decomposition(
         modes = tuple(
             plan_mode(t, m, rank=rank, backend=backend, block=block,
                       row_tile=row_tile, allow=allow, calibrate=calibrate,
-                      stats=None if stats is None else stats[m])
+                      stats=None if stats is None else stats[m],
+                      kernel=kernel)
             for m in range(t.order))
         return DecompPlan(modes=modes, policy=policy, backend=backend,
                           rank=rank)
 
-    spec = get_impl(policy)  # raises with the registry listing if unknown
+    # raises with the registry listing if unknown
+    spec = get_impl(policy, registry=registry)
     if allow is not None and policy not in allow:
         raise ValueError(f"impl {policy!r} is not in the allowed set {allow}")
     if t.order > 3 and not spec.supports_order_gt3:
@@ -245,15 +287,20 @@ def plan_decomposition(
     else:
         stats_per_mode = (tensor_stats(t, block=block, row_tile=row_tile)
                           if with_stats or calibrate else [None] * t.order)
+    if calibrate and kernel != "mttkrp":
+        raise ValueError(
+            f"calibrate=True is implemented for the mttkrp kernel only "
+            f"(asked kernel={kernel!r}); use the predicted cost models")
     modes = []
     for m, stats in enumerate(stats_per_mode):
         if calibrate:
-            costs = _calibrate_mode(t, m, (policy,), rank=rank, block=block,
+            costs = _calibrate_mode(t, m, (policy,),
+                                    rank=_rank_for_mode(rank, m), block=block,
                                     row_tile=row_tile)
             reason = (f"fixed policy {policy!r}; measured "
                       f"{costs[policy]:.3g}ms")
         elif stats is not None:
-            cost = (spec.cost_model(stats, rank)
+            cost = (spec.cost_model(stats, _rank_for_mode(rank, m))
                     if spec.cost_model is not None else float("inf"))
             costs = {policy: cost}
             reason = f"fixed policy {policy!r}"
@@ -261,8 +308,9 @@ def plan_decomposition(
             costs = {}
             reason = f"fixed policy {policy!r} (stats skipped)"
         modes.append(ModePlan(
-            mode=m, impl=policy, layout=_layout_for(policy),
+            mode=m, impl=policy,
+            layout=_layout_for(policy, registry=registry),
             block=block, row_tile=row_tile, stats=stats,
-            costs=costs, reason=reason))
+            costs=costs, reason=reason, kernel=kernel))
     return DecompPlan(modes=tuple(modes), policy=policy, backend=backend,
                       rank=rank)

@@ -14,7 +14,7 @@ def load_cells(d: Path) -> list[dict]:
     return [json.loads(p.read_text()) for p in sorted(d.glob("*.json"))]
 
 
-def plan_report(plan, *, reorder_deltas=None) -> str:
+def plan_report(plan, *, reorder_deltas=None, method=None) -> str:
     """Per-mode planner table for a :class:`repro.plan.DecompPlan`.
 
     One row per mode: workspace layout, chosen impl, measured collision rate
@@ -25,14 +25,21 @@ def plan_report(plan, *, reorder_deltas=None) -> str:
     ``repro.ingest.Ingested.reorder_deltas()`` — renders a "reorder" column
     showing what the locality-aware reordering bought (negative collision /
     padding deltas are wins).
+
+    ``method``: the decomposition method executing the plan
+    (``repro.methods``); the "method" column renders it together with the
+    kernel family each mode was scored against (``mttkrp`` / ``ttmc``).
     """
     head = (f"# plan: policy={plan.policy} backend={plan.backend} "
-            f"rank={plan.rank}")
-    rows = ["| mode | rows | nnz/row | collision | padding | reorder "
-            "| layout | impl | regime | reason |",
-            "|---|---|---|---|---|---|---|---|---|---|"]
+            f"rank={plan.rank}"
+            + (f" method={method}" if method is not None else ""))
+    rows = ["| mode | method | rows | nnz/row | collision | padding "
+            "| reorder | layout | impl | regime | reason |",
+            "|---|---|---|---|---|---|---|---|---|---|---|"]
     for p in plan.modes:
         s = p.stats
+        kernel = getattr(p, "kernel", "mttkrp")
+        m_cell = f"{method}:{kernel}" if method is not None else kernel
         if s is not None:
             cells = (f"{s.rows} | {s.avg_nnz_per_row:.1f} "
                      f"| {s.collision_rate:.2f} | {s.padding_overhead:.2f}")
@@ -45,7 +52,7 @@ def plan_report(plan, *, reorder_deltas=None) -> str:
         else:
             re_cell = "-"
         rows.append(
-            f"| {p.mode} | {cells} | {re_cell} "
+            f"| {p.mode} | {m_cell} | {cells} | {re_cell} "
             f"| {p.layout} | **{p.impl}** | {p.predicted_regime} "
             f"| {p.reason} |")
     return "\n".join([head] + rows)

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    SparseTensor, random_sparse, from_factors, build_csf, build_csf_tiled,
+    random_sparse, from_factors, build_csf, build_csf_tiled,
     mttkrp, cp_als, init_factors, gram, hadamard_grams, solve_cholesky,
     normalize, kruskal_fit,
 )
@@ -86,21 +86,7 @@ def test_hadamard_grams_skips_mode():
 # CP-ALS end to end
 # ---------------------------------------------------------------------------
 
-def exact_lowrank_tensor(dims, true_rank, key):
-    """Fully-observed low-rank tensor in COO form (every cell a 'non-zero').
-
-    CP-ALS treats absent coordinates as structural zeros, so only a fully
-    observed low-rank tensor is itself low-rank — a sparse *sample* of one is
-    not (that would be tensor completion, a different SPLATT mode)."""
-    ks = jax.random.split(key, len(dims))
-    true = [jax.random.uniform(k, (d, true_rank)) + 0.1 for k, d in zip(ks, dims)]
-    grids = jnp.meshgrid(*[jnp.arange(d) for d in dims], indexing="ij")
-    inds = jnp.stack([g.reshape(-1) for g in grids], axis=1).astype(jnp.int32)
-    prod = jnp.ones((inds.shape[0], true_rank))
-    for m, a in enumerate(true):
-        prod = prod * a[inds[:, m]]
-    vals = jnp.sum(prod, axis=1)
-    return SparseTensor(inds=inds, vals=vals, dims=tuple(dims), nnz=inds.shape[0])
+from conftest import exact_lowrank_tensor  # noqa: E402 — shared construction
 
 
 @pytest.mark.parametrize("impl", ["gather_scatter", "segment"])
