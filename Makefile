@@ -27,11 +27,14 @@ bench-ingest:
 bench-methods:
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.bench_methods
 
+bench-api:
+	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.bench_api --json BENCH_api.json
+
 # no third-party linter is baked into the image; byte-compile every tree
 # (syntax + tabs/indentation errors) and import the package graph.
 lint:
 	$(PY) -m compileall -q src tests benchmarks examples
-	PYTHONPATH=$(PYTHONPATH) $(PY) -c "import repro.core, repro.dist, repro.ingest, repro.plan, repro.methods, repro.kernels, repro.launch.mesh, repro.launch.steps, repro.models, repro.optim, repro.checkpoint, repro.data, repro.utils.roofline, repro.configs"
+	PYTHONPATH=$(PYTHONPATH) $(PY) -c "import repro.api, repro.api.cli, repro.core, repro.dist, repro.ingest, repro.plan, repro.methods, repro.kernels, repro.launch.mesh, repro.launch.steps, repro.models, repro.optim, repro.checkpoint, repro.data, repro.utils.roofline, repro.configs"
 
 quickstart:
 	PYTHONPATH=$(PYTHONPATH) $(PY) examples/quickstart.py

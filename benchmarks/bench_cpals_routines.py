@@ -16,7 +16,7 @@ from pathlib import Path
 
 import jax
 
-from repro.core import cp_als
+from repro.methods import cp_als
 
 from .common import emit, paper_dataset_cached
 

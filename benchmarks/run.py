@@ -10,7 +10,7 @@ import json
 import time
 from pathlib import Path
 
-from . import (bench_conflict, bench_cpals_routines, bench_ingest,
+from . import (bench_api, bench_conflict, bench_cpals_routines, bench_ingest,
                bench_methods, bench_mttkrp_variants, bench_plan,
                bench_scaling, bench_sort_build)
 from .common import emit
@@ -28,6 +28,8 @@ def main() -> None:
                     default=Path(__file__).resolve().parents[1] / "BENCH_cpals.json")
     ap.add_argument("--methods-json", type=Path,
                     default=Path(__file__).resolve().parents[1] / "BENCH_methods.json")
+    ap.add_argument("--api-json", type=Path,
+                    default=Path(__file__).resolve().parents[1] / "BENCH_api.json")
     args = ap.parse_args()
     q = args.quick
 
@@ -73,6 +75,13 @@ def main() -> None:
     args.methods_json.write_text(
         json.dumps(bench_methods.summarize(method_rows), indent=1))
     print(f"# wrote {args.methods_json}")
+    print()
+    print("# bench_api (Session facade overhead vs direct methods.fit)")
+    api_rows = bench_api.run(scale=0.002, pairs=11 if q else 25)
+    emit(api_rows)
+    args.api_json.write_text(json.dumps(bench_api.summarize(api_rows),
+                                        indent=1))
+    print(f"# wrote {args.api_json}")
     print()
     if not args.skip_scaling:
         print("# bench_scaling (paper Figs 9/10 analogue: host devices)")

@@ -1,14 +1,16 @@
-"""End-to-end reproduction of the paper's experiment, on the current stack:
-ingest -> per-mode plan -> decomposition-method registry.
+"""End-to-end reproduction of the paper's experiment, through the one front
+door: a declarative :class:`repro.api.RunConfig` per run, driven by
+:class:`repro.api.Session` (ingest -> per-mode plan -> method registry).
 
 Stage 1 reproduces Table III: 20 CP-ALS iterations at rank 35 on YELP- and
 NELL-2-shaped tensors with the per-routine runtime breakdown, comparing the
 implementation-strategy ablation (gather_scatter = atomic regime, segment =
 no-lock regime, auto = the per-mode planner).
 
-Stage 2 goes past the paper: the same ingested tensors through every method
-in the registry (nonnegative HALS, Tucker/HOOI over the TTMc kernel,
-streaming CP-ALS over chunk batches) — fit vs wall time.
+Stage 2 goes past the paper: the same tensors through every method in the
+registry (nonnegative HALS, Tucker/HOOI over the TTMc kernel, streaming
+CP-ALS over chunk batches) — fit vs wall time.  Each run is one RunConfig;
+the equivalent CLI is printed alongside (``python -m repro fit ...``).
 
   PYTHONPATH=src python examples/decompose_end_to_end.py [--scale 0.004]
 """
@@ -17,9 +19,10 @@ import time
 
 import jax
 
+from repro.api import ExecConfig, MethodConfig, PlanConfig, RunConfig, Session
 from repro.core import paper_dataset
 from repro.ingest import ingest
-from repro.methods import available_methods, fit, get_method
+from repro.methods import available_methods, get_method
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--scale", type=float, default=0.004,
@@ -33,16 +36,25 @@ args = ap.parse_args()
 key = jax.random.PRNGKey(7)
 for name in ("yelp", "nell-2"):
     t = paper_dataset(name, key, scale=args.scale)
+    # ingest ONCE; every Session below adopts the same handle (sort + stats
+    # + CSF builds are shared across all runs on this tensor)
     ing = ingest(t)
     print(f"\n=== {name}: dims={t.dims} nnz={t.nnz:,} (scale {args.scale}) ===")
 
     # --- Table III ablation: one method (cp_als), three impl policies ---
     for impl in ("gather_scatter", "segment", "auto"):
-        fit(ing, args.rank, method="cp_als", niters=2, impl=impl, key=key,
-            timers={})
+        # warmup/compile run, then the timed one; ``timers`` is a method
+        # option — the per-routine out-param the Table III breakdown reads
+        Session.from_config(RunConfig(
+            plan=PlanConfig(policy=impl),
+            method=MethodConfig(rank=args.rank, niters=2, seed=7,
+                                options={"timers": {}})), tensor=ing).fit()
         timers: dict = {}
-        dec = fit(ing, args.rank, method="cp_als", niters=args.iters,
-                  impl=impl, key=key, timers=timers)
+        cfg = RunConfig(plan=PlanConfig(policy=impl),
+                        method=MethodConfig(rank=args.rank, niters=args.iters,
+                                            seed=7,
+                                            options={"timers": timers}))
+        dec = Session.from_config(cfg, tensor=ing).fit()
         total = sum(timers.values())
         print(f"[cp_als/{impl:>14s}] fit={float(dec.fit):.4f} "
               f"total={total:.2f}s | "
@@ -50,18 +62,20 @@ for name in ("yelp", "nell-2"):
                           for k in ("sort", "mttkrp", "ata", "inverse",
                                     "norm", "fit")))
 
-    # --- the registry: every method on the same ingested tensor ---
+    # --- the registry: every method on the same tensor, one RunConfig each
     if args.skip_methods:
         continue
     for method in available_methods(order=t.order):
         spec = get_method(method)
-        kwargs = {"n_chunks": 4} if spec.supports_streaming else {}
-        x = ing.tensor if spec.supports_streaming else ing
         # HOOI converges in a few sweeps (and each sweep carries a thin SVD)
         niters = args.iters if spec.family == "cp" else min(args.iters, 5)
+        cfg = RunConfig(
+            method=MethodConfig(name=method, rank=args.rank, niters=niters,
+                                seed=7),
+            exec=ExecConfig(n_chunks=4 if spec.supports_streaming else None))
+        sess = Session.from_config(cfg, tensor=ing)
         t0 = time.perf_counter()
-        dec = fit(x, args.rank, method=method, niters=niters, key=key,
-                  **kwargs)
+        dec = sess.fit()
         jax.block_until_ready(dec.fit)
         wall = time.perf_counter() - t0
         print(f"[{method:>22s}] family={spec.family} kernel={spec.kernel} "

@@ -1,0 +1,6 @@
+"""``python -m repro`` — the CLI front door (see repro.api.cli)."""
+import sys
+
+from repro.api.cli import main
+
+sys.exit(main())

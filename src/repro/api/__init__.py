@@ -1,0 +1,31 @@
+"""repro.api — the single public API over the decomposition stack.
+
+    config.py    RunConfig = DataConfig + PlanConfig + MethodConfig +
+                 ExecConfig: frozen, validated, JSON-round-trippable
+    executor.py  ExecutorSpec registry (local / dist / streaming) + the one
+                 method-capability gate (require_capability)
+    session.py   Session.from_config -> .ingest() -> .plan() -> .fit() ->
+                 .serve_handle(), lazy cached stages, checkpoint resume;
+                 run(cfg) one-shot
+    cli.py       python -m repro {ingest,plan,fit,serve,dryrun} and the
+                 --list-methods / --list-impls capability matrices
+
+Everything else under ``repro.*`` is either machinery this API drives
+(core/plan/ingest/methods/dist/checkpoint) or legacy seed modules kept for
+back-compat (``repro.models``, ``repro.optim``, the LM arch presets in
+``repro.configs`` — see docs/architecture.md "Legacy LM substrate"); new
+callers should enter through this package.
+"""
+from .config import (ConfigError, DataConfig, ExecConfig, MethodConfig,
+                     PlanConfig, RunConfig)
+from .executor import (EXECUTORS, ExecutorSpec, executor_matrix, get_executor,
+                       register_executor, require_capability)
+from .session import ServeHandle, Session, run
+
+__all__ = [
+    "ConfigError", "DataConfig", "PlanConfig", "MethodConfig", "ExecConfig",
+    "RunConfig",
+    "EXECUTORS", "ExecutorSpec", "executor_matrix", "get_executor",
+    "register_executor", "require_capability",
+    "ServeHandle", "Session", "run",
+]

@@ -1,0 +1,352 @@
+"""``python -m repro`` — thin arg -> :class:`RunConfig` translators.
+
+    python -m repro --list-methods            # method capability matrix
+    python -m repro --list-impls              # kernel-impl capability matrix
+    python -m repro ingest  --source data.tns --reorder degree_sort
+    python -m repro plan    --dataset yelp --scale 0.002 --rank 35
+    python -m repro fit     --config run.json [--dryrun]
+    python -m repro serve   --dataset yelp --scale 0.002 --queries 2048
+    python -m repro dryrun  --workload cpals-yelp --mesh single
+
+Every subcommand builds one RunConfig (``--config file.json`` loads a base;
+explicit flags override it field by field) and drives a
+:class:`~repro.api.Session` — no subcommand re-plumbs ingest, planning,
+capability checks or checkpointing.  ``dryrun`` is the exception in
+mechanism only: it re-execs ``repro.launch.dryrun`` in a subprocess because
+the compile-matrix needs XLA_FLAGS set before jax initializes.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+from typing import Optional, Sequence
+
+from .config import ConfigError, RunConfig
+
+
+# ---------------------------------------------------------------------------
+# capability matrices (sourced from the registries, never hand-maintained)
+# ---------------------------------------------------------------------------
+
+
+def _table(rows: list[dict]) -> str:
+    cols = list(rows[0]) if rows else []
+    widths = {c: max(len(c), *(len(str(r[c])) for r in rows)) for c in cols}
+    line = lambda r: "| " + " | ".join(
+        str(r[c]).ljust(widths[c]) for c in cols) + " |"
+    sep = "|" + "|".join("-" * (widths[c] + 2) for c in cols) + "|"
+    return "\n".join([line({c: c for c in cols}), sep] + [line(r) for r in rows])
+
+
+def list_methods() -> str:
+    """Method capability matrix + executor matrix, from the registries."""
+    from repro.methods import METHODS
+
+    from .executor import executor_matrix
+
+    rows = [{
+        "method": name, "family": s.family, "kernel": s.kernel,
+        "dist": "y" if s.supports_dist else "-",
+        "streaming": "y" if s.supports_streaming else "-",
+        "nonneg": "y" if s.nonnegative else "-",
+        "order>3": "y" if s.supports_order_gt3 else "-",
+    } for name, s in METHODS.items()]
+    ex_rows = [{
+        "executor": r["executor"], "requires": r["requires"],
+        "methods": " ".join(r["methods"]), "description": r["description"],
+    } for r in executor_matrix()]
+    return ("# methods (repro.methods registry)\n" + _table(rows)
+            + "\n\n# executors (repro.api registry)\n" + _table(ex_rows))
+
+
+def list_impls() -> str:
+    """Kernel-impl capability matrix for both registries (mttkrp + ttmc)."""
+    from repro.core import REGISTRY, TTMC_REGISTRY
+
+    out = []
+    for kernel, reg in (("mttkrp", REGISTRY), ("ttmc", TTMC_REGISTRY)):
+        rows = [{
+            "impl": name, "layout": s.layout,
+            "sorted": "y" if s.needs_sorted else "-",
+            "order>3": "y" if s.supports_order_gt3 else "-",
+            "backend": s.backend,
+            "notes": ("benchmark-only" if s.benchmark_only
+                      else "oracle" if s.oracle else "-"),
+        } for name, s in reg.items()]
+        out.append(f"# {kernel} impls (repro.core registry)\n" + _table(rows))
+    return "\n\n".join(out)
+
+
+# ---------------------------------------------------------------------------
+# arg -> RunConfig
+# ---------------------------------------------------------------------------
+
+
+def _add_config_args(p: argparse.ArgumentParser) -> None:
+    p.add_argument("--config", default=None, metavar="FILE.json",
+                   help="RunConfig JSON to start from (flags override)")
+    g = p.add_argument_group("data")
+    g.add_argument("--source", default=None, help=".tns/.tnsb path")
+    g.add_argument("--dataset", default=None,
+                   help="synthetic paper replica (yelp/nell-2/netflix/...)")
+    g.add_argument("--scale", type=float, default=None)
+    g.add_argument("--data-seed", type=int, default=None)
+    g.add_argument("--reorder", default=None)
+    g.add_argument("--compact", action="store_true", default=None)
+    g.add_argument("--cache", default=None, help="ingest cache root")
+    g = p.add_argument_group("plan")
+    g.add_argument("--impl", default=None,
+                   help="planner policy: auto or a registered impl name")
+    g.add_argument("--calibrate", action="store_true", default=None)
+    g = p.add_argument_group("method")
+    g.add_argument("--method", default=None)
+    g.add_argument("--rank", type=int, nargs="+", default=None,
+                   help="int, or one int per mode (Tucker)")
+    g.add_argument("--iters", type=int, default=None)
+    g.add_argument("--tol", type=float, default=None)
+    g.add_argument("--seed", type=int, default=None)
+    g.add_argument("--option", action="append", default=[], metavar="K=V",
+                   help="method option, JSON-valued (e.g. --option decay=0.9)")
+    g = p.add_argument_group("exec")
+    g.add_argument("--executor", default=None,
+                   choices=["local", "dist", "streaming"])
+    g.add_argument("--checkpoint-dir", default=None)
+    g.add_argument("--checkpoint-every", type=int, default=None)
+    g.add_argument("--monitor", action="store_true", default=None)
+    g.add_argument("--n-chunks", type=int, default=None)
+    g.add_argument("--chunk-nnz", type=int, default=None)
+
+
+def config_from_args(args: argparse.Namespace) -> RunConfig:
+    """Layer CLI flags over (--config base or defaults), then validate once
+    through RunConfig.from_dict so every error carries its field path."""
+    if args.config:
+        from pathlib import Path
+
+        try:
+            base = json.loads(Path(args.config).read_text())
+        except OSError as e:
+            raise ConfigError(f"--config {args.config}: {e}") from None
+        except json.JSONDecodeError as e:
+            raise ConfigError(
+                f"--config {args.config}: not valid JSON ({e})") from None
+        if not isinstance(base, dict):
+            raise ConfigError(
+                f"--config {args.config}: wants a JSON object, got "
+                f"{type(base).__name__}")
+    else:
+        base = {}
+    for section in ("data", "plan", "method", "exec"):
+        base.setdefault(section, {})
+        if not isinstance(base[section], dict):
+            # catch before flag overlay: put() below would TypeError on it
+            raise ConfigError(
+                f"--config {args.config}: {section}: wants a mapping, got "
+                f"{type(base[section]).__name__}")
+
+    def put(section: str, key: str, val) -> None:
+        if val is not None:
+            base[section][key] = val
+
+    put("data", "source", args.source)
+    put("data", "dataset", args.dataset)
+    put("data", "scale", args.scale)
+    put("data", "seed", args.data_seed)
+    put("data", "reorder", args.reorder)
+    put("data", "compact", args.compact)
+    put("data", "cache", args.cache)
+    put("plan", "policy", args.impl)
+    put("plan", "calibrate", args.calibrate)
+    put("method", "name", args.method)
+    if args.rank is not None:
+        put("method", "rank",
+            args.rank[0] if len(args.rank) == 1 else tuple(args.rank))
+    put("method", "niters", args.iters)
+    put("method", "tol", args.tol)
+    put("method", "seed", args.seed)
+    if args.option:
+        opts = dict(base["method"].get("options", {}))
+        for kv in args.option:
+            k, sep, v = kv.partition("=")
+            if not sep or not k:
+                raise ConfigError(
+                    f"--option {kv!r}: expected KEY=VALUE "
+                    "(e.g. --option decay=0.9)")
+            try:
+                opts[k] = json.loads(v)
+            except json.JSONDecodeError:
+                opts[k] = v
+        base["method"]["options"] = opts
+    put("exec", "executor", args.executor)
+    put("exec", "checkpoint_dir", args.checkpoint_dir)
+    put("exec", "checkpoint_every", args.checkpoint_every)
+    put("exec", "monitor", args.monitor)
+    put("exec", "n_chunks", args.n_chunks)
+    put("exec", "chunk_nnz", args.chunk_nnz)
+    return RunConfig.from_dict(base)
+
+
+# ---------------------------------------------------------------------------
+# subcommands
+# ---------------------------------------------------------------------------
+
+
+def cmd_ingest(args) -> int:
+    from .session import Session
+
+    cfg = config_from_args(args)
+    sess = Session.from_config(cfg)
+    t0 = time.time()
+    ing = sess.ingest()
+    dt = time.time() - t0
+    print(f"# ingest: {cfg.summary()}")
+    print(f"dims={ing.dims} nnz={ing.tensor.nnz:,} "
+          f"reorder={cfg.data.reorder} cache_hit={ing.cache_hit} "
+          f"wall={dt:.2f}s")
+    for m, s in enumerate(ing.stats):
+        print(f"  mode {m}: rows={s.rows} collision={s.block_collision_rate:.3f} "
+              f"padding={s.padding_overhead:.3f} skew={s.skew:.3f}")
+    return 0
+
+
+def cmd_plan(args) -> int:
+    from .session import Session
+
+    cfg = config_from_args(args)
+    print(f"# plan: {cfg.summary()}")
+    print(Session.from_config(cfg).plan_report())
+    return 0
+
+
+def cmd_fit(args) -> int:
+    import jax
+
+    from .session import Session
+
+    cfg = config_from_args(args)
+    sess = Session.from_config(cfg)
+    print(f"# fit: {cfg.summary()}")
+    print(sess.plan_report())
+    if args.dryrun:
+        print("# --dryrun: plan only, skipping execution")
+        return 0
+    t0 = time.time()
+    dec = sess.fit()
+    jax.block_until_ready(dec.fit)
+    print(f"fit={float(dec.fit):.6f} wall={time.time() - t0:.2f}s")
+    if args.out:
+        _save_factors(args.out, dec)
+        print(f"# wrote {args.out}")
+    return 0
+
+
+def _save_factors(path: str, dec) -> None:
+    import numpy as np
+
+    arrays = {f"factor_{m}": np.asarray(f)
+              for m, f in enumerate(dec.factors)}
+    if hasattr(dec, "lmbda"):
+        arrays["lmbda"] = np.asarray(dec.lmbda)
+    if hasattr(dec, "core"):
+        arrays["core"] = np.asarray(dec.core)
+    arrays["fit"] = np.asarray(dec.fit)
+    np.savez(path, **arrays)
+
+
+def cmd_serve(args) -> int:
+    from .session import Session
+
+    cfg = config_from_args(args)
+    sess = Session.from_config(cfg)
+    print(f"# serve: {cfg.summary()}")
+    print(sess.plan_report())
+    import jax
+
+    t0 = time.time()
+    handle = sess.serve_handle()
+    jax.block_until_ready(handle.decomp.fit)  # async dispatch: drain first
+    t_fit = time.time() - t0
+    bench = handle.benchmark(queries=args.queries, batch=args.batch,
+                             seed=cfg.method.seed)
+    print(f"fit={handle.fit:.4f} decompose={t_fit:.2f}s "
+          f"serve={bench['serve_s']:.2f}s ({bench['qps']:,.0f} vals/s)")
+    return 0
+
+
+def cmd_dryrun(args) -> int:
+    """Compile-matrix dry-run.  Re-execs ``repro.launch.dryrun`` in a fresh
+    interpreter: the 512-placeholder-device XLA_FLAGS must be set before jax
+    initializes, and this process has already imported jax."""
+    import subprocess
+
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", args.workload, "--mesh", args.mesh]
+    if args.tag:
+        cmd += ["--tag", args.tag]
+    for ov in args.override:
+        cmd += ["--override", ov]
+    return subprocess.call(cmd)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro",
+        description="One front door over the decomposition stack: "
+                    "ingest -> plan -> fit -> serve (repro.api).")
+    ap.add_argument("--list-methods", action="store_true",
+                    help="print the method + executor capability matrices")
+    ap.add_argument("--list-impls", action="store_true",
+                    help="print the kernel-impl capability matrices")
+    sub = ap.add_subparsers(dest="command")
+
+    for name, fn, extra in (
+            ("ingest", cmd_ingest, ()),
+            ("plan", cmd_plan, ()),
+            ("fit", cmd_fit, ("dryrun", "out")),
+            ("serve", cmd_serve, ("queries", "batch")),
+    ):
+        p = sub.add_parser(name, help=f"{name} stage of the pipeline")
+        _add_config_args(p)
+        if "dryrun" in extra:
+            p.add_argument("--dryrun", action="store_true",
+                           help="print the plan and exit without fitting")
+        if "out" in extra:
+            p.add_argument("--out", default=None, metavar="FACTORS.npz",
+                           help="save factors/lambda/fit to an .npz")
+        if "queries" in extra:
+            p.add_argument("--queries", type=int, default=2048)
+            p.add_argument("--batch", type=int, default=256)
+        p.set_defaults(fn=fn)
+
+    p = sub.add_parser("dryrun",
+                       help="compile-matrix dry-run (repro.launch.dryrun)")
+    p.add_argument("--workload", required=True,
+                   help="cpals-<workload> or an arch id")
+    p.add_argument("--mesh", choices=["single", "multi"], default="single")
+    p.add_argument("--tag", default="")
+    p.add_argument("--override", action="append", default=[])
+    p.set_defaults(fn=cmd_dryrun)
+
+    args = ap.parse_args(argv)
+    if args.list_methods:
+        print(list_methods())
+        return 0
+    if args.list_impls:
+        print(list_impls())
+        return 0
+    if args.command is None:
+        ap.print_help()
+        return 2
+    try:
+        return args.fn(args)
+    except (ConfigError, ValueError, OSError) as e:
+        # OSError: a missing/unreadable --source or --cache path is a user
+        # mistake, not a crash — same friendly exit as config errors
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,368 @@
+"""Declarative run configuration — the one parameter surface for the stack.
+
+A decomposition run is four frozen dataclasses composed into a
+:class:`RunConfig`:
+
+    RunConfig(
+        data=DataConfig(source="data.tns", reorder="degree_sort",
+                        cache=".cache/ingest"),
+        plan=PlanConfig(policy="auto"),
+        method=MethodConfig(name="cp_als", rank=35, niters=20),
+        exec=ExecConfig(executor="local"),
+    )
+
+Every field is validated at construction; a bad value raises
+:class:`ConfigError` naming the offending field (``method.rank: ...``), and
+an unknown key in :meth:`RunConfig.from_dict` is rejected with its full path
+plus the nearest valid name.  ``to_dict``/``from_dict`` (and the JSON
+convenience wrappers) round-trip bit-exactly:
+
+    RunConfig.from_json(cfg.to_json()) == cfg
+
+which is what makes a config file, a CLI invocation and a programmatic
+``repro.api.run(cfg)`` interchangeable descriptions of the same run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import difflib
+import json
+from typing import Any, Optional, Sequence, Union
+
+
+class ConfigError(ValueError):
+    """A RunConfig field failed validation; the message names the field."""
+
+
+def _suggest(name: str, candidates: Sequence[str]) -> str:
+    """'; did you mean X?' when a close match exists, else ''."""
+    close = difflib.get_close_matches(name, list(candidates), n=1, cutoff=0.5)
+    return f"; did you mean {close[0]!r}?" if close else ""
+
+
+def _err(section: str, field: str, msg: str) -> ConfigError:
+    return ConfigError(f"{section}.{field}: {msg}")
+
+
+def _require(cond: bool, section: str, field: str, msg: str) -> None:
+    if not cond:
+        raise _err(section, field, msg)
+
+
+# ---------------------------------------------------------------------------
+# the four sections
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    """Where the tensor comes from and how it is ingested.
+
+    Exactly one of ``source`` (a ``.tns``/``.tnsb`` path), ``dataset`` (a
+    synthetic paper replica from ``repro.core.PAPER_DATASETS``, scaled by
+    ``scale``), or an in-memory tensor handed to
+    :meth:`~repro.api.Session.from_config` describes the bytes; the rest of
+    the fields are the ``repro.ingest`` options (reorder / compact / cache /
+    tile geometry / reader hints)."""
+
+    _section = "data"
+
+    source: Optional[str] = None
+    dataset: Optional[str] = None
+    scale: float = 1.0
+    seed: int = 0
+    dims: Optional[tuple[int, ...]] = None
+    duplicates: str = "sum"
+    reorder: str = "identity"
+    compact: bool = False
+    cache: Optional[str] = None
+    tile: tuple[int, int] = (512, 128)
+
+    def __post_init__(self):
+        from repro.ingest import DUPLICATE_POLICIES, REORDERINGS
+
+        _canon_field(self, "dims")
+        _canon_field(self, "tile")
+        s = self._section
+        _require(not (self.source and self.dataset), s, "source",
+                 "give either a file source or a synthetic dataset, not both")
+        if self.dataset is not None:
+            from repro.core import PAPER_DATASETS
+
+            _require(self.dataset in PAPER_DATASETS, s, "dataset",
+                     f"unknown dataset {self.dataset!r}; one of "
+                     f"{tuple(PAPER_DATASETS)}"
+                     + _suggest(self.dataset, PAPER_DATASETS))
+        _require(self.scale > 0.0, s, "scale",
+                 f"must be > 0, got {self.scale}")
+        _require(self.duplicates in DUPLICATE_POLICIES, s, "duplicates",
+                 f"unknown policy {self.duplicates!r}; one of "
+                 f"{tuple(DUPLICATE_POLICIES)}"
+                 + _suggest(self.duplicates, DUPLICATE_POLICIES))
+        _require(self.reorder in REORDERINGS, s, "reorder",
+                 f"unknown reordering {self.reorder!r}; one of "
+                 f"{tuple(REORDERINGS)}"
+                 + _suggest(self.reorder, REORDERINGS))
+        _require(len(self.tile) == 2
+                 and all(int(v) > 0 for v in self.tile), s, "tile",
+                 f"must be a positive (block, row_tile) pair, got {self.tile}")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanConfig:
+    """Per-mode planner policy (``repro.plan``).
+
+    ``policy``: ``"auto"`` (cost-model argmin per mode) or a registered
+    kernel-impl name that pins every mode.  ``calibrate`` replaces the cost
+    models with measured timings on the actual tensor.  ``allow`` restricts
+    the candidate set; ``backend`` overrides backend detection."""
+
+    _section = "plan"
+
+    policy: str = "auto"
+    calibrate: bool = False
+    backend: Optional[str] = None
+    allow: Optional[tuple[str, ...]] = None
+
+    def __post_init__(self):
+        _canon_field(self, "allow")
+        names = _known_impl_names()
+        _require(self.policy == "auto" or self.policy in names,
+                 self._section, "policy",
+                 f"unknown impl {self.policy!r}; 'auto' or one of {names}"
+                 + _suggest(self.policy, names))
+        if self.allow is not None:
+            for a in self.allow:
+                _require(a in names, self._section, "allow",
+                         f"unknown impl {a!r}; one of {names}"
+                         + _suggest(a, names))
+
+
+def _known_impl_names() -> tuple[str, ...]:
+    """Union of the kernel-impl registries (MTTKRP + TTMc)."""
+    from repro.core import REGISTRY, TTMC_REGISTRY
+
+    return tuple(dict.fromkeys(list(REGISTRY) + list(TTMC_REGISTRY)))
+
+
+@dataclasses.dataclass(frozen=True)
+class MethodConfig:
+    """Which decomposition to compute (``repro.methods`` registry).
+
+    ``rank`` is an int for the CP family, an int or per-mode tuple for
+    Tucker.  ``seed`` derives the factor-init PRNG key.  ``options`` carries
+    method-specific keywords (``decay=``, ``first_norm=``, ``timers=``, ...)
+    forwarded verbatim to the registered implementation."""
+
+    _section = "method"
+
+    name: str = "cp_als"
+    rank: Union[int, tuple[int, ...]] = 16
+    niters: int = 20
+    tol: float = 0.0
+    seed: int = 0
+    options: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        from repro.methods import METHODS
+
+        # canonicalize sequence-valued options to tuples so the JSON
+        # round-trip (which can only carry lists) reproduces an EQUAL
+        # config — the bit-exact contract covers option payloads too
+        object.__setattr__(self, "options", _canon_options(self.options))
+        _canon_field(self, "rank")
+        s = self._section
+        # options that shadow section-backed kwargs would be silently
+        # overwritten at dispatch (the executor composes niters/tol/key/...
+        # from the sections); reject the collision at construction
+        reserved = _RESERVED_OPTIONS & set(self.options)
+        _require(not reserved, s, "options",
+                 f"{sorted(reserved)} collide with section-backed settings; "
+                 "configure them via method.niters/method.tol/method.seed/"
+                 "plan.policy/exec.* instead")
+        _require(self.name in METHODS, s, "name",
+                 f"unknown method {self.name!r}; one of {tuple(METHODS)}"
+                 + _suggest(self.name, METHODS))
+        ranks = self.rank if isinstance(self.rank, tuple) else (self.rank,)
+        _require(len(ranks) > 0 and all(
+            isinstance(r, int) and r > 0 for r in ranks), s, "rank",
+            f"must be a positive int or tuple of positive ints, "
+            f"got {self.rank!r}")
+        _require(self.niters >= 1, s, "niters",
+                 f"must be >= 1, got {self.niters}")
+        _require(self.tol >= 0.0, s, "tol",
+                 f"must be >= 0, got {self.tol}")
+
+
+# method.options keys the executors compose from the config sections; a
+# user option with one of these names would either be dropped or shadow
+# the section value (n_chunks/chunk_nnz/dims are exec/data-section-owned)
+_RESERVED_OPTIONS = {"rank", "method", "niters", "tol", "key", "seed",
+                     "state", "checkpoint_cb", "monitor", "plan", "impl",
+                     "n_chunks", "chunk_nnz", "dims"}
+
+
+def _canon_field(cfg, name: str) -> None:
+    """Frozen-dataclass field canonicalization: a list-valued sequence field
+    (Python callers can pass lists; JSON always does) becomes the tuple the
+    bit-exact round-trip contract compares against."""
+    v = getattr(cfg, name)
+    if isinstance(v, list):
+        object.__setattr__(cfg, name,
+                           tuple(tuple(e) if isinstance(e, list) else e
+                                 for e in v))
+
+
+def _canon_options(v):
+    """Lists/tuples -> tuples, recursively through dicts (JSON-expressible
+    payloads only; other values pass through untouched).  Dicts keep their
+    object identity when nothing inside changed: options like
+    ``{"timers": {}}`` are out-params whose reference the caller reads
+    back after the fit."""
+    if isinstance(v, (list, tuple)):
+        return tuple(_canon_options(e) for e in v)
+    if isinstance(v, dict):
+        new = {k: _canon_options(e) for k, e in v.items()}
+        return v if all(new[k] is v[k] for k in v) else new
+    return v
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecConfig:
+    """How and where the method executes (``repro.api.executor`` registry).
+
+    ``executor``: ``"local"`` (single-process ``methods.fit``), ``"dist"``
+    (the medium-grained shard_map driver over a mesh), or ``"streaming"``
+    (chunked folds from an ``ingest.reader`` chunk source).  ``mesh_shape``
+    maps axis names to extents for the dist executor (default: every local
+    device on the ``data`` axis).  ``monitor*`` configure the per-iteration
+    :class:`repro.dist.StragglerMonitor`; ``checkpoint_dir``/``_every``
+    attach a :class:`repro.checkpoint.CheckpointManager` so a killed fit
+    resumes from its last complete :class:`repro.methods.DecompState`."""
+
+    _section = "exec"
+
+    executor: str = "local"
+    mesh_shape: Optional[dict] = None
+    multi_pod: bool = False
+    shard_c: bool = False
+    mode_order: str = "natural"
+    monitor: bool = False
+    monitor_window: int = 8
+    monitor_threshold: float = 1.5
+    monitor_patience: int = 3
+    chunk_nnz: int = 1 << 20
+    n_chunks: Optional[int] = None
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 1
+
+    def __post_init__(self):
+        from .executor import EXECUTORS
+
+        s = self._section
+        _require(self.executor in EXECUTORS, s, "executor",
+                 f"unknown executor {self.executor!r}; one of "
+                 f"{tuple(EXECUTORS)}"
+                 + _suggest(self.executor, EXECUTORS))
+        _require(self.mode_order in ("natural", "auto"), s, "mode_order",
+                 f"must be 'natural' or 'auto', got {self.mode_order!r}")
+        if self.mesh_shape is not None:
+            _require(all(isinstance(v, int) and v > 0
+                         for v in self.mesh_shape.values()), s, "mesh_shape",
+                     f"axis extents must be positive ints, "
+                     f"got {self.mesh_shape}")
+        _require(self.chunk_nnz > 0, s, "chunk_nnz",
+                 f"must be > 0, got {self.chunk_nnz}")
+        _require(self.n_chunks is None or self.n_chunks > 0, s, "n_chunks",
+                 f"must be > 0, got {self.n_chunks}")
+        _require(self.checkpoint_every >= 1, s, "checkpoint_every",
+                 f"must be >= 1, got {self.checkpoint_every}")
+
+
+# ---------------------------------------------------------------------------
+# composition + (de)serialization
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class RunConfig:
+    """The complete declarative description of one decomposition run."""
+
+    data: DataConfig = dataclasses.field(default_factory=DataConfig)
+    plan: PlanConfig = dataclasses.field(default_factory=PlanConfig)
+    method: MethodConfig = dataclasses.field(default_factory=MethodConfig)
+    exec: ExecConfig = dataclasses.field(default_factory=ExecConfig)
+
+    def __post_init__(self):
+        # the (method, executor) capability gate lives in exactly one place
+        # (executor.require_capability); running it here means a bad combo
+        # fails at RunConfig construction, not deep inside a fit
+        from .executor import require_capability
+
+        require_capability(self.method.name, self.exec.executor)
+
+    # -- serialization -----------------------------------------------------
+    def to_dict(self) -> dict:
+        """Nested plain-python dict (tuples preserved; JSON-safe)."""
+        return {name: dataclasses.asdict(getattr(self, name))
+                for name in _SECTIONS}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "RunConfig":
+        """Build + validate from a nested dict; unknown keys are rejected
+        with their full path and a nearest-name suggestion."""
+        if not isinstance(d, dict):
+            raise ConfigError(f"RunConfig wants a dict, got {type(d).__name__}")
+        kwargs = {}
+        for k, v in d.items():
+            if k not in _SECTIONS:
+                raise ConfigError(
+                    f"unknown section {k!r}; one of {tuple(_SECTIONS)}"
+                    + _suggest(k, _SECTIONS))
+            kwargs[k] = _build_section(_SECTIONS[k], v, path=k)
+        return cls(**kwargs)
+
+    def to_json(self, *, indent: int = 1) -> str:
+        return json.dumps(self.to_dict(), indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "RunConfig":
+        return cls.from_dict(json.loads(s))
+
+    # -- convenience -------------------------------------------------------
+    def replace(self, **kwargs) -> "RunConfig":
+        """``dataclasses.replace`` over sections: ``cfg.replace(method=...)``."""
+        return dataclasses.replace(self, **kwargs)
+
+    def summary(self) -> str:
+        src = (self.data.source or
+               (f"{self.data.dataset}@{self.data.scale:g}"
+                if self.data.dataset else "memory"))
+        return (f"{self.method.name} rank={self.method.rank} "
+                f"niters={self.method.niters} on {src} "
+                f"[plan={self.plan.policy} exec={self.exec.executor}]")
+
+
+_SECTIONS = {"data": DataConfig, "plan": PlanConfig,
+             "method": MethodConfig, "exec": ExecConfig}
+
+
+def _build_section(cls, d: Any, *, path: str):
+    if not isinstance(d, dict):
+        raise ConfigError(f"{path}: wants a mapping, got {type(d).__name__}")
+    names = tuple(f.name for f in dataclasses.fields(cls))
+    kwargs = {}
+    for k, v in d.items():
+        if k not in names:
+            raise ConfigError(
+                f"{path}.{k}: unknown key; {path} accepts {names}"
+                + _suggest(k, names))
+        # JSON lists become tuples in each section's __post_init__
+        # (_canon_field / _canon_options) — no special casing here
+        kwargs[k] = v
+    try:
+        return cls(**kwargs)
+    except ConfigError:
+        raise
+    except TypeError as e:
+        raise ConfigError(f"{path}: {e}") from None

@@ -1,0 +1,229 @@
+"""The executor registry: local / distributed / streaming execution of a
+registered decomposition method, selected by name and gated by the
+capability flags the method's :class:`~repro.methods.MethodSpec` declares.
+
+Before this module, the local/shard_map/chunked split was hard-coded across
+``methods/driver.py``, ``core/distributed.py`` and ``methods/streaming.py``,
+and each launcher re-validated method capabilities with its own error text.
+Now an :class:`ExecutorSpec` pairs an execution strategy with the
+``MethodSpec`` flag it requires, and :func:`require_capability` is the ONE
+capability gate — ``dist_cp_als``, the dry-run, the serve launcher and
+``Session.fit`` all raise the same error with the same capability listing.
+
+Each executor's ``fn`` consumes a :class:`~repro.api.session.Session` (the
+stage cache: ingested tensor, plan, checkpoint state) and returns a
+decomposition with ``factors`` / ``fit`` / ``values_at`` — the common
+surface ``Session.serve_handle`` builds on.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+# executor name -> the available_methods() filter keyword proving capability
+_CAPABILITY_FILTER = {"supports_dist": "dist", "supports_streaming": "streaming"}
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutorSpec:
+    """One execution strategy and the method capability it requires.
+
+    requires: the :class:`~repro.methods.MethodSpec` boolean attribute that
+              must be True for a method to run under this executor (None =
+              any method).
+    """
+
+    name: str
+    fn: Callable[..., object]
+    requires: Optional[str] = None
+    description: str = ""
+
+
+EXECUTORS: dict[str, ExecutorSpec] = {}
+
+
+def register_executor(spec: ExecutorSpec) -> ExecutorSpec:
+    """Add (or replace) an executor in the registry."""
+    if spec.requires is not None and spec.requires not in _CAPABILITY_FILTER:
+        raise ValueError(
+            f"executor {spec.name!r} requires unknown capability flag "
+            f"{spec.requires!r}; one of {tuple(_CAPABILITY_FILTER)}")
+    EXECUTORS[spec.name] = spec
+    return spec
+
+
+def get_executor(name: str) -> ExecutorSpec:
+    try:
+        return EXECUTORS[name]
+    except KeyError:
+        from .config import _suggest
+
+        raise ValueError(
+            f"unknown executor {name!r}; one of {tuple(EXECUTORS)}"
+            + _suggest(name, EXECUTORS)) from None
+
+
+def require_capability(method: str, executor: str):
+    """THE capability gate: validate that ``method`` can run under
+    ``executor``; returns the :class:`~repro.methods.MethodSpec` on success,
+    raises ValueError with the capability listing otherwise.  Every driver
+    and launcher funnels through here so the error text exists once."""
+    from repro.methods import available_methods, get_method
+
+    spec = get_method(method)
+    ex = get_executor(executor)
+    if ex.requires is not None and not getattr(spec, ex.requires):
+        kw = _CAPABILITY_FILTER[ex.requires]
+        capable = available_methods(**{kw: True})
+        raise ValueError(
+            f"method {method!r} cannot run under the {executor!r} executor "
+            f"(MethodSpec.{ex.requires}=False); {executor}-capable methods: "
+            f"{capable}.  Run it with executor='local' via repro.api, or "
+            f"repro.methods.fit(..., method={method!r})")
+    return spec
+
+
+def executor_matrix() -> list[dict]:
+    """Rows of (executor, requires, supported methods) — what the CLI's
+    ``--list-methods`` renders, sourced from the registries (never
+    hand-maintained)."""
+    from repro.methods import METHODS
+
+    out = []
+    for name, ex in EXECUTORS.items():
+        methods = tuple(m for m in METHODS
+                        if ex.requires is None
+                        or getattr(METHODS[m], ex.requires))
+        out.append({"executor": name, "requires": ex.requires or "-",
+                    "methods": methods, "description": ex.description})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the three execution strategies
+# ---------------------------------------------------------------------------
+
+
+def _method_kwargs(session) -> dict:
+    """Keywords shared by every strategy, from the session's RunConfig."""
+    cfg = session.cfg
+    kw = dict(cfg.method.options)
+    kw.update(niters=cfg.method.niters, tol=cfg.method.tol,
+              key=session.method_key(),
+              state=session.resume_state(),
+              checkpoint_cb=session.checkpoint_cb(),
+              monitor=session.monitor())
+    return kw
+
+
+def _check_options(spec, options: dict) -> None:
+    """Reject method options the registered implementation does not accept,
+    with the field path and a nearest-name hint — a typo'd option must not
+    surface as a raw TypeError from deep inside a fit."""
+    import inspect
+
+    params = inspect.signature(spec.fn).parameters
+    if any(p.kind == p.VAR_KEYWORD for p in params.values()):
+        return
+    bad = sorted(set(options) - set(params))
+    if bad:
+        from .config import _suggest
+
+        names = tuple(p for p in params
+                      if p not in ("t", "source", "rank", "self"))
+        raise ValueError(
+            f"method.options: {bad} not accepted by method "
+            f"{spec.name!r} (accepts {names})"
+            + _suggest(bad[0], names))
+
+
+def _run_local(session):
+    """Single-process ``methods.fit`` over the planner/ingest stack."""
+    from repro.methods import fit
+
+    cfg = session.cfg
+    spec = require_capability(cfg.method.name, "local")
+    if spec.supports_streaming:
+        # a streaming-only method executes as chunk folds either way; going
+        # through the streaming strategy (chunk_source) avoids eagerly
+        # building per-mode CSF workspaces the fold would never touch
+        return _run_streaming(session)
+    if cfg.exec.n_chunks is not None:
+        raise ValueError(
+            f"exec.n_chunks: method {cfg.method.name!r} is a batch method "
+            "and does not fold chunks; chunk geometry applies only to "
+            "streaming-capable methods")
+    _check_options(spec, cfg.method.options)
+    return fit(session.ingest(), cfg.method.rank, method=cfg.method.name,
+               plan=session.plan(), **_method_kwargs(session))
+
+
+def _run_dist(session):
+    """The medium-grained shard_map driver (``core.distributed``)."""
+    from repro.core.cpals import CPDecomp
+    from repro.core.distributed import dist_cp_als
+
+    cfg = session.cfg
+    require_capability(cfg.method.name, "dist")
+    if cfg.exec.checkpoint_dir is not None:
+        raise ValueError(
+            "exec.checkpoint_dir: the dist executor's shard_map body has no "
+            "mid-fit checkpoint hook; checkpoint/resume needs executor="
+            "'local' or 'streaming'")
+    if cfg.method.tol > 0.0:
+        raise ValueError(
+            "method.tol: the dist executor's shard_map body runs a fixed "
+            "iteration count (no early-stop hook); drop tol or use "
+            "executor='local'")
+    kw = _method_kwargs(session)
+    # the shard_map body owns its loop: no mid-fit state/tol hooks
+    # (state/checkpoint_cb are always None here — checkpoint_dir was
+    # rejected above — and tol>0 was rejected; tol=0.0 is just the default)
+    for unsupported in ("state", "checkpoint_cb", "tol"):
+        kw.pop(unsupported, None)
+    # dist_cp_als has no **kwargs sink: reject foreign method options with
+    # the field path instead of letting a raw TypeError escape
+    supported = {"niters", "key", "monitor", "verbose", "init"}
+    bad = sorted(set(kw) - supported)
+    if bad:
+        raise ValueError(
+            f"method.options: {bad} not supported by the dist executor "
+            f"(dist_cp_als accepts only {sorted(supported)} from the "
+            "method section)")
+    factors, lam, fit = dist_cp_als(
+        session.ingest(), cfg.method.rank, session.mesh(),
+        shard_c=cfg.exec.shard_c, mode_order=cfg.exec.mode_order,
+        plan=session.plan(), method=cfg.method.name, **kw)
+    return CPDecomp(factors=tuple(factors), lmbda=lam, fit=fit)
+
+
+def _run_streaming(session):
+    """Chunked-fold execution straight off the chunk source — a ``.tnsb``
+    mmap or re-streamed ``.tns`` is never materialized as one COO."""
+    from repro.methods import fit
+
+    cfg = session.cfg
+    spec = require_capability(cfg.method.name, "streaming")
+    _check_options(spec, cfg.method.options)
+    # for its validation side effect: a pinned plan policy / calibration
+    # that chunk folds cannot honor raises here (returns None otherwise)
+    session.plan()
+    kw = _method_kwargs(session)
+    kw.setdefault("chunk_nnz", cfg.exec.chunk_nnz)
+    if cfg.exec.n_chunks is not None:
+        kw.setdefault("n_chunks", cfg.exec.n_chunks)
+    source = session.chunk_source()
+    if cfg.data.dims is not None and not hasattr(source, "order"):
+        kw.setdefault("dims", cfg.data.dims)
+    return fit(source, cfg.method.rank, method=cfg.method.name, **kw)
+
+
+register_executor(ExecutorSpec(
+    name="local", fn=_run_local, requires=None,
+    description="single-process methods.fit over the planned workspaces"))
+register_executor(ExecutorSpec(
+    name="dist", fn=_run_dist, requires="supports_dist",
+    description="medium-grained shard_map CP-ALS over a device mesh"))
+register_executor(ExecutorSpec(
+    name="streaming", fn=_run_streaming, requires="supports_streaming",
+    description="chunked MTTKRP folds from an ingest.reader chunk source"))

@@ -1,0 +1,401 @@
+"""``Session`` — the one front door: ingest -> plan -> fit -> serve.
+
+    from repro.api import RunConfig, DataConfig, MethodConfig, Session
+
+    cfg = RunConfig(data=DataConfig(source="data.tns"),
+                    method=MethodConfig(name="cp_als", rank=35))
+    sess = Session.from_config(cfg)
+    ing    = sess.ingest()        # Ingested handle (stats, cache, relabel)
+    plan   = sess.plan()          # per-mode DecompPlan (None for streaming)
+    dec    = sess.fit()           # decomposition via the configured executor
+    handle = sess.serve_handle()  # jitted batched values_at queries
+
+Stages are lazy and cached: each runs at most once per session, later
+stages trigger earlier ones, and ``repro.api.run(cfg)`` is the one-shot
+``Session.from_config(cfg).fit()``.  With ``exec.checkpoint_dir`` set the
+fit checkpoints every ``exec.checkpoint_every`` iterations through
+``repro.checkpoint.CheckpointManager`` as the shared
+:class:`~repro.methods.DecompState`, and a NEW session over the same config
+resumes from the latest complete step — kill-safe long decompositions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import RunConfig
+from .executor import get_executor, require_capability
+
+
+class ServeHandle:
+    """Batched reconstruction queries against a fitted decomposition.
+
+    ``query(coords)`` takes an (n, order) int32 coordinate batch in the
+    tensor's ORIGINAL label space (the session's ingest restored factor
+    labels) and returns the reconstructed values; the underlying
+    ``values_at`` is jitted once per coordinate-batch shape."""
+
+    def __init__(self, decomp, dims: tuple[int, ...]):
+        self.decomp = decomp
+        self.dims = dims
+        self._qfn = jax.jit(decomp.values_at)
+
+    def query(self, coords) -> jax.Array:
+        return self._qfn(jnp.asarray(coords, dtype=jnp.int32))
+
+    def benchmark(self, *, queries: int, batch: int, seed: int = 0) -> dict:
+        """Timed random-coordinate query loop (the serving benchmark the
+        CLI and ``launch/serve.py`` both report): uniform coordinates over
+        the handle's dims, one warmup/compile batch, then ``queries``
+        reconstructions in ``batch``-sized calls."""
+        import time
+
+        import numpy as np
+
+        rng = np.random.default_rng(seed)
+        n_batches = max(1, queries // batch)
+        coords = jnp.asarray(np.stack(
+            [rng.integers(0, d, (n_batches, batch)) for d in self.dims],
+            axis=-1).astype(np.int32))
+        jax.block_until_ready(self.query(coords[0]))  # warmup/compile
+        t0 = time.time()
+        out = None
+        for b in range(n_batches):
+            out = self.query(coords[b])
+        jax.block_until_ready(out)
+        serve_s = time.time() - t0
+        return {"serve_s": serve_s, "queries": n_batches * batch,
+                "qps": n_batches * batch / max(serve_s, 1e-9)}
+
+    @property
+    def fit(self) -> float:
+        return float(self.decomp.fit)
+
+
+class Session:
+    """Lazy, cached, resumable pipeline over one :class:`RunConfig`.
+
+    ``tensor`` optionally hands in-memory data to a config whose ``data``
+    section names no source (the programmatic path the tests and benchmarks
+    use): a :class:`~repro.core.coo.SparseTensor`, or an already-built
+    :class:`~repro.ingest.Ingested` handle — the latter becomes the ingest
+    stage as-is (its reorder/cache/tile choices win over ``data``'s), which
+    is how several sessions share one ingest."""
+
+    def __init__(self, cfg: RunConfig, tensor=None):
+        if not isinstance(cfg, RunConfig):
+            raise TypeError(
+                f"Session wants a RunConfig, got {type(cfg).__name__}")
+        if tensor is not None and (cfg.data.source or cfg.data.dataset):
+            raise ValueError(
+                "data.source: config already names a data source; drop it "
+                "to pass an in-memory tensor")
+        self.cfg = cfg
+        self._tensor = tensor
+        self._ing = None
+        self._plan = None
+        self._plan_done = False
+        self._result = None
+        self._handle = None
+        self._mesh = None
+        self._key = None
+        self._monitor = None
+        self._ckpt_mgr = None
+        self._resume_state = None
+        self._resume_checked = False
+
+    @classmethod
+    def from_config(cls, cfg: RunConfig, tensor=None) -> "Session":
+        return cls(cfg, tensor=tensor)
+
+    # -- stage 1: ingest ---------------------------------------------------
+    def load_tensor(self):
+        """The raw tensor (before ingest options): the in-memory one, the
+        synthetic paper replica, or the file source read by the ingest
+        reader."""
+        from repro.core import paper_dataset
+        from repro.ingest import reader
+
+        d = self.cfg.data
+        if self._tensor is not None:
+            return self._tensor
+        if d.dataset is not None:
+            self._tensor = paper_dataset(
+                d.dataset, jax.random.PRNGKey(d.seed), scale=d.scale)
+            return self._tensor
+        if d.source is None:
+            raise ValueError(
+                "data.source: config names no data (no source, no dataset) "
+                "and no in-memory tensor was passed to Session.from_config")
+        self._tensor = reader.read_any(d.source, dims=d.dims,
+                                       duplicates=d.duplicates)
+        return self._tensor
+
+    def ingest(self):
+        """The :class:`~repro.ingest.Ingested` handle (cached): relabeled
+        tensor + per-mode stats + (possibly cache-warm) CSF workspaces.  A
+        pre-built handle passed to :meth:`from_config` is adopted as-is."""
+        if self._ing is None:
+            from repro.ingest import Ingested, ingest
+
+            if isinstance(self._tensor, Ingested):
+                self._ing = self._tensor
+                return self._ing
+            d = self.cfg.data
+            x = d.source if (d.source and self._tensor is None) \
+                else self.load_tensor()
+            self._ing = ingest(x, reorder=d.reorder, compact=d.compact,
+                               cache=d.cache, tile=d.tile, dims=d.dims,
+                               duplicates=d.duplicates, seed=d.seed)
+        return self._ing
+
+    def chunk_source(self):
+        """What the streaming executor folds: the file path itself when the
+        data is on disk with no ingest transforms (true streaming — never
+        one COO in memory), else the ingested handle.  A non-default
+        duplicates policy also forces the ingest path: chunk folds sum
+        scatter contributions, which IS "sum" but cannot "keep" or
+        "error"."""
+        from repro.core.coo import SparseTensor
+
+        d = self.cfg.data
+        if d.reorder == "identity" and not d.compact:
+            if (d.source is not None and self._tensor is None
+                    and d.duplicates == "sum"):
+                return d.source
+            if isinstance(self._tensor, SparseTensor):
+                # no transforms requested: the fold splits the tensor
+                # directly, skipping ingest's per-mode stats pass entirely
+                return self._tensor
+        return self.ingest()
+
+    # -- stage 2: plan -----------------------------------------------------
+    def plan(self):
+        """The per-mode :class:`~repro.plan.DecompPlan` (cached), scored
+        against the method's declared kernel registry at the method's rank
+        (Kronecker widths for the ttmc kernel).  Streaming methods fold
+        unsorted chunks and never execute a per-mode plan -> None."""
+        if self._plan_done:
+            return self._plan
+        from repro.methods import get_method
+
+        cfg = self.cfg
+        spec = get_method(cfg.method.name)
+        if spec.supports_streaming:
+            # streaming folds unsorted chunks through gather_scatter only —
+            # a pinned policy, a calibration pass, or an allow set that
+            # excludes gather_scatter cannot be honored, so reject instead
+            # of silently ignoring the validated setting
+            if (cfg.plan.policy not in ("auto", "gather_scatter")
+                    or cfg.plan.calibrate
+                    or (cfg.plan.allow is not None
+                        and "gather_scatter" not in cfg.plan.allow)):
+                from .config import ConfigError
+
+                raise ConfigError(
+                    f"plan.policy: streaming method {cfg.method.name!r} "
+                    f"executes gather_scatter chunk folds only (no sorted "
+                    f"workspace is ever built) — drop the pinned policy/"
+                    f"calibration or pick a batch method")
+            self._plan, self._plan_done = None, True
+            return None
+        ing = self.ingest()
+        allow = cfg.plan.allow
+        if cfg.exec.executor == "dist":
+            # restrict candidates to what the shard_map body expresses —
+            # the ONE set core.distributed declares, not a private copy;
+            # an allow entry the body cannot express is rejected, never
+            # silently filtered (the user believed it was a candidate)
+            from repro.core.distributed import DIST_IMPLS
+
+            inexpressible = tuple(a for a in (allow or ())
+                                  if a not in DIST_IMPLS)
+            if inexpressible:
+                from .config import ConfigError
+
+                raise ConfigError(
+                    f"plan.allow: {inexpressible} cannot execute under the "
+                    f"dist executor; the shard_map body expresses only "
+                    f"{DIST_IMPLS}")
+            allow = allow or DIST_IMPLS
+        if spec.kernel == "ttmc":
+            from repro.methods.tucker_hooi import _kron_widths, _resolve_ranks
+
+            rank = _kron_widths(_resolve_ranks(cfg.method.rank, ing.dims))
+        else:
+            rank = cfg.method.rank
+        self._plan = ing.plan(cfg.plan.policy, rank=rank, kernel=spec.kernel,
+                              backend=cfg.plan.backend, allow=allow,
+                              calibrate=cfg.plan.calibrate)
+        self._plan_done = True
+        return self._plan
+
+    def plan_report(self) -> str:
+        """The human-readable per-mode planner table (serve/dryrun print)."""
+        from repro.utils.report import plan_report
+
+        plan = self.plan()
+        if plan is None:
+            return (f"# method={self.cfg.method.name}: chunked "
+                    "gather_scatter fold, no per-mode plan")
+        return plan_report(plan, reorder_deltas=self.ingest().reorder_deltas(),
+                           method=self.cfg.method.name)
+
+    # -- stage 3: fit ------------------------------------------------------
+    def fit(self, *, force: bool = False):
+        """The decomposition, computed by the configured executor (cached;
+        ``force=True`` re-runs — the benchmark's overhead probe)."""
+        if self._result is None or force:
+            ex = get_executor(self.cfg.exec.executor)
+            require_capability(self.cfg.method.name, ex.name)
+            self._result = ex.fn(self)
+        return self._result
+
+    # -- stage 4: serve ----------------------------------------------------
+    def serve_handle(self) -> ServeHandle:
+        """Jitted batched-query handle over the fitted decomposition (runs
+        the fit if it has not happened yet; cached like every other stage —
+        per-call handles would re-jit ``values_at`` on each request)."""
+        if self._handle is None or self._handle.decomp is not self._result:
+            dec = self.fit()
+            if self._ing is not None:
+                dims = self._ing.original_dims
+            else:  # streaming straight off a path: dims from factor rows
+                dims = tuple(int(f.shape[0]) for f in dec.factors)
+            self._handle = ServeHandle(dec, tuple(dims))
+        return self._handle
+
+    # -- executor plumbing (consumed by repro.api.executor) ----------------
+    def method_key(self):
+        """The factor-init PRNG key (cached: key creation is a device op,
+        and re-fitting the same session must reuse the same key anyway)."""
+        if getattr(self, "_key", None) is None:
+            self._key = jax.random.PRNGKey(self.cfg.method.seed)
+        return self._key
+
+    def mesh(self):
+        """The dist executor's device mesh: ``exec.mesh_shape`` verbatim;
+        else with ``exec.multi_pod`` the production pod mesh
+        (``launch.mesh.make_production_mesh`` — needs the simulated device
+        count); else every local device on the 'data' axis."""
+        if self._mesh is None:
+            from repro.dist.collectives import make_mesh
+
+            shape = self.cfg.exec.mesh_shape
+            if shape is None and self.cfg.exec.multi_pod:
+                from repro.launch.mesh import make_production_mesh
+
+                self._mesh = make_production_mesh(multi_pod=True)
+                return self._mesh
+            if shape is None:
+                shape = {"data": len(jax.devices()), "model": 1}
+            self._mesh = make_mesh(tuple(shape.values()), tuple(shape))
+        return self._mesh
+
+    def monitor(self):
+        """The per-iteration StragglerMonitor, when configured."""
+        if self._monitor is None and self.cfg.exec.monitor:
+            from repro.dist import StragglerMonitor
+
+            e = self.cfg.exec
+            self._monitor = StragglerMonitor(window=e.monitor_window,
+                                             threshold=e.monitor_threshold,
+                                             patience=e.monitor_patience)
+        return self._monitor
+
+    def checkpoint_manager(self):
+        if self._ckpt_mgr is None and self.cfg.exec.checkpoint_dir:
+            from repro.checkpoint import CheckpointManager
+
+            self._ckpt_mgr = CheckpointManager(self.cfg.exec.checkpoint_dir,
+                                               async_save=False)
+        return self._ckpt_mgr
+
+    def checkpoint_cb(self):
+        """The fit's checkpoint callback: every ``checkpoint_every``-th
+        :class:`DecompState` goes through the manager's atomic save."""
+        mgr = self.checkpoint_manager()
+        if mgr is None:
+            return None
+        every = self.cfg.exec.checkpoint_every
+        extra = {"method": self.cfg.method.name,
+                 "rank": self._rank_record(), "seed": self.cfg.method.seed}
+
+        def cb(state):
+            it = int(state.iteration)
+            if it % every == 0:
+                mgr.save(it, state, extra=dict(extra))
+        return cb
+
+    def _rank_record(self):
+        """JSON-safe rank for checkpoint provenance (tuples become lists)."""
+        r = self.cfg.method.rank
+        return list(r) if isinstance(r, tuple) else r
+
+    def resume_state(self):
+        """The latest complete checkpointed :class:`DecompState` under
+        ``exec.checkpoint_dir`` (None when absent) — what makes a re-created
+        Session continue a killed fit bit-exactly."""
+        if self._resume_checked:
+            return self._resume_state
+        self._resume_checked = True
+        mgr = self.checkpoint_manager()
+        if mgr is None or mgr.latest_step() is None:
+            return None
+        step = mgr.latest_step()
+        # validate provenance BEFORE the structural restore: a foreign
+        # method's state has a different pytree shape and would die with an
+        # opaque leaf-count assert instead of this error.  read_extra loads
+        # only the metadata, not the factor arrays.
+        extra = mgr.read_extra(step)
+        if extra.get("method") not in (None, self.cfg.method.name):
+            raise ValueError(
+                f"exec.checkpoint_dir: checkpoint at step {extra['step']} "
+                f"was written by method {extra['method']!r}, config says "
+                f"{self.cfg.method.name!r}")
+        # rank/seed mismatches would resume into a silently-wrong result
+        # (e.g. rank-4 factors answering a rank-8 request) — reject them
+        # like the method mismatch (absent keys = pre-provenance checkpoint)
+        for field, want in (("rank", self._rank_record()),
+                            ("seed", self.cfg.method.seed)):
+            have = extra.get(field)
+            if have is not None and have != want:
+                raise ValueError(
+                    f"exec.checkpoint_dir: checkpoint at step "
+                    f"{extra['step']} was written with method.{field}="
+                    f"{have!r}, config says {want!r}")
+        state, _ = mgr.restore(self._blank_state(), step=step)
+        self._resume_state = state
+        return state
+
+    def _blank_state(self):
+        """A structure-only DecompState template for checkpoint restore
+        (leaf shapes come from the npz; only the pytree structure counts).
+        The aux key set is method knowledge — ``MethodSpec.state_aux``
+        declares it, so a newly registered method resumes without touching
+        this code."""
+        from repro.methods import DecompState, get_method
+
+        d = self.cfg.data
+        if self._ing is not None:
+            order = len(self._ing.dims)
+        elif hasattr(self._tensor, "order"):
+            order = self._tensor.order
+        elif d.dims is not None:
+            order = len(d.dims)
+        elif d.source is not None and self._tensor is None:
+            from repro.ingest.reader import open_chunk_source
+
+            order = len(open_chunk_source(d.source).dims)
+        else:
+            order = len(self.ingest().dims)
+        aux = {k: jnp.zeros(())
+               for k in get_method(self.cfg.method.name).state_aux}
+        z = jnp.zeros(())
+        return DecompState(tuple(jnp.zeros(()) for _ in range(order)),
+                           aux, z, z, jnp.zeros((), jnp.int32))
+
+
+def run(cfg: RunConfig, tensor=None):
+    """One-shot: ``Session.from_config(cfg, tensor).fit()``."""
+    return Session.from_config(cfg, tensor=tensor).fit()

@@ -146,6 +146,15 @@ class CheckpointManager:
         steps = self.steps()
         return steps[-1] if steps else None
 
+    def read_extra(self, step: int) -> dict:
+        """The ``extra`` metadata of one checkpoint WITHOUT loading its
+        arrays — provenance checks (who wrote this, which method) belong
+        before a structural restore, and only this module knows the
+        on-disk layout."""
+        meta = json.loads(
+            (self.dir / f"step_{step:08d}" / "meta.json").read_text())
+        return meta.get("extra", {})
+
     def restore(self, like: Any, *, step: int | None = None):
         """Restore newest complete checkpoint (or ``step``) into ``like``'s
         structure.  Returns (tree, extra)."""

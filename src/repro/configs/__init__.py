@@ -1,5 +1,12 @@
 """Architecture registry: 10 assigned archs + the paper's own CP-ALS
-workloads, reduced smoke variants, and per-cell input specs."""
+workloads, reduced smoke variants, and per-cell input specs.
+
+The per-arch preset modules (``gemma_7b.py`` ... ``yi_34b.py``), ``get``,
+``smoke_of`` and ``batch_shapes`` are part of the LEGACY LM substrate (see
+docs/architecture.md "Legacy LM substrate") — they stay for the dry-run
+compile matrix and the LM launchers, and are deliberately NOT re-exported
+by the public ``repro.api`` surface.  The decomposition stack only consumes
+``CPALS_WORKLOADS`` / ``CPALS_DATASET`` below."""
 from __future__ import annotations
 
 import dataclasses
@@ -108,8 +115,11 @@ def src_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
     return min(shape.seq_len, 4096)
 
 
-__all__ = ["ARCH_NAMES", "get", "smoke_of", "batch_shapes", "src_len",
-           "SHAPES", "cell_is_skipped", "CPALS_WORKLOADS", "CPALS_DATASET"]
+# public (decomposition) names first; the rest is the legacy LM substrate
+__all__ = ["CPALS_WORKLOADS", "CPALS_DATASET",
+           # -- legacy LM substrate (dry-run matrix + LM launchers) --
+           "ARCH_NAMES", "get", "smoke_of", "batch_shapes", "src_len",
+           "SHAPES", "cell_is_skipped"]
 
 # ---------------------------------------------------------------------------
 # the paper's own workloads (Table I), as decomposition configs

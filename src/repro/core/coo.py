@@ -202,20 +202,41 @@ def paper_dataset(name: str, key: Array, *, scale: float = 1.0) -> SparseTensor:
 # to keep the coo -> ingest dependency one-way at import time.
 # ---------------------------------------------------------------------------
 
+_warned_legacy_io = False
+
+
+def _warn_legacy_io() -> None:
+    global _warned_legacy_io
+    if not _warned_legacy_io:
+        import warnings
+
+        warnings.warn(
+            "repro.core.read_tns/write_tns are legacy re-exports; new code "
+            "should use repro.ingest (reader / ingest()) or the repro.api "
+            "DataConfig surface", DeprecationWarning, stacklevel=3)
+        _warned_legacy_io = True
+
+
 def read_tns(path: str, *, dtype=np.float32, dims=None,
              duplicates: str = "sum") -> SparseTensor:
     """Read FROSTT text (1-indexed ``i j k val`` lines).  See
     :func:`repro.ingest.reader.read_tns` — pass ``dims=`` to keep trailing
-    empty slices (inference shrinks dims to max index + 1)."""
+    empty slices (inference shrinks dims to max index + 1).
+
+    .. deprecated:: use ``repro.ingest`` — warns once per process."""
     from repro.ingest import reader
 
+    _warn_legacy_io()
     return reader.read_tns(path, dtype=dtype, dims=dims,
                            duplicates=duplicates)
 
 
 def write_tns(path: str, t: SparseTensor) -> None:
     """Write FROSTT text with vectorized, round-trip-exact formatting
-    (:func:`repro.ingest.reader.write_tns`)."""
+    (:func:`repro.ingest.reader.write_tns`).
+
+    .. deprecated:: use ``repro.ingest`` — warns once per process."""
     from repro.ingest import reader
 
+    _warn_legacy_io()
     reader.write_tns(path, t)

@@ -255,17 +255,38 @@ def _iteration_timed(ws, factors, grams, norm_x_sq, timers, *, impls,
 # ---------------------------------------------------------------------------
 # driver — the ALS loop itself lives behind the method registry
 # (repro.methods.cp_als); this thin re-export keeps the historical
-# ``repro.core.cp_als`` entry point working unchanged.
+# ``repro.core.cp_als`` entry point working unchanged, with a once-per-
+# process DeprecationWarning pointing at the repro.api front door.
 # ---------------------------------------------------------------------------
+
+_warned_legacy = False
+
+
+def _warn_legacy_entry() -> None:
+    global _warned_legacy
+    if not _warned_legacy:
+        import warnings
+
+        warnings.warn(
+            "repro.core.cp_als is a legacy entry point; new code should go "
+            "through repro.api (Session / run(RunConfig)) or "
+            "repro.methods.fit(..., method='cp_als')",
+            DeprecationWarning, stacklevel=3)
+        _warned_legacy = True
 
 
 def cp_als(t, rank: int, **kwargs) -> CPDecomp:
     """Run CP-ALS per Algorithm 1 (see :func:`repro.methods.cp_als.cp_als`,
     which owns the iteration loop behind the decomposition-method registry).
 
+    .. deprecated:: use :func:`repro.api.run` / ``repro.methods.fit`` —
+       this wrapper stays for the historical call sites and warns once per
+       process.
+
     Lazy import: ``repro.methods`` imports this module for the iteration
     machinery (:func:`_iteration`, the state pytrees), so the dependency is
     only taken at call time."""
     from repro.methods.cp_als import cp_als as _cp_als
 
+    _warn_legacy_entry()
     return _cp_als(t, rank, **kwargs)

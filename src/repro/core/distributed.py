@@ -44,6 +44,11 @@ from .gram import (column_norms, gram, hadamard_grams, kruskal_fit,
 Array = jax.Array
 
 
+# the local MTTKRP reductions the shard_map iteration body can express —
+# the candidate set every dist-facing planner/validator must respect
+DIST_IMPLS = ("gather_scatter", "segment")
+
+
 # ---------------------------------------------------------------------------
 # host-side partitioner
 # ---------------------------------------------------------------------------
@@ -276,18 +281,12 @@ def dist_cp_als(t: SparseTensor, rank: int, mesh: Mesh, *, niters: int = 10,
     streaming, the Kronecker-width TTMc) are rejected with the capability
     listing instead of silently computing something else."""
     from .cpals import init_factors
-    from repro.methods import available_methods, get_method
+    from repro.api.executor import require_capability
 
-    spec = get_method(method)
-    if not spec.supports_dist:
-        raise ValueError(
-            f"method {method!r} cannot run under the medium-grained "
-            f"shard_map driver (MethodSpec.supports_dist=False); "
-            f"distributed-capable methods: "
-            f"{available_methods(dist=True)}.  Run it single-host via "
-            f"repro.methods.fit(..., method={method!r}) instead")
+    # the one capability gate (repro.api.executor): same error text here,
+    # in the dry-run, and in Session.fit(executor="dist")
+    require_capability(method, "dist")
 
-    DIST_IMPLS = ("gather_scatter", "segment")
     ing = None
     if not isinstance(t, SparseTensor):
         from repro.ingest import Ingested

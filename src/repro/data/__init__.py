@@ -1,3 +1,8 @@
+"""Synthetic token pipeline for the LM substrate.
+
+LEGACY SEED MODULE: LM-training plumbing only; tensor data enters the
+decomposition stack through ``repro.ingest`` / ``repro.api.DataConfig``.
+See docs/architecture.md ("Legacy LM substrate")."""
 from .pipeline import TokenPipeline, make_batch_iterator
 
 __all__ = ["TokenPipeline", "make_batch_iterator"]

@@ -266,24 +266,20 @@ def plan_cpals_workload(workload: str, *, policy: str = "auto",
 
     ``method`` selects the registry entry whose kernel family is planned:
     the CP methods score the mttkrp registry at the workload's rank, Tucker
-    scores the ttmc registry at each mode's Kronecker width."""
+    scores the ttmc registry at each mode's Kronecker width (the
+    kernel/width resolution lives in ``Session.plan`` — one place)."""
     from repro import configs
-    from repro.ingest import ingest
-    from repro.core import paper_dataset
-    from repro.methods import get_method
+    from repro.api import (DataConfig, MethodConfig, PlanConfig, RunConfig,
+                           Session)
 
-    spec = get_method(method)
     dims, nnz, rank = configs.CPALS_WORKLOADS[workload]
     scale = min(1.0, nnz_cap / nnz)
-    t = paper_dataset(configs.CPALS_DATASET[workload], jax.random.PRNGKey(0),
-                      scale=scale)
-    ing = ingest(t, cache=cache)
-    if spec.kernel == "ttmc":
-        from repro.methods.tucker_hooi import _kron_widths, _resolve_ranks
-
-        widths = _kron_widths(_resolve_ranks(rank, ing.dims))
-        return ing.plan(policy, rank=widths, kernel="ttmc")
-    return ing.plan(policy, rank=rank)
+    cfg = RunConfig(
+        data=DataConfig(dataset=configs.CPALS_DATASET[workload], scale=scale,
+                        cache=cache),
+        plan=PlanConfig(policy=policy),
+        method=MethodConfig(name=method, rank=rank))
+    return Session.from_config(cfg).plan()
 
 
 def run_cpals(workload: str, *, multi_pod: bool, out_dir: Path = ARTIFACTS,
@@ -297,15 +293,13 @@ def run_cpals(workload: str, *, multi_pod: bool, out_dir: Path = ARTIFACTS,
     lowered iteration is the shard_map CP-ALS body, so ``method`` must be
     distributed-capable (``MethodSpec.supports_dist``) — others are rejected
     up front with the capability listing, same as ``dist_cp_als``."""
+    from repro.api import require_capability
     from repro.core.distributed import _local_impls_of, build_dist_cpals_lowered
-    from repro.methods import available_methods, get_method
     from repro.utils.report import plan_report
 
-    if not get_method(method).supports_dist:
-        raise ValueError(
-            f"method {method!r} has no distributed iteration to dry-run "
-            f"(MethodSpec.supports_dist=False); distributed-capable "
-            f"methods: {available_methods(dist=True)}")
+    # the one capability gate (repro.api.executor) — same error text as
+    # Session.fit(executor="dist") and dist_cp_als
+    require_capability(method, "dist")
     plan = plan_cpals_workload(workload, policy=impl, method=method)
     print(plan_report(plan, method=method))
     local_impls = _local_impls_of(plan)

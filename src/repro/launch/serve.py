@@ -78,6 +78,27 @@ def serve(arch: str, *, smoke: bool, batch: int, prompt_len: int, gen: int,
             "decode_tok_s": batch * (gen - 1) / max(t_decode, 1e-9)}
 
 
+def cpd_config(workload: str, *, smoke: bool, rank: int, niters: int,
+               policy: str, seed: int, reorder: str, cache: str | None,
+               method: str):
+    """The launcher's declarative description: one RunConfig, shared with
+    ``python -m repro serve`` and the dry-run planner."""
+    from repro.api import (DataConfig, ExecConfig, MethodConfig, PlanConfig,
+                           RunConfig, require_capability)
+
+    # the one capability gate (raises with the registry listing if unknown)
+    spec = require_capability(method, "local")
+    return RunConfig(
+        data=DataConfig(dataset=CPALS_DATASET[workload],
+                        scale=0.002 if smoke else 1.0, seed=seed,
+                        reorder=reorder, cache=cache),
+        plan=PlanConfig(policy=policy),
+        method=MethodConfig(name=method, rank=rank, niters=niters, seed=seed),
+        exec=ExecConfig(executor="local",
+                        n_chunks=8 if spec.supports_streaming else None),
+    )
+
+
 def serve_cpd(workload: str, *, smoke: bool, batch: int, queries: int,
               rank: int = 16, niters: int = 10, policy: str = "auto",
               seed: int = 0, reorder: str = "identity",
@@ -91,78 +112,42 @@ def serve_cpd(workload: str, *, smoke: bool, batch: int, queries: int,
     the plan (and its report) is printed so the per-mode impl choice is
     visible at launch.
 
-    ``--method`` selects from the decomposition-method registry
-    (``repro.methods``): ``cp_als`` (default), ``cp_nn_hals``,
-    ``tucker_hooi`` (planned against the ttmc kernel; ``--rank`` broadcasts
-    to every mode), or ``cp_als_streaming`` (folds the tensor in as chunk
-    batches).  Every method serves queries through the same ``values_at``
-    interface, so the serving loop below is method-agnostic.
+    Everything below is a thin wrapper over :class:`repro.api.Session` —
+    ingest/plan/fit/serve_handle are the Session's cached stages, every
+    method serves queries through the same ``values_at`` interface, and the
+    same RunConfig drives ``python -m repro serve``.  ``--reorder`` /
+    ``--cache`` are the ingest options; queries and factors stay in the
+    tensor's ORIGINAL labels."""
+    from repro.api import Session
 
-    The tensor goes through ``repro.ingest``: ``--reorder`` applies a
-    locality-aware reordering (queries/factors stay in original labels —
-    the handle inverts the relabeling on the way out) and ``--cache`` makes
-    a repeat launch on the same tensor skip sort + stats entirely."""
-    from repro.core import paper_dataset
-    from repro.ingest import ingest
-    from repro.methods import fit as fit_method, get_method
-    from repro.utils.report import plan_report
-
-    spec = get_method(method)  # raises with the registry listing if unknown
-    key = jax.random.PRNGKey(seed)
-    scale = 0.002 if smoke else 1.0
-    t = paper_dataset(CPALS_DATASET[workload], key, scale=scale)
+    cfg = cpd_config(workload, smoke=smoke, rank=rank, niters=niters,
+                     policy=policy, seed=seed, reorder=reorder, cache=cache,
+                     method=method)
+    sess = Session.from_config(cfg)
+    # materialize the synthetic replica OUTSIDE the timed window so
+    # ingest_s measures ingestion (and shows the cache win), not generation
+    sess.load_tensor()
     t0 = time.time()
-    ing = ingest(t, reorder=reorder, cache=cache)
+    ing = sess.ingest()
     t_ingest = time.time() - t0
 
-    # decompose via the registry's fit() (make_cpals_step in
-    # launch/steps.py is the per-iteration entry for callers that need to
-    # own the loop themselves)
-    if spec.supports_streaming:
-        # streaming folds chunk batches through COO reductions and never
-        # executes a per-mode plan — don't print one it won't run
-        print(f"# method={method}: chunked gather_scatter fold, "
-              "no per-mode plan")
-        plan_summary = "streaming:gather_scatter"
-        t0 = time.time()
-        dec = fit_method(ing, rank, method=method, niters=niters, key=key,
-                         n_chunks=8)
-    else:
-        if spec.kernel == "ttmc":
-            from repro.methods.tucker_hooi import _kron_widths, _resolve_ranks
-
-            widths = _kron_widths(_resolve_ranks(rank, ing.dims))
-            plan = ing.plan(policy, rank=widths, kernel="ttmc")
-        else:
-            plan = ing.plan(policy, rank=rank)
-        print(plan_report(plan, reorder_deltas=ing.reorder_deltas(),
-                          method=method))
-        plan_summary = plan.summary()
-        t0 = time.time()
-        dec = fit_method(ing, rank, method=method, niters=niters, plan=plan,
-                         key=key)
+    print(sess.plan_report())
+    plan = sess.plan()
+    plan_summary = plan.summary() if plan is not None \
+        else "streaming:gather_scatter"
+    t0 = time.time()
+    dec = sess.fit()
     jax.block_until_ready(dec.fit)
     t_decomp = time.time() - t0
 
-    # serve: batched coordinate -> reconstructed-value queries, in the
-    # tensor's ORIGINAL label space (cp_als restored the factors)
-    rng = np.random.default_rng(seed)
-    qfn = jax.jit(dec.values_at)
-    n_batches = max(1, queries // batch)
-    coords = jnp.asarray(np.stack(
-        [rng.integers(0, d, (n_batches, batch)) for d in ing.original_dims],
-        axis=-1).astype(np.int32))
-    jax.block_until_ready(qfn(coords[0]))  # warmup/compile
-    t0 = time.time()
-    for b in range(n_batches):
-        out = qfn(coords[b])
-    jax.block_until_ready(out)
-    t_serve = time.time() - t0
-
+    # serve: batched coordinate -> reconstructed-value queries (the shared
+    # ServeHandle benchmark loop — same numbers as `python -m repro serve`)
+    bench = sess.serve_handle().benchmark(queries=queries, batch=batch,
+                                          seed=seed)
     return {"fit": float(dec.fit), "decompose_s": t_decomp,
-            "serve_s": t_serve, "plan": plan_summary, "method": method,
-            "ingest_s": t_ingest, "cache_hit": ing.cache_hit,
-            "qps": n_batches * batch / max(t_serve, 1e-9)}
+            "serve_s": bench["serve_s"], "plan": plan_summary,
+            "method": method, "ingest_s": t_ingest,
+            "cache_hit": ing.cache_hit, "qps": bench["qps"]}
 
 
 def main() -> None:

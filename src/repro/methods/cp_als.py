@@ -220,6 +220,7 @@ register_method(MethodSpec(
     nonnegative=False,
     supports_order_gt3=True,
     monotone_fit=True,
+    state_aux=("lmbda",),
     description="SPLATT-style CP-ALS (paper Algorithm 1): Cholesky solve "
                 "per mode over the planned MTTKRP registry",
 ))

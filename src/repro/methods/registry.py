@@ -111,6 +111,11 @@ class MethodSpec:
                 construction.
     monotone_fit: ALS-family guarantee the tests assert (fit non-decreasing
                 up to float tolerance).
+    state_aux: the keys this method's checkpointed :class:`DecompState`
+                carries in ``aux`` — what a resumer needs to rebuild the
+                pytree STRUCTURE before the arrays are loaded (the CP
+                drivers store ``lmbda``; HALS/Tucker renormalize from the
+                factors and checkpoint an empty aux).
     """
 
     name: str
@@ -122,6 +127,7 @@ class MethodSpec:
     nonnegative: bool = False
     supports_order_gt3: bool = True
     monotone_fit: bool = True
+    state_aux: tuple[str, ...] = ()
     description: str = ""
 
 

@@ -191,6 +191,7 @@ register_method(MethodSpec(
     monotone_fit=True,     # holds for the default decay == 1 (batch-exact)
                            # fold; decay < 1 tracks an evolving target and
                            # voids the guarantee
+    state_aux=("lmbda",),
     description="online CP-ALS over ingest.reader chunk batches with "
                 "exponentially weighted MTTKRP accumulators",
 ))

@@ -1,4 +1,9 @@
-"""LM substrate for the assigned architecture pool."""
+"""LM substrate for the assigned architecture pool.
+
+LEGACY SEED MODULE: not part of the public decomposition API
+(``repro.api``) and not reachable from the sparse-tensor stack — kept for
+the dry-run compile matrix and the historical LM launch/tests.  See
+docs/architecture.md ("Legacy LM substrate")."""
 from .config import ModelConfig, MoEConfig, ShapeConfig, SHAPES, cell_is_skipped
 from .transformer import Model
 

@@ -1,5 +1,9 @@
 """Optimizers from scratch (no optax): AdamW and Adafactor.
 
+LEGACY SEED MODULE: consumed only by the LM train/dry-run paths, not by the
+decomposition stack or the public ``repro.api`` surface (ALS has no
+gradient optimizer).  See docs/architecture.md ("Legacy LM substrate").
+
 Both keep fp32 statistics regardless of param dtype; Adafactor factors the
 second moment over the last two dims (rows/cols) which is what makes the
 1T-param Kimi config's optimizer state fit the mesh.  ``abstract_state``

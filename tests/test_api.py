@@ -1,0 +1,626 @@
+"""The repro.api front door: RunConfig round-trip + validation, executor
+registry capability gates, Session stage caching, old-API-vs-Session
+bit-exact parity for every registered method, checkpoint kill-and-resume,
+CLI translators, and the config golden file (schema-drift tripwire)."""
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (ConfigError, DataConfig, ExecConfig, MethodConfig,
+                       PlanConfig, RunConfig, ServeHandle, Session,
+                       get_executor, require_capability, run)
+from conftest import exact_lowrank_tensor
+
+KEY = jax.random.PRNGKey(0)
+ROOT = Path(__file__).resolve().parents[1]
+GOLDEN = Path(__file__).parent / "data" / "runconfig_golden.json"
+
+
+def lowrank():
+    return exact_lowrank_tensor((10, 9, 8), 3, KEY)
+
+
+# ---------------------------------------------------------------------------
+# RunConfig: round-trip + validation
+# ---------------------------------------------------------------------------
+
+def test_roundtrip_default():
+    cfg = RunConfig()
+    assert RunConfig.from_dict(cfg.to_dict()) == cfg
+    assert RunConfig.from_json(cfg.to_json()) == cfg
+
+
+def test_roundtrip_nondefault_preserves_tuples():
+    cfg = RunConfig(
+        data=DataConfig(dataset="yelp", scale=0.25, reorder="degree_sort",
+                        compact=True, tile=(256, 64)),
+        plan=PlanConfig(policy="segment", allow=("segment", "gather_scatter")),
+        method=MethodConfig(name="tucker_hooi", rank=(4, 3, 2), niters=7,
+                            tol=1e-5, seed=3, options={"verbose": False}),
+        exec=ExecConfig(checkpoint_dir="/tmp/ck", checkpoint_every=2,
+                        monitor=True))
+    back = RunConfig.from_json(cfg.to_json())
+    assert back == cfg
+    # JSON turns tuples into lists; from_dict must restore them bit-exactly
+    assert back.method.rank == (4, 3, 2)
+    assert back.data.tile == (256, 64)
+    assert back.plan.allow == ("segment", "gather_scatter")
+    # and a second dump is byte-identical (the full round-trip contract)
+    assert back.to_json() == cfg.to_json()
+
+
+def test_roundtrip_tuple_valued_method_options():
+    """The bit-exact contract covers option payloads: tuple values inside
+    method.options survive the JSON list detour."""
+    cfg = RunConfig(method=MethodConfig(
+        options={"mode_ranks": (2, 3), "nested": {"xs": (1, (2, 3))}}))
+    back = RunConfig.from_json(cfg.to_json())
+    assert back == cfg
+    assert back.method.options["mode_ranks"] == (2, 3)
+    assert back.method.options["nested"]["xs"] == (1, (2, 3))
+
+
+def test_list_valued_fields_canonicalize_to_tuples():
+    """Python callers may pass lists where the schema says tuple; the
+    frozen config canonicalizes so the JSON round-trip equality holds."""
+    cfg = RunConfig(
+        data=DataConfig(source="x.tns", dims=[10, 10, 10], tile=[512, 128]),
+        plan=PlanConfig(allow=["segment"]),
+        method=MethodConfig(rank=[4, 3, 2], name="tucker_hooi"))
+    assert cfg.data.dims == (10, 10, 10)
+    assert cfg.data.tile == (512, 128)
+    assert cfg.plan.allow == ("segment",)
+    assert cfg.method.rank == (4, 3, 2)
+    assert RunConfig.from_json(cfg.to_json()) == cfg
+
+
+def test_dict_valued_options_keep_identity():
+    """Out-param options (the Table III ``timers`` dict) must keep their
+    object identity through MethodConfig canonicalization."""
+    timers: dict = {}
+    cfg = MethodConfig(options={"timers": timers})
+    assert cfg.options["timers"] is timers
+
+
+def test_unknown_key_rejected_with_path_and_suggestion():
+    with pytest.raises(ConfigError, match=r"method\.rnak.*did you mean 'rank'"):
+        RunConfig.from_dict({"method": {"rnak": 8}})
+    with pytest.raises(ConfigError, match=r"data\.reoder.*'reorder'"):
+        RunConfig.from_dict({"data": {"reoder": "degree_sort"}})
+    with pytest.raises(ConfigError, match="unknown section"):
+        RunConfig.from_dict({"methods": {}})
+
+
+@pytest.mark.parametrize("section,field,bad,match", [
+    ("data", "reorder", "degre_sort", r"data\.reorder.*degree_sort"),
+    ("data", "duplicates", "add", r"data\.duplicates"),
+    ("data", "dataset", "yel", r"data\.dataset.*'yelp'"),
+    ("data", "scale", -1.0, r"data\.scale"),
+    ("plan", "policy", "segmnt", r"plan\.policy.*'segment'"),
+    ("method", "name", "cp_alss", r"method\.name.*'cp_als'"),
+    ("method", "rank", 0, r"method\.rank"),
+    ("method", "niters", 0, r"method\.niters"),
+    ("method", "tol", -0.1, r"method\.tol"),
+    ("exec", "executor", "distt", r"exec\.executor.*'dist'"),
+    ("exec", "checkpoint_every", 0, r"exec\.checkpoint_every"),
+])
+def test_validation_names_the_field(section, field, bad, match):
+    with pytest.raises(ConfigError, match=match):
+        RunConfig.from_dict({section: {field: bad}})
+
+
+def test_source_and_dataset_are_exclusive():
+    with pytest.raises(ConfigError, match=r"data\.source"):
+        DataConfig(source="x.tns", dataset="yelp")
+
+
+def test_golden_config_file_matches_defaults():
+    """Schema tripwire: the committed golden file IS RunConfig()'s JSON.
+    A new/renamed field or changed default must update the golden file (and
+    therefore be a deliberate, reviewed act)."""
+    golden = json.loads(GOLDEN.read_text())
+    assert json.loads(RunConfig().to_json()) == golden
+    assert RunConfig.from_dict(golden) == RunConfig()
+
+
+# ---------------------------------------------------------------------------
+# executor registry + capability gates
+# ---------------------------------------------------------------------------
+
+def test_executor_registry_covers_the_split():
+    assert get_executor("local").requires is None
+    assert get_executor("dist").requires == "supports_dist"
+    assert get_executor("streaming").requires == "supports_streaming"
+    with pytest.raises(ValueError, match="did you mean 'local'"):
+        get_executor("locl")
+
+
+@pytest.mark.parametrize("method,executor", [
+    ("cp_nn_hals", "dist"), ("tucker_hooi", "dist"),
+    ("cp_als_streaming", "dist"),
+    ("cp_als", "streaming"), ("cp_nn_hals", "streaming"),
+    ("tucker_hooi", "streaming"),
+])
+def test_capability_gate_rejects_with_listing(method, executor):
+    flag = "supports_dist" if executor == "dist" else "supports_streaming"
+    with pytest.raises(ValueError, match=flag):
+        require_capability(method, executor)
+    # the same gate fires at RunConfig construction
+    rank = (3, 3, 3) if method == "tucker_hooi" else 4
+    with pytest.raises(ValueError, match=flag):
+        RunConfig(method=MethodConfig(name=method, rank=rank),
+                  exec=ExecConfig(executor=executor))
+
+
+def test_gate_accepts_capable_combos():
+    for method in ("cp_als", "cp_nn_hals", "tucker_hooi", "cp_als_streaming"):
+        require_capability(method, "local")
+    require_capability("cp_als", "dist")
+    require_capability("cp_als_streaming", "streaming")
+
+
+# ---------------------------------------------------------------------------
+# Session: parity with the old API, bit-exactly
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method,rank", [
+    ("cp_als", 4), ("cp_nn_hals", 4), ("tucker_hooi", (3, 3, 3)),
+])
+def test_session_matches_methods_fit_bit_exactly(method, rank):
+    from repro.ingest import ingest
+    from repro.methods import fit as methods_fit
+
+    t = lowrank()
+    cfg = RunConfig(method=MethodConfig(name=method, rank=rank, niters=5))
+    dec = run(cfg, tensor=t)
+    # impl="auto" == the RunConfig's default plan policy (bare methods.fit
+    # defaults to the pinned "segment" policy instead)
+    ref = methods_fit(ingest(t), rank, method=method, niters=5, key=KEY,
+                      impl="auto")
+    np.testing.assert_array_equal(np.asarray(dec.fit), np.asarray(ref.fit))
+    for a, b in zip(dec.factors, ref.factors):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_streaming_executor_matches_methods_fit_bit_exactly():
+    from repro.methods import fit as methods_fit
+
+    t = lowrank()
+    cfg = RunConfig(method=MethodConfig(name="cp_als_streaming", rank=4,
+                                        niters=5),
+                    exec=ExecConfig(executor="streaming", n_chunks=3))
+    dec = run(cfg, tensor=t)
+    ref = methods_fit(t, 4, method="cp_als_streaming", niters=5, key=KEY,
+                      n_chunks=3)
+    np.testing.assert_array_equal(np.asarray(dec.fit), np.asarray(ref.fit))
+    for a, b in zip(dec.factors, ref.factors):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_session_paper_tensor_parity_with_reorder():
+    """Scaled paper tensor through degree_sort: Session == direct ingest +
+    methods.fit, factors restored to original labels on both sides."""
+    from repro.core import paper_dataset
+    from repro.ingest import ingest
+    from repro.methods import fit as methods_fit
+
+    t = paper_dataset("yelp", KEY, scale=0.001)
+    cfg = RunConfig(data=DataConfig(reorder="degree_sort"),
+                    method=MethodConfig(rank=8, niters=3))
+    dec = run(cfg, tensor=t)
+    ref = methods_fit(ingest(t, reorder="degree_sort"), 8, niters=3, key=KEY,
+                      impl="auto")
+    np.testing.assert_array_equal(np.asarray(dec.fit), np.asarray(ref.fit))
+    for a, b in zip(dec.factors, ref.factors):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_dist_executor_matches_dist_cp_als_bit_exactly():
+    """The dist executor is the shard_map driver behind the facade
+    (subprocess: forces 8 host devices without polluting this process)."""
+    code = """
+import jax, numpy as np
+from repro.api import RunConfig, MethodConfig, ExecConfig, run
+from repro.core import random_sparse
+from repro.core.distributed import dist_cp_als
+from repro.dist.collectives import make_mesh
+t = random_sparse((37, 23, 19), 1500, jax.random.PRNGKey(5))
+cfg = RunConfig(method=MethodConfig(rank=5, niters=4),
+                exec=ExecConfig(executor="dist",
+                                mesh_shape={"data": 4, "model": 2}))
+dec = run(cfg, tensor=t)
+f, lam, fit = dist_cp_als(t, 5, make_mesh((4, 2), ("data", "model")),
+                          niters=4, key=jax.random.PRNGKey(0))
+np.testing.assert_array_equal(np.asarray(dec.fit), np.asarray(fit))
+for a, b in zip(dec.factors, f):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+print("DIST-API OK")
+"""
+    import os
+
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               PYTHONPATH=str(ROOT / "src"))
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=600, env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr[-3000:]}"
+    assert "DIST-API OK" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# Session: lazy stage caching + serve handle
+# ---------------------------------------------------------------------------
+
+def test_stages_are_lazy_and_cached(monkeypatch):
+    t = lowrank()
+    sess = Session.from_config(
+        RunConfig(method=MethodConfig(rank=4, niters=3)), tensor=t)
+    ing1 = sess.ingest()
+    assert sess.ingest() is ing1
+    plan1 = sess.plan()
+    assert sess.plan() is plan1
+    dec1 = sess.fit()
+    assert sess.fit() is dec1  # cached
+    assert sess.fit(force=True) is not dec1
+
+
+def test_streaming_method_has_no_plan():
+    sess = Session.from_config(
+        RunConfig(method=MethodConfig(name="cp_als_streaming", rank=4,
+                                      niters=2)), tensor=lowrank())
+    assert sess.plan() is None
+    assert "no per-mode plan" in sess.plan_report()
+
+
+def test_serve_handle_reconstructs_known_entries():
+    t = lowrank()
+    sess = Session.from_config(
+        RunConfig(method=MethodConfig(rank=6, niters=20)), tensor=t)
+    handle = sess.serve_handle()
+    assert isinstance(handle, ServeHandle)
+    assert handle.dims == t.dims
+    got = handle.query(np.asarray(t.inds[:64]))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(t.vals[:64]),
+                               rtol=0.05, atol=0.05)
+
+
+def test_session_adopts_prebuilt_ingested_handle():
+    """Several sessions can share one ingest (sort + stats + CSF built
+    once): a pre-built Ingested handle passed as ``tensor`` IS the ingest
+    stage, and the fit matches the from-raw-tensor session bit-exactly."""
+    from repro.ingest import ingest
+
+    t = lowrank()
+    ing = ingest(t)
+    cfg = RunConfig(method=MethodConfig(rank=4, niters=3))
+    sess = Session.from_config(cfg, tensor=ing)
+    assert sess.ingest() is ing
+    dec = sess.fit()
+    ref = run(cfg, tensor=t)
+    np.testing.assert_array_equal(np.asarray(dec.fit), np.asarray(ref.fit))
+    for a, b in zip(dec.factors, ref.factors):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_dist_plan_allow_inexpressible_names_the_field():
+    """Any plan.allow entry the shard_map body cannot express is rejected
+    naming plan.allow — never silently filtered out, never a deep planner
+    error with allow=()."""
+    for allow in (("pallas",), ("segment", "pallas")):
+        cfg = RunConfig(plan=PlanConfig(allow=allow),
+                        exec=ExecConfig(executor="dist"))
+        sess = Session.from_config(cfg, tensor=lowrank())
+        with pytest.raises(ConfigError, match=r"plan\.allow.*pallas"):
+            sess.plan()
+
+
+def test_cli_missing_source_is_a_formatted_error(capsys):
+    from repro.api.cli import main
+
+    rc = main(["fit", "--source", "/no/such/file.tns", "--rank", "4",
+               "--dryrun"])
+    assert rc == 2
+    assert "error:" in capsys.readouterr().err
+
+
+def test_dist_executor_rejects_tol():
+    cfg = RunConfig(method=MethodConfig(rank=4, niters=2, tol=1e-4),
+                    exec=ExecConfig(executor="dist"))
+    with pytest.raises(ValueError, match=r"method\.tol"):
+        run(cfg, tensor=lowrank())
+
+
+def test_local_streaming_honors_chunk_nnz():
+    """exec.chunk_nnz must reach the chunk source under the local executor
+    (n_chunks is only forwarded when actually configured)."""
+    t = lowrank()  # 720 nnz
+    cfg = RunConfig(method=MethodConfig(name="cp_als_streaming", rank=4,
+                                        niters=2),
+                    exec=ExecConfig(executor="local", chunk_nnz=100))
+    from repro.methods import fit as methods_fit
+
+    dec = run(cfg, tensor=t)
+    ref = methods_fit(t, 4, method="cp_als_streaming", niters=2, key=KEY,
+                      chunk_nnz=100)
+    np.testing.assert_array_equal(np.asarray(dec.fit), np.asarray(ref.fit))
+
+
+def test_reserved_method_option_rejected_at_construction():
+    """An option that shadows a section-backed kwarg (niters/key/...) would
+    be silently overwritten at dispatch — reject it up front."""
+    with pytest.raises(ConfigError, match=r"method\.options.*niters"):
+        MethodConfig(options={"niters": 50})
+    # chunk geometry is exec-section-owned (exec.n_chunks/chunk_nnz)
+    with pytest.raises(ConfigError, match=r"method\.options.*n_chunks"):
+        MethodConfig(name="cp_als_streaming", options={"n_chunks": 8})
+
+
+def test_serve_handle_is_cached():
+    sess = Session.from_config(
+        RunConfig(method=MethodConfig(rank=4, niters=2)), tensor=lowrank())
+    h1 = sess.serve_handle()
+    assert sess.serve_handle() is h1
+    sess.fit(force=True)  # a re-fit invalidates the handle
+    assert sess.serve_handle() is not h1
+
+
+def test_unknown_method_option_rejected_with_field_path():
+    """A typo'd method option fails with method.options named (and a
+    nearest-name hint), not a raw TypeError from inside the fit."""
+    cfg = RunConfig(method=MethodConfig(rank=4, niters=2,
+                                        options={"timerz": {}}))
+    with pytest.raises(ValueError,
+                       match=r"method\.options.*timerz.*did you mean"):
+        run(cfg, tensor=lowrank())
+
+
+def test_streaming_rejects_pinned_plan_policy():
+    """A plan policy streaming cannot execute is rejected, not silently
+    dropped (parity with the dist executor's inexpressible-plan errors)."""
+    cfg = RunConfig(plan=PlanConfig(policy="segment"),
+                    method=MethodConfig(name="cp_als_streaming", rank=4,
+                                        niters=2))
+    with pytest.raises(ConfigError, match=r"plan\.policy"):
+        Session.from_config(cfg, tensor=lowrank()).plan()
+
+
+def test_streaming_rejects_allow_excluding_gather_scatter():
+    cfg = RunConfig(plan=PlanConfig(allow=("segment",)),
+                    method=MethodConfig(name="cp_als_streaming", rank=4,
+                                        niters=2))
+    with pytest.raises(ConfigError, match=r"plan\.policy"):
+        Session.from_config(cfg, tensor=lowrank()).plan()
+
+
+def test_batch_method_rejects_chunk_geometry():
+    cfg = RunConfig(method=MethodConfig(rank=4, niters=2),
+                    exec=ExecConfig(n_chunks=4))
+    with pytest.raises(ValueError, match=r"exec\.n_chunks"):
+        run(cfg, tensor=lowrank())
+
+
+def test_cli_option_requires_key_value(capsys):
+    from repro.api.cli import main
+
+    rc = main(["fit", "--dataset", "yelp", "--option", "decay", "--dryrun"])
+    assert rc == 2
+    assert "expected KEY=VALUE" in capsys.readouterr().err
+
+
+def test_session_rejects_tensor_plus_source():
+    with pytest.raises(ValueError, match=r"data\.source"):
+        Session.from_config(RunConfig(data=DataConfig(dataset="yelp")),
+                            tensor=lowrank())
+
+
+def test_session_without_data_errors_clearly():
+    with pytest.raises(ValueError, match="names no data"):
+        Session.from_config(RunConfig()).ingest()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / resume through the Session
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method,rank", [
+    ("cp_als", 4), ("cp_nn_hals", 4), ("tucker_hooi", (3, 3, 3)),
+    ("cp_als_streaming", 4),
+])
+def test_session_kill_and_resume_bit_exact(tmp_path, method, rank):
+    """A fit killed mid-run (simulated: niters cut short) resumes from the
+    checkpoint dir in a FRESH session — rebuilt from serialized config, as
+    a restarted process would — and lands bit-exactly on the uninterrupted
+    run's factors."""
+    t = lowrank()
+    nc = 3 if method == "cp_als_streaming" else None
+    full = run(RunConfig(method=MethodConfig(name=method, rank=rank,
+                                             niters=8),
+                         exec=ExecConfig(n_chunks=nc)), tensor=t)
+
+    ck = str(tmp_path / "ck")
+    killed = RunConfig(
+        method=MethodConfig(name=method, rank=rank, niters=3),
+        exec=ExecConfig(checkpoint_dir=ck, n_chunks=nc))
+    run(killed, tensor=t)
+
+    resumed_cfg = RunConfig.from_json(
+        killed.replace(method=MethodConfig(
+            name=method, rank=rank, niters=8)).to_json())
+    sess = Session.from_config(resumed_cfg, tensor=t)
+    state = sess.resume_state()
+    assert state is not None and int(state.iteration) == 3
+    resumed = sess.fit()
+    for a, b in zip(full.factors, resumed.factors):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(full.fit),
+                                  np.asarray(resumed.fit))
+
+
+def test_resume_rejects_rank_and_seed_mismatch(tmp_path):
+    """Resuming a checkpoint written at a different rank (or seed) must
+    fail loudly, not hand back a silently-wrong decomposition."""
+    t = lowrank()
+    ck = str(tmp_path / "ck")
+    run(RunConfig(method=MethodConfig(rank=4, niters=2),
+                  exec=ExecConfig(checkpoint_dir=ck)), tensor=t)
+    with pytest.raises(ValueError, match=r"method\.rank.*4.*8"):
+        run(RunConfig(method=MethodConfig(rank=8, niters=4),
+                      exec=ExecConfig(checkpoint_dir=ck)), tensor=t)
+    with pytest.raises(ValueError, match=r"method\.seed"):
+        run(RunConfig(method=MethodConfig(rank=4, niters=4, seed=9),
+                      exec=ExecConfig(checkpoint_dir=ck)), tensor=t)
+
+
+def test_streaming_run_rejects_pinned_policy_programmatically():
+    """The pinned-policy gate fires on run(cfg) too, not only when the CLI
+    happens to call plan_report()."""
+    cfg = RunConfig(plan=PlanConfig(policy="segment"),
+                    method=MethodConfig(name="cp_als_streaming", rank=4,
+                                        niters=2),
+                    exec=ExecConfig(executor="streaming"))
+    with pytest.raises(ConfigError, match=r"plan\.policy"):
+        run(cfg, tensor=lowrank())
+
+
+def test_resume_rejects_method_mismatch(tmp_path):
+    t = lowrank()
+    ck = str(tmp_path / "ck")
+    run(RunConfig(method=MethodConfig(rank=4, niters=2),
+                  exec=ExecConfig(checkpoint_dir=ck)), tensor=t)
+    other = RunConfig(method=MethodConfig(name="cp_nn_hals", rank=4,
+                                          niters=4),
+                      exec=ExecConfig(checkpoint_dir=ck))
+    with pytest.raises(ValueError, match="written by method"):
+        Session.from_config(other, tensor=t).resume_state()
+
+
+def test_dist_executor_rejects_checkpointing():
+    cfg = RunConfig(method=MethodConfig(rank=4, niters=2),
+                    exec=ExecConfig(executor="dist",
+                                    checkpoint_dir="/tmp/nope"))
+    with pytest.raises(ValueError, match="checkpoint"):
+        run(cfg, tensor=lowrank())
+
+
+# ---------------------------------------------------------------------------
+# CLI: arg -> RunConfig translation, capability matrices, suggestions
+# ---------------------------------------------------------------------------
+
+def test_cli_list_matrices_come_from_registries(capsys):
+    from repro.api.cli import main
+
+    assert main(["--list-methods"]) == 0
+    out = capsys.readouterr().out
+    for name in ("cp_als", "cp_nn_hals", "tucker_hooi", "cp_als_streaming",
+                 "local", "dist", "streaming"):
+        assert name in out
+    assert main(["--list-impls"]) == 0
+    out = capsys.readouterr().out
+    for name in ("gather_scatter", "segment", "pallas", "rowloop", "mttkrp",
+                 "ttmc"):
+        assert name in out
+
+
+def test_cli_args_build_runconfig():
+    import argparse
+
+    from repro.api.cli import config_from_args, main
+
+    ns = argparse.Namespace(
+        config=None, source=None, dataset="yelp", scale=0.001, data_seed=None,
+        reorder="degree_sort", compact=None, cache=None, impl="segment",
+        calibrate=None, method="tucker_hooi", rank=[3, 3, 3], iters=4,
+        tol=None, seed=9, option=["verbose=false"], executor=None,
+        checkpoint_dir=None, checkpoint_every=None, monitor=None,
+        n_chunks=None, chunk_nnz=None)
+    cfg = config_from_args(ns)
+    assert cfg.data.dataset == "yelp" and cfg.data.reorder == "degree_sort"
+    assert cfg.plan.policy == "segment"
+    assert cfg.method.name == "tucker_hooi" and cfg.method.rank == (3, 3, 3)
+    assert cfg.method.options == {"verbose": False}
+    assert cfg.method.seed == 9
+
+
+def test_cli_config_file_plus_override(tmp_path):
+    from repro.api.cli import main
+
+    cfg = RunConfig(data=DataConfig(dataset="yelp", scale=0.0005),
+                    method=MethodConfig(rank=8, niters=2))
+    f = tmp_path / "run.json"
+    f.write_text(cfg.to_json())
+    # --dryrun plans without fitting; --rank overrides the file
+    assert main(["fit", "--config", str(f), "--rank", "4", "--dryrun"]) == 0
+
+
+def test_cli_config_file_bad_section_is_a_config_error(tmp_path, capsys):
+    """A config file whose section is not a mapping must exit 2 with the
+    formatted error even when CLI flags overlay that section."""
+    from repro.api.cli import main
+
+    f = tmp_path / "bad.json"
+    f.write_text('{"data": []}')
+    rc = main(["fit", "--config", str(f), "--dataset", "yelp", "--dryrun"])
+    assert rc == 2
+    assert "wants a mapping" in capsys.readouterr().err
+
+
+def test_cli_unknown_method_suggests_nearest(capsys):
+    from repro.api.cli import main
+
+    rc = main(["fit", "--dataset", "yelp", "--method", "cp_alss", "--dryrun"])
+    assert rc == 2
+    err = capsys.readouterr().err
+    assert "did you mean 'cp_als'" in err
+
+
+def test_cli_smoke_fit_subprocess():
+    """`python -m repro fit --dryrun` end to end in a real interpreter (the
+    CI smoke job)."""
+    import os
+
+    env = dict(os.environ, PYTHONPATH=str(ROOT / "src"))
+    r = subprocess.run(
+        [sys.executable, "-m", "repro", "fit", "--dataset", "yelp",
+         "--scale", "0.0005", "--rank", "8", "--iters", "2", "--dryrun"],
+        capture_output=True, text=True, timeout=300, env=env)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "plan only, skipping execution" in r.stdout
+
+
+# ---------------------------------------------------------------------------
+# launchers ride the Session (no second plumbing)
+# ---------------------------------------------------------------------------
+
+def test_serve_cpd_config_shares_the_surface():
+    from repro.launch.serve import cpd_config
+
+    cfg = cpd_config("cpals-yelp", smoke=True, rank=8, niters=2,
+                     policy="auto", seed=0, reorder="identity", cache=None,
+                     method="cp_als")
+    assert isinstance(cfg, RunConfig)
+    assert cfg.data.dataset == "yelp" and cfg.data.scale == 0.002
+    # unknown methods fail through the registry gate, with the listing
+    with pytest.raises(ValueError, match="unknown method"):
+        cpd_config("cpals-yelp", smoke=True, rank=8, niters=2, policy="auto",
+                   seed=0, reorder="identity", cache=None, method="nope")
+
+
+def test_legacy_cp_als_warns_deprecation_once():
+    import warnings
+
+    from repro.core import cpals as cpals_mod
+
+    t = lowrank()
+    cpals_mod._warned_legacy = False
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        cpals_mod.cp_als(t, rank=3, niters=1)
+        cpals_mod.cp_als(t, rank=3, niters=1)
+    depr = [x for x in w if issubclass(x.category, DeprecationWarning)
+            and "repro.api" in str(x.message)]
+    assert len(depr) == 1  # once per process, not per call
