@@ -4,7 +4,7 @@
 PY        ?= python
 PYTHONPATH := src
 
-.PHONY: test bench bench-quick lint quickstart clean
+.PHONY: test bench bench-quick lint quickstart clean ratchet anchor
 
 test:
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m pytest -x -q
@@ -29,6 +29,18 @@ bench-methods:
 
 bench-api:
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.bench_api --json BENCH_api.json
+
+bench-serve:
+	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.bench_serve --json BENCH_serve.json
+
+# perf ratchet: latest BENCH_history record vs the last anchor (>10% time
+# regression fails).  `make anchor` promotes the latest records to the new
+# accepted floor after a deliberate perf change lands.
+ratchet:
+	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.ratchet
+
+anchor:
+	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.ratchet --anchor
 
 # no third-party linter is baked into the image; byte-compile every tree
 # (syntax + tabs/indentation errors) and import the package graph.

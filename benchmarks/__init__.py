@@ -1,0 +1,3 @@
+"""Benchmark suite (``python -m benchmarks.run``) — one section per paper
+table/figure, plus the trajectory store and perf ratchet
+(``benchmarks.history`` / ``python -m benchmarks.ratchet``)."""

@@ -1,0 +1,73 @@
+"""Serving latency: batched ``values_at`` queries through ``ServeHandle``.
+
+The paper's pipeline ends at a fitted decomposition; what production cares
+about afterwards is reconstruction-query latency.  This section times the
+exact path ``python -m repro serve`` runs — ``Session.serve_handle()`` over
+a warm ingested workspace, then ``ServeHandle.benchmark`` driving jitted
+``values_at`` in fixed-size batches — and feeds the perf ratchet its
+"serve latency" metric (``serve_s`` / ``latency_ms_per_batch``).
+
+  PYTHONPATH=src python -m benchmarks.bench_serve [--json BENCH_serve.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from .common import ingested_paper_dataset
+
+DATASET = "yelp"
+
+
+def run(scale: float = 0.002, rank: int = 16, niters: int = 5,
+        queries: int = 4096, batch: int = 256, seed: int = 0) -> list[dict]:
+    from repro.api import MethodConfig, RunConfig, Session
+
+    ing = ingested_paper_dataset(DATASET, scale=scale, seed=seed)
+    cfg = RunConfig(method=MethodConfig(name="cp_als", rank=rank,
+                                        niters=niters, seed=seed))
+    sess = Session.from_config(cfg, tensor=ing)
+    handle = sess.serve_handle()
+    bench = handle.benchmark(queries=queries, batch=batch, seed=seed)
+    n_batches = bench["queries"] // batch
+    return [{
+        "dataset": DATASET, "scale": scale, "rank": rank,
+        "nnz": ing.tensor.nnz, "fit": round(handle.fit, 4),
+        "queries": bench["queries"], "batch": batch,
+        "serve_s": round(bench["serve_s"], 5),
+        "qps": round(bench["qps"], 1),
+        "latency_ms_per_batch": round(
+            bench["serve_s"] / max(n_batches, 1) * 1e3, 4),
+    }]
+
+
+def summarize(rows: list[dict]) -> dict:
+    """BENCH_serve.json payload (one cell: the serve ratchet's metrics)."""
+    r = rows[0]
+    return {"bench": "serve", **{k: r[k] for k in (
+        "dataset", "scale", "rank", "nnz", "queries", "batch",
+        "serve_s", "qps", "latency_ms_per_batch")}}
+
+
+def main() -> None:
+    from .common import emit
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.002)
+    ap.add_argument("--rank", type=int, default=16)
+    ap.add_argument("--queries", type=int, default=4096)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--json", type=Path, default=None,
+                    help="also write the summarize() JSON here")
+    args = ap.parse_args()
+    rows = run(scale=args.scale, rank=args.rank, queries=args.queries,
+               batch=args.batch)
+    emit(rows)
+    if args.json is not None:
+        args.json.write_text(json.dumps(summarize(rows), indent=1))
+        print(f"# wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

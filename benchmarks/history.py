@@ -1,0 +1,265 @@
+"""Benchmark trajectory store + the perf-ratchet comparison logic.
+
+``benchmarks/run.py`` used to emit snapshot ``BENCH_*.json`` files that each
+run overwrote — no way to tell whether this week's MTTKRP got slower than
+last week's.  This module turns the snapshots into a *trajectory*: every
+section appends one timestamped, git-sha-stamped record to
+``BENCH_history/<section>.jsonl`` (append-only JSONL, one JSON object per
+line), and :func:`ratchet_section` compares the latest record against the
+last *anchor* — failing when any tracked lower-is-better time metric
+regressed by more than ``tolerance`` (default 10%).
+
+Record shape (one line)::
+
+    {"section": "cpals", "ts": "2026-08-08T12:00:00+00:00",
+     "git_sha": "b8b142e", "anchor": false, "summary": {...}}
+
+*Anchors* are ordinary records re-appended with ``"anchor": true`` (see
+:func:`promote_anchor` / ``ratchet.py --anchor``): the baseline for a
+section is its **last anchor**, or the first record when no anchor exists
+yet, so promoting an anchor is a plain append — history is never rewritten.
+
+The :data:`SECTIONS` table is the single registry shared by ``run.py``
+(which sections emit JSON summaries, where the legacy snapshot lands) and
+``ratchet.py`` (which metrics inside each summary are ratcheted).  Metric
+extractors return **lower-is-better** values only — fit/qps/speedup never
+belong here, a "regression" in those is an improvement.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import subprocess
+from datetime import datetime, timezone
+from pathlib import Path
+from typing import Callable, Optional
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+HISTORY_DIR = REPO_ROOT / "BENCH_history"
+DEFAULT_TOLERANCE = 0.10
+
+
+# ---------------------------------------------------------------------------
+# record I/O
+# ---------------------------------------------------------------------------
+
+
+def git_sha(root: Path = REPO_ROOT) -> str:
+    """Short sha of HEAD, or "unknown" outside a git checkout."""
+    try:
+        out = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                             cwd=root, capture_output=True, text=True,
+                             timeout=10)
+    except (OSError, subprocess.TimeoutExpired):
+        return "unknown"
+    sha = out.stdout.strip()
+    return sha if out.returncode == 0 and sha else "unknown"
+
+
+def history_path(section: str, history_dir: Path = HISTORY_DIR) -> Path:
+    return Path(history_dir) / f"{section}.jsonl"
+
+
+def append_record(section: str, summary: dict, *,
+                  history_dir: Path = HISTORY_DIR,
+                  ts: Optional[str] = None, sha: Optional[str] = None,
+                  anchor: bool = False) -> dict:
+    """Append one record to the section's trajectory; returns the record."""
+    rec = {
+        "section": section,
+        "ts": ts if ts is not None
+        else datetime.now(timezone.utc).isoformat(timespec="seconds"),
+        "git_sha": sha if sha is not None else git_sha(),
+        "anchor": bool(anchor),
+        "summary": summary,
+    }
+    path = history_path(section, history_dir)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "a") as f:
+        f.write(json.dumps(rec, sort_keys=True) + "\n")
+    return rec
+
+
+def load_history(section: str,
+                 history_dir: Path = HISTORY_DIR) -> list[dict]:
+    """All records of a section, oldest first.  Corrupt lines (torn
+    concurrent appends, hand edits) are skipped, never fatal."""
+    path = history_path(section, history_dir)
+    if not path.exists():
+        return []
+    records = []
+    for line in path.read_text().splitlines():
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError:
+            continue
+        if isinstance(rec, dict) and isinstance(rec.get("summary"), dict):
+            records.append(rec)
+    return records
+
+
+def baseline_record(records: list[dict]) -> Optional[dict]:
+    """The comparison baseline: the LAST anchor, else the first record."""
+    for rec in reversed(records):
+        if rec.get("anchor"):
+            return rec
+    return records[0] if records else None
+
+
+def promote_anchor(section: str, *,
+                   history_dir: Path = HISTORY_DIR) -> Optional[dict]:
+    """Re-append the latest record as the section's new anchor (a plain
+    append — the trajectory is never rewritten).  None when no history."""
+    records = load_history(section, history_dir)
+    if not records:
+        return None
+    latest = records[-1]
+    return append_record(section, latest["summary"], history_dir=history_dir,
+                         ts=latest.get("ts"), sha=latest.get("git_sha"),
+                         anchor=True)
+
+
+# ---------------------------------------------------------------------------
+# metric extraction — lower-is-better time metrics ONLY
+# ---------------------------------------------------------------------------
+
+
+def _metrics_plan(s: dict) -> dict:
+    out = {}
+    for ds, d in s.get("datasets", {}).items():
+        out[f"{ds}.auto_iteration_ms"] = d.get("iteration_ms", {}).get("auto")
+        out[f"{ds}.best_fixed_ms"] = d.get("best_fixed_ms")
+    return out
+
+
+def _metrics_ingest(s: dict) -> dict:
+    out = {}
+    for k in ("cold_ms", "warm_ms"):
+        out[f"cache.{k}"] = s.get("cache", {}).get(k)
+    for mode, d in s.get("mttkrp", {}).items():
+        out[f"{mode}.natural_ms"] = d.get("natural_ms")
+        out[f"{mode}.degree_sort_ms"] = d.get("degree_sort_ms")
+    return out
+
+
+def _metrics_cpals(s: dict) -> dict:
+    out = {}
+    for cell, d in s.get("cells", {}).items():
+        out[f"{cell}.total_s"] = d.get("total_s")
+        out[f"{cell}.mttkrp_s"] = d.get("routines_s", {}).get("mttkrp")
+    return out
+
+
+def _metrics_methods(s: dict) -> dict:
+    out = {}
+    for m, d in s.get("methods", {}).items():
+        for ds, dd in d.get("datasets", {}).items():
+            out[f"{m}.{ds}.iter_ms"] = dd.get("iter_ms")
+    return out
+
+
+def _metrics_api(s: dict) -> dict:
+    return {"direct_s": s.get("direct_s"), "session_s": s.get("session_s")}
+
+
+def _metrics_serve(s: dict) -> dict:
+    return {"serve_s": s.get("serve_s"),
+            "latency_ms_per_batch": s.get("latency_ms_per_batch")}
+
+
+@dataclasses.dataclass(frozen=True)
+class Section:
+    """One ratcheted benchmark section: which snapshot file ``run.py``
+    writes (the legacy ``--<name>-json`` flag keeps working) and which
+    summary fields the ratchet compares."""
+
+    name: str
+    metrics: Callable[[dict], dict]
+
+    @property
+    def legacy_json(self) -> str:
+        return f"BENCH_{self.name}.json"
+
+
+SECTIONS: dict[str, Section] = {s.name: s for s in (
+    Section("plan", _metrics_plan),
+    Section("ingest", _metrics_ingest),
+    Section("cpals", _metrics_cpals),
+    Section("methods", _metrics_methods),
+    Section("api", _metrics_api),
+    Section("serve", _metrics_serve),
+)}
+
+
+def extract_metrics(section: str, summary: dict) -> dict:
+    """The section's finite, positive, lower-is-better metrics.  NaN/inf,
+    non-numeric and non-positive values are dropped here so every consumer
+    (ratchet, tests, reports) sees only comparable numbers."""
+    raw = SECTIONS[section].metrics(summary)
+    return {k: float(v) for k, v in raw.items()
+            if isinstance(v, (int, float)) and not isinstance(v, bool)
+            and math.isfinite(v) and v > 0}
+
+
+# ---------------------------------------------------------------------------
+# comparison
+# ---------------------------------------------------------------------------
+
+
+def compare_metrics(base: dict, new: dict, *,
+                    tolerance: float = DEFAULT_TOLERANCE) -> list[dict]:
+    """Regressions of ``new`` vs ``base``: every shared metric whose new
+    value exceeds base * (1 + tolerance).  Metrics present on only one side
+    (benchmark grew/shrank a dataset) are not comparable and are skipped.
+    Returns a deterministically ordered list of
+    ``{"metric", "base", "new", "ratio"}`` dicts, worst first."""
+    regressions = []
+    for k in sorted(set(base) & set(new)):
+        b, n = float(base[k]), float(new[k])
+        if not (math.isfinite(b) and math.isfinite(n) and b > 0 and n > 0):
+            continue
+        if n > b * (1.0 + tolerance):
+            regressions.append(
+                {"metric": k, "base": b, "new": n, "ratio": n / b})
+    regressions.sort(key=lambda r: (-r["ratio"], r["metric"]))
+    return regressions
+
+
+def ratchet_section(section: str, *, history_dir: Path = HISTORY_DIR,
+                    tolerance: float = DEFAULT_TOLERANCE) -> dict:
+    """Ratchet verdict for one section.
+
+    Returns ``{"section", "status", "regressions", "base", "latest"}``
+    where status is one of:
+
+    * ``ok``        — latest within tolerance of the baseline (or latest IS
+                      the baseline: a fresh anchor trivially passes);
+    * ``regressed`` — at least one tracked metric slowed > tolerance;
+    * ``missing``   — no history file / no parseable records;
+    * ``no-metrics``— records exist but neither side yields a comparable
+                      metric (e.g. all-NaN summaries) — reported, not fatal.
+    """
+    records = load_history(section, history_dir)
+    if not records:
+        return {"section": section, "status": "missing",
+                "regressions": [], "base": None, "latest": None}
+    base_rec = baseline_record(records)
+    latest = records[-1]
+    base_m = extract_metrics(section, base_rec["summary"])
+    new_m = extract_metrics(section, latest["summary"])
+    meta = {"section": section,
+            "base": {"ts": base_rec.get("ts"),
+                     "git_sha": base_rec.get("git_sha"),
+                     "anchor": bool(base_rec.get("anchor"))},
+            "latest": {"ts": latest.get("ts"),
+                       "git_sha": latest.get("git_sha")}}
+    if not (set(base_m) & set(new_m)):
+        return {**meta, "status": "no-metrics", "regressions": []}
+    regressions = compare_metrics(base_m, new_m, tolerance=tolerance)
+    return {**meta,
+            "status": "regressed" if regressions else "ok",
+            "regressions": regressions}

@@ -1,0 +1,96 @@
+"""Perf ratchet over the benchmark trajectory.
+
+  PYTHONPATH=src python -m benchmarks.ratchet                 # check all
+  PYTHONPATH=src python -m benchmarks.ratchet --section cpals # check one
+  PYTHONPATH=src python -m benchmarks.ratchet --anchor        # promote
+
+Compares each section's **latest** ``BENCH_history/<section>.jsonl`` record
+against its **baseline** (the last anchor, else the first record) and exits
+nonzero when any tracked lower-is-better metric — MTTKRP time, per-iteration
+time, serve latency — regressed by more than ``--tolerance`` (default 10%).
+
+``--anchor`` promotes each section's latest record to the new anchor (an
+append, never a rewrite) — run it after a deliberate perf change lands so
+the ratchet measures drift from the new accepted floor, not from history.
+
+Sections with no history yet report ``missing`` and do not fail the run
+(a fresh checkout has nothing to regress against); ``--strict`` upgrades
+``missing`` to a failure for CI jobs that must have produced history.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+from typing import Optional, Sequence
+
+from .history import (DEFAULT_TOLERANCE, HISTORY_DIR, SECTIONS,
+                      promote_anchor, ratchet_section)
+
+
+def _print_result(res: dict, *, tolerance: float) -> None:
+    status = res["status"]
+    head = f"[{status:>9}] {res['section']}"
+    if res.get("base") and res.get("latest"):
+        head += (f"  base={res['base']['git_sha']}"
+                 f"{' (anchor)' if res['base']['anchor'] else ''}"
+                 f" -> latest={res['latest']['git_sha']}")
+    print(head)
+    for r in res["regressions"]:
+        print(f"    {r['metric']}: {r['base']:.6g} -> {r['new']:.6g} "
+              f"({(r['ratio'] - 1) * 100:+.1f}% > +{tolerance * 100:.0f}%)")
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Fail when the latest benchmark record regressed >10% "
+                    "against the last anchor (benchmarks/history.py).")
+    ap.add_argument("--history", type=Path, default=HISTORY_DIR,
+                    help="trajectory directory (BENCH_history)")
+    ap.add_argument("--section", action="append", default=None,
+                    choices=sorted(SECTIONS),
+                    help="check only these sections (repeatable; "
+                         "default: all)")
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE,
+                    help="allowed fractional slowdown (default 0.10)")
+    ap.add_argument("--anchor", action="store_true",
+                    help="promote each section's latest record to the new "
+                         "anchor instead of checking")
+    ap.add_argument("--strict", action="store_true",
+                    help="missing history is a failure, not a skip")
+    ap.add_argument("--json", type=Path, default=None,
+                    help="also write the verdicts as JSON here")
+    args = ap.parse_args(argv)
+    names = args.section or sorted(SECTIONS)
+
+    if args.anchor:
+        promoted = 0
+        for name in names:
+            rec = promote_anchor(name, history_dir=args.history)
+            if rec is None:
+                print(f"[  missing] {name}: no history to anchor")
+            else:
+                print(f"[ anchored] {name} @ {rec['git_sha']} ({rec['ts']})")
+                promoted += 1
+        return 0 if promoted else 1
+
+    results = [ratchet_section(name, history_dir=args.history,
+                               tolerance=args.tolerance) for name in names]
+    for res in results:
+        _print_result(res, tolerance=args.tolerance)
+    if args.json is not None:
+        args.json.write_text(json.dumps(results, indent=1, sort_keys=True))
+        print(f"# wrote {args.json}")
+
+    failed = [r for r in results if r["status"] == "regressed"
+              or (args.strict and r["status"] == "missing")]
+    if failed:
+        print(f"# RATCHET FAILED: {', '.join(r['section'] for r in failed)}")
+        return 1
+    print(f"# ratchet ok: {len(results)} section(s) within "
+          f"+{args.tolerance * 100:.0f}%")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -2,6 +2,13 @@
 
   PYTHONPATH=src python -m benchmarks.run            # all, CPU-scaled
   PYTHONPATH=src python -m benchmarks.run --quick    # smaller still
+
+Sections registered in ``benchmarks.history.SECTIONS`` emit a JSON summary
+twice: the legacy ``BENCH_<section>.json`` snapshot (``--<section>-json``
+overrides the path) and an appended record in
+``BENCH_history/<section>.jsonl`` — the trajectory ``benchmarks.ratchet``
+compares against its last anchor.  ``--no-history`` suppresses the append
+(one-off experiments that should not pollute the trajectory).
 """
 from __future__ import annotations
 
@@ -12,26 +19,40 @@ from pathlib import Path
 
 from . import (bench_api, bench_conflict, bench_cpals_routines, bench_ingest,
                bench_methods, bench_mttkrp_variants, bench_plan,
-               bench_scaling, bench_sort_build)
+               bench_scaling, bench_serve, bench_sort_build)
 from .common import emit
+from .history import HISTORY_DIR, SECTIONS, append_record
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--skip-scaling", action="store_true")
-    ap.add_argument("--plan-json", type=Path,
-                    default=Path(__file__).resolve().parents[1] / "BENCH_plan.json")
-    ap.add_argument("--ingest-json", type=Path,
-                    default=Path(__file__).resolve().parents[1] / "BENCH_ingest.json")
-    ap.add_argument("--cpals-json", type=Path,
-                    default=Path(__file__).resolve().parents[1] / "BENCH_cpals.json")
-    ap.add_argument("--methods-json", type=Path,
-                    default=Path(__file__).resolve().parents[1] / "BENCH_methods.json")
-    ap.add_argument("--api-json", type=Path,
-                    default=Path(__file__).resolve().parents[1] / "BENCH_api.json")
+    ap.add_argument("--history", type=Path, default=HISTORY_DIR,
+                    help="trajectory directory (BENCH_history)")
+    ap.add_argument("--no-history", action="store_true",
+                    help="skip the BENCH_history append (one-off runs)")
+    # one snapshot flag per registered section — the table in
+    # benchmarks.history is the single source of section names
+    for s in SECTIONS.values():
+        ap.add_argument(f"--{s.name}-json", type=Path,
+                        default=REPO_ROOT / s.legacy_json,
+                        dest=f"{s.name}_json")
     args = ap.parse_args()
     q = args.quick
+
+    def finish(section: str, rows: list[dict]) -> None:
+        """Summarize one registered section: legacy snapshot + trajectory."""
+        summary = _SUMMARIZERS[section](rows)
+        snap = getattr(args, f"{section}_json")
+        snap.write_text(json.dumps(summary, indent=1))
+        print(f"# wrote {snap}")
+        if not args.no_history:
+            rec = append_record(section, summary, history_dir=args.history)
+            print(f"# appended {section} @ {rec['git_sha']} "
+                  f"-> {args.history / (section + '.jsonl')}")
 
     t0 = time.time()
     print("# bench_mttkrp_variants (paper Figs 2/3/9/10)")
@@ -41,9 +62,7 @@ def main() -> None:
     print("# bench_plan (per-mode planner: auto vs fixed impl)")
     plan_rows = bench_plan.run(scale=0.002 if q else 0.004)
     emit(plan_rows)
-    args.plan_json.write_text(json.dumps(bench_plan.summarize(plan_rows),
-                                         indent=1))
-    print(f"# wrote {args.plan_json}")
+    finish("plan", plan_rows)
     print()
     print("# bench_ingest (cold vs warm cache; reordered vs natural MTTKRP)")
     # scale stays at 0.01 even under --quick: below ~50k nnz the warm path's
@@ -51,9 +70,7 @@ def main() -> None:
     ingest_rows = bench_ingest.run(scale=0.01)
     emit([r for r in ingest_rows if r["metric"] == "cache"])
     emit([r for r in ingest_rows if r["metric"] == "mttkrp"])
-    args.ingest_json.write_text(json.dumps(bench_ingest.summarize(ingest_rows),
-                                           indent=1))
-    print(f"# wrote {args.ingest_json}")
+    finish("ingest", ingest_rows)
     print()
     print("# bench_sort_build (paper Fig 1)")
     emit(bench_sort_build.run(scale=0.0008 if q else 0.0015))
@@ -65,29 +82,41 @@ def main() -> None:
     cpals_rows = bench_cpals_routines.run(scale=0.001 if q else 0.002,
                                           niters=5 if q else 20)
     emit(cpals_rows)
-    args.cpals_json.write_text(
-        json.dumps(bench_cpals_routines.summarize(cpals_rows), indent=1))
-    print(f"# wrote {args.cpals_json}")
+    finish("cpals", cpals_rows)
     print()
     print("# bench_methods (fit-vs-time across the method registry)")
     method_rows = bench_methods.run(scale=0.001 if q else 0.002)
     emit(method_rows)
-    args.methods_json.write_text(
-        json.dumps(bench_methods.summarize(method_rows), indent=1))
-    print(f"# wrote {args.methods_json}")
+    finish("methods", method_rows)
     print()
     print("# bench_api (Session facade overhead vs direct methods.fit)")
     api_rows = bench_api.run(scale=0.002, pairs=11 if q else 25)
     emit(api_rows)
-    args.api_json.write_text(json.dumps(bench_api.summarize(api_rows),
-                                        indent=1))
-    print(f"# wrote {args.api_json}")
+    finish("api", api_rows)
+    print()
+    print("# bench_serve (batched values_at query latency)")
+    serve_rows = bench_serve.run(scale=0.002, niters=3 if q else 5,
+                                 queries=2048 if q else 4096)
+    emit(serve_rows)
+    finish("serve", serve_rows)
     print()
     if not args.skip_scaling:
         print("# bench_scaling (paper Figs 9/10 analogue: host devices)")
         emit(bench_scaling.run())
         print()
     print(f"# total wall: {time.time() - t0:.1f}s")
+
+
+_SUMMARIZERS = {
+    "plan": bench_plan.summarize,
+    "ingest": bench_ingest.summarize,
+    "cpals": bench_cpals_routines.summarize,
+    "methods": bench_methods.summarize,
+    "api": bench_api.summarize,
+    "serve": bench_serve.summarize,
+}
+assert set(_SUMMARIZERS) == set(SECTIONS), \
+    "benchmarks.history.SECTIONS and run.py summarizers drifted apart"
 
 
 if __name__ == "__main__":

@@ -100,6 +100,9 @@ def _add_config_args(p: argparse.ArgumentParser) -> None:
     g.add_argument("--impl", default=None,
                    help="planner policy: auto or a registered impl name")
     g.add_argument("--calibrate", action="store_true", default=None)
+    g.add_argument("--recalibrate", action="store_true", default=None,
+                   help="force a fresh measured pass, overwriting the "
+                        "persisted autotune entry (implies --calibrate)")
     g = p.add_argument_group("method")
     g.add_argument("--method", default=None)
     g.add_argument("--rank", type=int, nargs="+", default=None,
@@ -159,6 +162,11 @@ def config_from_args(args: argparse.Namespace) -> RunConfig:
     put("data", "cache", args.cache)
     put("plan", "policy", args.impl)
     put("plan", "calibrate", args.calibrate)
+    if getattr(args, "recalibrate", None):
+        # the escape hatch implies a calibration run — setting only
+        # plan.recalibrate would trip PlanConfig's requires-calibrate check
+        base["plan"]["calibrate"] = True
+        base["plan"]["recalibrate"] = True
     put("method", "name", args.method)
     if args.rank is not None:
         put("method", "rank",

@@ -114,13 +114,18 @@ class PlanConfig:
 
     ``policy``: ``"auto"`` (cost-model argmin per mode) or a registered
     kernel-impl name that pins every mode.  ``calibrate`` replaces the cost
-    models with measured timings on the actual tensor.  ``allow`` restricts
-    the candidate set; ``backend`` overrides backend detection."""
+    models with measured timings on the actual tensor — persisted in the
+    ingest cache's autotune store when ``data.cache`` is set, so only the
+    first run times anything.  ``recalibrate`` is the escape hatch: force a
+    fresh measured pass and overwrite the stored entry (requires
+    ``calibrate``; the CLI's ``--recalibrate`` sets both).  ``allow``
+    restricts the candidate set; ``backend`` overrides backend detection."""
 
     _section = "plan"
 
     policy: str = "auto"
     calibrate: bool = False
+    recalibrate: bool = False
     backend: Optional[str] = None
     allow: Optional[tuple[str, ...]] = None
 
@@ -131,6 +136,10 @@ class PlanConfig:
                  self._section, "policy",
                  f"unknown impl {self.policy!r}; 'auto' or one of {names}"
                  + _suggest(self.policy, names))
+        _require(not self.recalibrate or self.calibrate,
+                 self._section, "recalibrate",
+                 "requires plan.calibrate=true (a recalibration IS a "
+                 "calibration run; the CLI's --recalibrate sets both)")
         if self.allow is not None:
             for a in self.allow:
                 _require(a in names, self._section, "allow",

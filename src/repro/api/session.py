@@ -218,15 +218,19 @@ class Session:
                     f"dist executor; the shard_map body expresses only "
                     f"{DIST_IMPLS}")
             allow = allow or DIST_IMPLS
+        factor_ranks = None
         if spec.kernel == "ttmc":
             from repro.methods.tucker_hooi import _kron_widths, _resolve_ranks
 
-            rank = _kron_widths(_resolve_ranks(cfg.method.rank, ing.dims))
+            factor_ranks = _resolve_ranks(cfg.method.rank, ing.dims)
+            rank = _kron_widths(factor_ranks)
         else:
             rank = cfg.method.rank
         self._plan = ing.plan(cfg.plan.policy, rank=rank, kernel=spec.kernel,
                               backend=cfg.plan.backend, allow=allow,
-                              calibrate=cfg.plan.calibrate)
+                              calibrate=cfg.plan.calibrate,
+                              factor_ranks=factor_ranks,
+                              recalibrate=cfg.plan.recalibrate)
         self._plan_done = True
         return self._plan
 

@@ -86,18 +86,31 @@ class Ingested:
     def plan(self, policy: str = "auto", *, rank=16,
              backend: Optional[str] = None,
              allow: Optional[Sequence[str]] = None,
-             calibrate: bool = False, kernel: str = "mttkrp"):
+             calibrate: bool = False, kernel: str = "mttkrp",
+             factor_ranks: Optional[Sequence[int]] = None,
+             autotune=None, recalibrate: bool = False):
         """Plan the decomposition, reusing the stats measured at ingest.
 
         ``kernel`` selects the scored kernel family ("mttkrp" for the CP
         methods, "ttmc" for Tucker/HOOI) — the stats are kernel-agnostic
-        tensor properties, so both reuse the same ingest-time measurement."""
+        tensor properties, so both reuse the same ingest-time measurement;
+        ``factor_ranks`` carries the per-mode Tucker ranks the ttmc
+        calibration path needs.  ``calibrate=True`` with a cache attached
+        consults the cache's persistent autotune store first (keyed by this
+        handle's content key), so a warm plan performs zero timing runs;
+        ``recalibrate=True`` forces a fresh measured pass and overwrites
+        the stored entry.  ``autotune`` overrides the store (any
+        :class:`~repro.plan.autotune.AutotuneStore` or root path)."""
         from repro.plan import plan_decomposition
 
+        if autotune is None and self.cache is not None:
+            autotune = self.cache.autotune
         return plan_decomposition(
             self.tensor, policy, rank=rank, backend=backend,
             block=self.block, row_tile=self.row_tile, allow=allow,
-            calibrate=calibrate, stats=self.stats, kernel=kernel)
+            calibrate=calibrate, stats=self.stats, kernel=kernel,
+            factor_ranks=factor_ranks, autotune=autotune,
+            tensor_key=self.key, recalibrate=recalibrate)
 
     # -- workspaces --------------------------------------------------------
     def csf_for(self, mode: int):

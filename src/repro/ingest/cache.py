@@ -92,6 +92,21 @@ class IngestCache:
         self.root = Path(root)
         self.hits = 0
         self.misses = 0
+        self._autotune = None
+
+    @property
+    def autotune(self):
+        """The persistent calibration store riding inside this cache
+        (``repro.plan.autotune.AutotuneStore`` rooted at
+        ``<root>/autotune``): measured ``plan(calibrate=True)`` outcomes
+        live next to the workspaces they were measured on, so any
+        ``Ingested`` handle with a cache attached gets warm calibration
+        for free."""
+        if self._autotune is None:
+            from repro.plan.autotune import AutotuneStore
+
+            self._autotune = AutotuneStore(self.root / "autotune")
+        return self._autotune
 
     def _dir(self, key: str) -> Path:
         return self.root / key[:2] / key

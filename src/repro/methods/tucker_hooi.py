@@ -171,13 +171,15 @@ def tucker_hooi(
 
     if plan is None:
         if ing is not None:
-            plan = ing.plan(impl, rank=widths, kernel="ttmc")
+            plan = ing.plan(impl, rank=widths, kernel="ttmc",
+                            factor_ranks=ranks)
         else:
             from repro.plan import plan_decomposition
 
             plan = plan_decomposition(t, impl, rank=widths, block=block,
                                       row_tile=row_tile, kernel="ttmc",
-                                      with_stats=impl == "auto")
+                                      with_stats=impl == "auto",
+                                      factor_ranks=ranks)
     ws = ing.workspace(plan) if ing is not None else build_workspace(t, plan)
     impls = plan.impls
 

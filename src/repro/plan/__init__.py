@@ -7,10 +7,14 @@ registered implementations' declared cost models, and emit a
 launch layer all execute.  See ``docs/architecture.md`` ("The decomposition
 planner").
 """
-from .stats import CONTENTION_THRESHOLD, ModeStats, mode_stats, tensor_stats
+from .stats import (CONTENTION_THRESHOLD, ModeStats, mode_stats,
+                    stats_digest, tensor_stats)
 from .planner import DecompPlan, ModePlan, plan_decomposition, plan_mode
+from .autotune import AutotuneStore, calibration_key, registry_fingerprint
 
 __all__ = [
     "CONTENTION_THRESHOLD", "ModeStats", "mode_stats", "tensor_stats",
+    "stats_digest",
     "DecompPlan", "ModePlan", "plan_decomposition", "plan_mode",
+    "AutotuneStore", "calibration_key", "registry_fingerprint",
 ]

@@ -1,0 +1,154 @@
+"""Persistent autotune store — measured calibration outcomes that outlive
+the process.
+
+``plan_decomposition(calibrate=True)`` replaces the registry's declared
+cost models with measured per-impl kernel timings on the actual tensor.
+That measurement is planning-time compute in the same budget class as the
+CSF sort — and, like the sort (``repro.ingest.IngestCache``), its outcome
+is a pure function of inputs that rarely change: the tensor's bytes, the
+candidate impl set, the jax backend, the scored rank and the workspace
+geometry.  This module persists those outcomes so a warm plan performs
+**zero timing runs**:
+
+* :func:`calibration_key` — sha256 over (tensor content key, mode,
+  candidate impl names, backend, rank, kernel family, block/row_tile
+  geometry, a per-mode stats digest) *plus* :func:`registry_fingerprint`,
+  a digest of every registered :class:`~repro.core.mttkrp.ImplSpec`'s
+  declared capabilities.  Registering, removing or re-declaring an impl
+  changes the fingerprint, so every cached measurement made against the
+  old registry is invalidated implicitly — stale entries are simply never
+  addressed again.
+* :class:`AutotuneStore` — one small JSON per key under
+  ``<root>/<key[:2]>/<key>.json``, written atomically (tmp + rename) like
+  the ingest cache's entries; ``hits``/``misses`` counters make cache
+  behaviour assertable in tests.
+
+The store rides inside :class:`~repro.ingest.IngestCache` (its
+``autotune`` property roots one at ``<cache root>/autotune``), so any
+``Ingested`` handle with a cache attached gets persistent calibration for
+free, and ``--recalibrate`` (``repro.api.cli``) is the escape hatch that
+forces a fresh measured pass and overwrites the entry.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import time
+from pathlib import Path
+from typing import Optional, Sequence, Union
+
+CALIBRATION_FORMAT_VERSION = 1
+
+
+def registry_fingerprint(kernel: str) -> str:
+    """Digest of the kernel family's registry *as declared*: impl names plus
+    every capability field of each :class:`ImplSpec`.  Any registry change
+    (new impl, removed impl, changed layout/backend/capability) yields a new
+    fingerprint, which invalidates every calibration key built on the old
+    one — the store's staleness rule, enforced by construction."""
+    from .planner import _kernel_registry
+
+    registry = _kernel_registry(kernel)
+    h = hashlib.sha256()
+    h.update(f"calib-v{CALIBRATION_FORMAT_VERSION}|kernel={kernel}|".encode())
+    for name in sorted(registry):
+        s = registry[name]
+        h.update(f"{name}|{s.layout}|{int(s.needs_sorted)}|"
+                 f"{int(s.supports_order_gt3)}|{s.backend}|"
+                 f"{int(s.benchmark_only)}|{int(s.oracle)}|".encode())
+    return h.hexdigest()[:16]
+
+
+def calibration_key(
+    tensor_key: str,
+    *,
+    mode: int,
+    names: Sequence[str],
+    backend: str,
+    rank: int,
+    kernel: str = "mttkrp",
+    block: int,
+    row_tile: int,
+    stats_digest: str = "",
+) -> str:
+    """sha256 key for one mode's measured cost table.
+
+    ``tensor_key`` is the ingest cache's content key (sha256 over the
+    tensor/file bytes + ingest options); ``names`` is the candidate impl
+    set that was measured (order-insensitive: sorted into the key);
+    ``rank`` is the mode's scoring rank (the Kronecker width for ttmc);
+    ``stats_digest`` is a short digest of the mode's measured
+    :class:`~repro.plan.stats.ModeStats` — a tripwire separating tensors
+    that hash alike but were relabeled in memory."""
+    h = hashlib.sha256()
+    h.update(f"reg={registry_fingerprint(kernel)}|tensor={tensor_key}|"
+             f"mode={mode}|names={','.join(sorted(names))}|"
+             f"backend={backend}|rank={rank}|kernel={kernel}|"
+             f"block={block}|row_tile={row_tile}|"
+             f"stats={stats_digest}|".encode())
+    return h.hexdigest()
+
+
+@dataclasses.dataclass
+class AutotuneStore:
+    """Content-addressed store of measured calibration tables under ``root``.
+
+    Each entry is one JSON file ``{"version", "costs": {impl: ms}, "meta"}``;
+    writes are atomic (tmp file + ``os.replace``) so concurrent planners at
+    worst re-measure, never read a torn entry."""
+
+    root: Path
+    hits: int = 0
+    misses: int = 0
+
+    def __init__(self, root: Union[str, os.PathLike]):
+        self.root = Path(root)
+        self.hits = 0
+        self.misses = 0
+
+    def _path(self, key: str) -> Path:
+        return self.root / key[:2] / f"{key}.json"
+
+    def has(self, key: str) -> bool:
+        return self._path(key).exists()
+
+    def load(self, key: str) -> Optional[dict]:
+        """The stored ``{"costs": {impl: ms}, "meta": {...}}`` payload, or
+        None on a miss / version mismatch.  Counts hits/misses."""
+        p = self._path(key)
+        try:
+            payload = json.loads(p.read_text())
+        except (OSError, json.JSONDecodeError):
+            self.misses += 1
+            return None
+        if payload.get("version") != CALIBRATION_FORMAT_VERSION:
+            p.unlink(missing_ok=True)  # self-heal: next store() republishes
+            self.misses += 1
+            return None
+        self.hits += 1
+        return payload
+
+    def store(self, key: str, costs: dict, *,
+              meta: Optional[dict] = None) -> None:
+        p = self._path(key)
+        p.parent.mkdir(parents=True, exist_ok=True)
+        payload = {
+            "version": CALIBRATION_FORMAT_VERSION,
+            "costs": {name: float(ms) for name, ms in costs.items()},
+            "meta": dict(meta or {}),
+            "measured_at": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        }
+        tmp = p.with_name(p.name + f".tmp{os.getpid()}")
+        tmp.write_text(json.dumps(payload, indent=1))
+        os.replace(tmp, p)
+
+
+def as_store(x: Union["AutotuneStore", str, os.PathLike, None]
+             ) -> Optional[AutotuneStore]:
+    """Normalize a store argument: an AutotuneStore passes through, a path
+    roots a new one, None stays None."""
+    if x is None or isinstance(x, AutotuneStore):
+        return x
+    return AutotuneStore(x)

@@ -72,6 +72,10 @@ class ModePlan:
     costs: dict[str, float]  # candidate impl -> predicted/measured cost
     reason: str
     kernel: str = "mttkrp"   # kernel family the impl belongs to
+    # where the cost table came from: "predicted" (declared cost models),
+    # "measured-fresh" (timed this run), or "measured-cached" (loaded from
+    # the persistent autotune store — repro.plan.autotune)
+    source: str = "predicted"
 
     @property
     def predicted_regime(self) -> str:
@@ -132,31 +136,86 @@ def _measure_ms(fn, *args, iters: int = 3) -> float:
 
 
 def _calibrate_mode(t: SparseTensor, mode: int, names, *, rank: int,
-                    block: int, row_tile: int) -> dict[str, float]:
-    """Measured per-impl MTTKRP ms for one mode on the actual tensor.
+                    block: int, row_tile: int, kernel: str = "mttkrp",
+                    factor_ranks: Optional[Sequence[int]] = None
+                    ) -> dict[str, float]:
+    """Measured per-impl kernel ms for one mode on the actual tensor.
 
     Part of planning-time pre-processing (same budget class as the sort
     stage): one workspace build shared by the sorted candidates, a short
-    median-of-3 timing per candidate."""
+    median-of-3 timing per candidate.  ``kernel`` selects what is timed —
+    the MTTKRP (CP family) or the TTMc (Tucker); the TTMc needs
+    ``factor_ranks`` (the per-mode Tucker ranks) to build timing factors,
+    because its scoring ``rank`` is the Kronecker *output* width, not any
+    factor's width."""
     import functools
 
-    from repro.core.cpals import init_factors
+    registry = _kernel_registry(kernel)
+    if kernel == "ttmc":
+        from repro.core.ttmc import ttmc as kernel_fn
 
-    factors = init_factors(t.dims, rank, jax.random.PRNGKey(0),
-                           dtype=t.vals.dtype)
+        if factor_ranks is None:
+            raise ValueError(
+                "calibrate=True for kernel='ttmc' needs factor_ranks= (the "
+                "per-mode Tucker ranks) to build timing factors; the Tucker "
+                "drivers and repro.api.Session pass them automatically")
+        keys = jax.random.split(jax.random.PRNGKey(0), t.order)
+        factors = tuple(
+            jax.random.normal(k, (int(d), int(r)), dtype=t.vals.dtype)
+            for k, d, r in zip(keys, t.dims, factor_ranks))
+    else:
+        from repro.core.cpals import init_factors
+
+        kernel_fn = mttkrp
+        factors = init_factors(t.dims, rank, jax.random.PRNGKey(0),
+                               dtype=t.vals.dtype)
     csf = None
     measured = {}
     for name in names:
-        spec = get_impl(name)
+        spec = get_impl(name, registry=registry)
         if spec.layout == "csf":
             if csf is None:
                 csf = build_csf(t, mode, block=block, row_tile=row_tile)
             ws = csf
         else:
             ws = t
-        fn = jax.jit(functools.partial(mttkrp, impl=name, mode=mode))
+        fn = jax.jit(functools.partial(kernel_fn, impl=name, mode=mode))
         measured[name] = _measure_ms(fn, ws, factors)
     return measured
+
+
+def _measured_costs(t: SparseTensor, mode: int, names, *, rank: int,
+                    block: int, row_tile: int, backend: str, kernel: str,
+                    factor_ranks: Optional[Sequence[int]],
+                    stats: Optional[ModeStats], autotune, tensor_key,
+                    recalibrate: bool) -> tuple[dict[str, float], str]:
+    """The calibration path with the persistent autotune store in front.
+
+    Returns ``(costs, source)`` where ``source`` is ``"measured-cached"``
+    (store hit: zero timing runs) or ``"measured-fresh"`` (a true miss —
+    or ``recalibrate=True`` — timed on the actual tensor and, when a store
+    is attached, persisted for the next planner)."""
+    key = None
+    if autotune is not None and tensor_key is not None:
+        from .autotune import calibration_key
+        from .stats import stats_digest
+
+        key = calibration_key(
+            tensor_key, mode=mode, names=names, backend=backend, rank=rank,
+            kernel=kernel, block=block, row_tile=row_tile,
+            stats_digest=stats_digest(() if stats is None else (stats,)))
+        if not recalibrate:
+            hit = autotune.load(key)
+            if hit is not None and set(hit["costs"]) == set(names):
+                return dict(hit["costs"]), "measured-cached"
+    costs = _calibrate_mode(t, mode, names, rank=rank, block=block,
+                            row_tile=row_tile, kernel=kernel,
+                            factor_ranks=factor_ranks)
+    if key is not None:
+        autotune.store(key, costs, meta={
+            "mode": mode, "backend": backend, "rank": int(rank),
+            "kernel": kernel, "block": block, "row_tile": row_tile})
+    return costs, "measured-fresh"
 
 
 def plan_mode(t: SparseTensor, mode: int, *, rank,
@@ -164,7 +223,10 @@ def plan_mode(t: SparseTensor, mode: int, *, rank,
               allow: Optional[Sequence[str]] = None,
               calibrate: bool = False,
               stats: Optional[ModeStats] = None,
-              kernel: str = "mttkrp") -> ModePlan:
+              kernel: str = "mttkrp",
+              factor_ranks: Optional[Sequence[int]] = None,
+              autotune=None, tensor_key: Optional[str] = None,
+              recalibrate: bool = False) -> ModePlan:
     """Score every capability-compatible impl for one mode, pick the argmin.
 
     ``calibrate=True`` replaces the declared cost models with measured
@@ -174,7 +236,13 @@ def plan_mode(t: SparseTensor, mode: int, *, rank,
     ``kernel``: the sparse kernel family being planned — ``"mttkrp"`` (CP
     family) or ``"ttmc"`` (Tucker); ``rank`` is the per-entry output width
     the cost models score (an int, or a per-mode sequence — the Tucker
-    driver passes prod of the *other* modes' ranks)."""
+    driver passes prod of the *other* modes' ranks).  ``factor_ranks``:
+    the per-mode Tucker ranks, required when calibrating the ttmc kernel
+    (timing factors cannot be recovered from the Kronecker widths alone).
+    ``autotune``/``tensor_key``: the persistent calibration store and the
+    tensor's content key (``repro.plan.autotune``) — on a hit the timing
+    loop is skipped entirely; ``recalibrate=True`` forces a fresh measured
+    pass and overwrites the stored entry."""
     registry = _kernel_registry(kernel)
     mode_rank = _rank_for_mode(rank, mode)
     if stats is None:
@@ -191,12 +259,11 @@ def plan_mode(t: SparseTensor, mode: int, *, rank,
             f"no registered {kernel} impl covers order={t.order} on "
             f"backend={backend!r} (allow={allow})")
     if calibrate:
-        if kernel != "mttkrp":
-            raise ValueError(
-                f"calibrate=True is implemented for the mttkrp kernel only "
-                f"(asked kernel={kernel!r}); use the predicted cost models")
-        costs = _calibrate_mode(t, mode, names, rank=mode_rank, block=block,
-                                row_tile=row_tile)
+        costs, source = _measured_costs(
+            t, mode, names, rank=mode_rank, block=block, row_tile=row_tile,
+            backend=backend, kernel=kernel, factor_ranks=factor_ranks,
+            stats=stats, autotune=autotune, tensor_key=tensor_key,
+            recalibrate=recalibrate)
         unit = "ms"
     else:
         costs = {}
@@ -204,18 +271,17 @@ def plan_mode(t: SparseTensor, mode: int, *, rank,
             spec = get_impl(name, registry=registry)
             costs[name] = (spec.cost_model(stats, mode_rank)
                            if spec.cost_model is not None else float("inf"))
-        unit = ""
+        unit, source = "", "predicted"
     winner = min(costs, key=costs.get)
     runner_up = sorted(costs.values())[1] if len(costs) > 1 else float("inf")
-    how = "measured" if calibrate else "predicted"
     reason = (
         f"{stats.regime} regime (collision={stats.collision_rate:.2f}, "
-        f"padding={stats.padding_overhead:.2f}); {how} cost "
+        f"padding={stats.padding_overhead:.2f}); {source} cost "
         f"{costs[winner]:.3g}{unit} vs next {runner_up:.3g}{unit}")
     return ModePlan(mode=mode, impl=winner,
                     layout=_layout_for(winner, registry=registry),
                     block=block, row_tile=row_tile, stats=stats,
-                    costs=costs, reason=reason, kernel=kernel)
+                    costs=costs, reason=reason, kernel=kernel, source=source)
 
 
 def plan_decomposition(
@@ -231,6 +297,10 @@ def plan_decomposition(
     with_stats: bool = True,
     stats: Optional[Sequence[ModeStats]] = None,
     kernel: str = "mttkrp",
+    factor_ranks: Optional[Sequence[int]] = None,
+    autotune=None,
+    tensor_key: Optional[str] = None,
+    recalibrate: bool = False,
 ) -> DecompPlan:
     """Emit a :class:`DecompPlan` for ``t`` under ``policy``.
 
@@ -250,7 +320,16 @@ def plan_decomposition(
     planner never re-walks the tensor.
     ``kernel``: the sparse kernel family whose registry is scored —
     ``"mttkrp"`` (CP-family methods) or ``"ttmc"`` (Tucker/HOOI; the
-    Tucker driver passes a per-mode ``rank`` sequence of Kronecker widths).
+    Tucker driver passes a per-mode ``rank`` sequence of Kronecker widths,
+    and ``factor_ranks`` — the underlying per-mode Tucker ranks — when
+    calibration needs to build timing factors).
+    ``autotune``: a persistent calibration store (an
+    :class:`~repro.plan.autotune.AutotuneStore` or its root path) consulted
+    before any timing run; on a hit the plan is measured-cost-accurate with
+    **zero** measurements.  ``tensor_key`` is the store's tensor content
+    key (``repro.ingest`` passes the ingest-cache key; computed from the
+    tensor's bytes here when omitted).  ``recalibrate=True`` skips the
+    lookup, re-times every candidate and overwrites the stored entries.
     """
     registry = _kernel_registry(kernel)
     if backend is None:
@@ -258,12 +337,22 @@ def plan_decomposition(
     if stats is not None and len(stats) != t.order:
         raise ValueError(f"precomputed stats cover {len(stats)} modes, "
                          f"tensor has {t.order}")
+    if calibrate and autotune is not None:
+        from .autotune import as_store
+
+        autotune = as_store(autotune)
+        if tensor_key is None:
+            from repro.ingest.cache import content_key
+
+            tensor_key = content_key(t, block=block, row_tile=row_tile)
     if policy == "auto":
         modes = tuple(
             plan_mode(t, m, rank=rank, backend=backend, block=block,
                       row_tile=row_tile, allow=allow, calibrate=calibrate,
                       stats=None if stats is None else stats[m],
-                      kernel=kernel)
+                      kernel=kernel, factor_ranks=factor_ranks,
+                      autotune=autotune, tensor_key=tensor_key,
+                      recalibrate=recalibrate)
             for m in range(t.order))
         return DecompPlan(modes=modes, policy=policy, backend=backend,
                           rank=rank)
@@ -287,17 +376,16 @@ def plan_decomposition(
     else:
         stats_per_mode = (tensor_stats(t, block=block, row_tile=row_tile)
                           if with_stats or calibrate else [None] * t.order)
-    if calibrate and kernel != "mttkrp":
-        raise ValueError(
-            f"calibrate=True is implemented for the mttkrp kernel only "
-            f"(asked kernel={kernel!r}); use the predicted cost models")
     modes = []
     for m, stats in enumerate(stats_per_mode):
+        source = "predicted"
         if calibrate:
-            costs = _calibrate_mode(t, m, (policy,),
-                                    rank=_rank_for_mode(rank, m), block=block,
-                                    row_tile=row_tile)
-            reason = (f"fixed policy {policy!r}; measured "
+            costs, source = _measured_costs(
+                t, m, (policy,), rank=_rank_for_mode(rank, m), block=block,
+                row_tile=row_tile, backend=backend, kernel=kernel,
+                factor_ranks=factor_ranks, stats=stats, autotune=autotune,
+                tensor_key=tensor_key, recalibrate=recalibrate)
+            reason = (f"fixed policy {policy!r}; {source} "
                       f"{costs[policy]:.3g}ms")
         elif stats is not None:
             cost = (spec.cost_model(stats, _rank_for_mode(rank, m))
@@ -311,6 +399,6 @@ def plan_decomposition(
             mode=m, impl=policy,
             layout=_layout_for(policy, registry=registry),
             block=block, row_tile=row_tile, stats=stats,
-            costs=costs, reason=reason, kernel=kernel))
+            costs=costs, reason=reason, kernel=kernel, source=source))
     return DecompPlan(modes=tuple(modes), policy=policy, backend=backend,
                       rank=rank)

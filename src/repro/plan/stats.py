@@ -144,3 +144,21 @@ def tensor_stats(t: SparseTensor, *, block: int,
     """One :class:`ModeStats` per mode (the planner's full evidence set)."""
     return [mode_stats(t, m, block=block, row_tile=row_tile)
             for m in range(t.order)]
+
+
+def stats_digest(stats) -> str:
+    """Short content digest over measured :class:`ModeStats`.
+
+    Part of the autotune store's calibration key
+    (``repro.plan.autotune``): two tensors whose bytes hash alike but whose
+    measured per-mode statistics differ (e.g. an in-memory relabeling that
+    reused a content key) must not share cached timings.  Floats survive
+    the JSON round-trip of the ingest cache exactly (``repr`` is
+    shortest-round-trip), so warm-loaded stats digest identically to the
+    ones measured at ingest."""
+    import hashlib
+
+    h = hashlib.sha256()
+    for s in stats:
+        h.update(repr(dataclasses.astuple(s)).encode())
+    return h.hexdigest()[:16]

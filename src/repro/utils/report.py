@@ -26,6 +26,11 @@ def plan_report(plan, *, reorder_deltas=None, method=None) -> str:
     showing what the locality-aware reordering bought (negative collision /
     padding deltas are wins).
 
+    The "costs" column states where each mode's impl costs came from:
+    ``predicted`` (cost models), ``measured-fresh`` (timed on this tensor,
+    just now) or ``measured-cached`` (timed earlier, replayed from the
+    persistent autotune store).
+
     ``method``: the decomposition method executing the plan
     (``repro.methods``); the "method" column renders it together with the
     kernel family each mode was scored against (``mttkrp`` / ``ttmc``).
@@ -34,8 +39,8 @@ def plan_report(plan, *, reorder_deltas=None, method=None) -> str:
             f"rank={plan.rank}"
             + (f" method={method}" if method is not None else ""))
     rows = ["| mode | method | rows | nnz/row | collision | padding "
-            "| reorder | layout | impl | regime | reason |",
-            "|---|---|---|---|---|---|---|---|---|---|---|"]
+            "| reorder | layout | impl | costs | regime | reason |",
+            "|---|---|---|---|---|---|---|---|---|---|---|---|"]
     for p in plan.modes:
         s = p.stats
         kernel = getattr(p, "kernel", "mttkrp")
@@ -53,7 +58,8 @@ def plan_report(plan, *, reorder_deltas=None, method=None) -> str:
             re_cell = "-"
         rows.append(
             f"| {p.mode} | {m_cell} | {cells} | {re_cell} "
-            f"| {p.layout} | **{p.impl}** | {p.predicted_regime} "
+            f"| {p.layout} | **{p.impl}** "
+            f"| {getattr(p, 'source', 'predicted')} | {p.predicted_regime} "
             f"| {p.reason} |")
     return "\n".join([head] + rows)
 

@@ -1,0 +1,301 @@
+"""Persistent autotune store: warm ``plan(calibrate=True)`` performs ZERO
+timing runs, keys separate every configuration axis, a changed impl
+registry invalidates implicitly, and ``recalibrate`` forces a fresh pass.
+
+The monkeypatch target is ``repro.plan.planner._measure_ms`` — the single
+timing primitive every calibration measurement goes through — so "no
+timing runs happened" is a counted fact, not an inference from wall time.
+"""
+import dataclasses
+import json
+
+import jax
+import pytest
+
+from repro.core import random_sparse
+from repro.core.mttkrp import REGISTRY, ImplSpec, register_impl
+from repro.ingest import IngestCache, ingest
+from repro.plan import (AutotuneStore, calibration_key, plan_decomposition,
+                        registry_fingerprint)
+from repro.plan import planner as planner_mod
+
+KEY = jax.random.PRNGKey(7)
+DIMS = (20, 30, 25)
+
+
+def small_tensor(key=KEY, dims=DIMS, nnz=600):
+    return random_sparse(dims, nnz, key)
+
+
+@pytest.fixture
+def measure_counter(monkeypatch):
+    """Counts (and still performs) every calibration timing run."""
+    calls = {"n": 0}
+    real = planner_mod._measure_ms
+
+    def counting(fn, *args, **kwargs):
+        calls["n"] += 1
+        return real(fn, *args, **kwargs)
+
+    monkeypatch.setattr(planner_mod, "_measure_ms", counting)
+    return calls
+
+
+# ---------------------------------------------------------------------------
+# the tentpole property: warm hit -> zero timing runs
+# ---------------------------------------------------------------------------
+
+def test_warm_calibration_skips_measurement(tmp_path, measure_counter):
+    t = small_tensor()
+    ing = ingest(t, cache=tmp_path)
+    p1 = ing.plan("auto", rank=8, calibrate=True)
+    cold = measure_counter["n"]
+    assert cold > 0
+    assert all(m.source == "measured-fresh" for m in p1.modes)
+
+    # a NEW handle over the same cache (fresh process simulation): the
+    # second calibrated plan must touch the store, not the clock
+    ing2 = ingest(t, cache=tmp_path)
+    p2 = ing2.plan("auto", rank=8, calibrate=True)
+    assert measure_counter["n"] == cold, \
+        "warm calibrated plan performed timing runs"
+    assert all(m.source == "measured-cached" for m in p2.modes)
+    assert [m.impl for m in p2.modes] == [m.impl for m in p1.modes]
+    assert ing2.cache.autotune.hits > 0
+
+
+def test_recalibrate_forces_fresh_measurement(tmp_path, measure_counter):
+    t = small_tensor()
+    ing = ingest(t, cache=tmp_path)
+    ing.plan("auto", rank=8, calibrate=True)
+    cold = measure_counter["n"]
+    p = ing.plan("auto", rank=8, calibrate=True, recalibrate=True)
+    assert measure_counter["n"] > cold
+    assert all(m.source == "measured-fresh" for m in p.modes)
+    # the overwrite sticks: the next warm plan replays the recalibration
+    p2 = ing.plan("auto", rank=8, calibrate=True)
+    assert all(m.source == "measured-cached" for m in p2.modes)
+
+
+def test_fixed_policy_calibration_is_cached_too(tmp_path, measure_counter):
+    t = small_tensor()
+    ing = ingest(t, cache=tmp_path)
+    p1 = ing.plan("segment", rank=8, calibrate=True)
+    cold = measure_counter["n"]
+    assert cold > 0 and all(m.impl == "segment" for m in p1.modes)
+    p2 = ingest(t, cache=tmp_path).plan("segment", rank=8, calibrate=True)
+    assert measure_counter["n"] == cold
+    assert all(m.source == "measured-cached" for m in p2.modes)
+
+
+def test_plan_without_cache_measures_every_time(tmp_path, measure_counter):
+    t = small_tensor()
+    ing = ingest(t)  # no cache -> no store -> no persistence
+    ing.plan("auto", rank=8, calibrate=True)
+    first = measure_counter["n"]
+    ing.plan("auto", rank=8, calibrate=True)
+    assert measure_counter["n"] == 2 * first
+
+
+# ---------------------------------------------------------------------------
+# key separation
+# ---------------------------------------------------------------------------
+
+def test_calibration_key_separates_every_axis():
+    base = dict(mode=0, names=("segment", "dense"), backend="cpu", rank=8,
+                kernel="mttkrp", block=512, row_tile=128, stats_digest="ab")
+    k0 = calibration_key("tensor-a", **base)
+    assert k0 == calibration_key("tensor-a", **base)  # deterministic
+    # impl-name ORDER must not matter (sets, not sequences)
+    assert k0 == calibration_key(
+        "tensor-a", **{**base, "names": ("dense", "segment")})
+    for axis, val in [("mode", 1), ("backend", "tpu"), ("rank", 16),
+                      ("kernel", "ttmc"), ("block", 256), ("row_tile", 64),
+                      ("names", ("segment",)), ("stats_digest", "cd")]:
+        assert calibration_key("tensor-a", **{**base, axis: val}) != k0, axis
+    assert calibration_key("tensor-b", **base) != k0
+
+
+def test_different_rank_and_backend_calibrate_separately(tmp_path,
+                                                         measure_counter):
+    t = small_tensor()
+    ing = ingest(t, cache=tmp_path)
+    ing.plan("auto", rank=8, calibrate=True)
+    n1 = measure_counter["n"]
+    ing.plan("auto", rank=4, calibrate=True)     # different rank -> miss
+    assert measure_counter["n"] > n1
+    n2 = measure_counter["n"]
+    ing.plan("auto", rank=8, calibrate=True)     # rank 8 again -> hit
+    ing.plan("auto", rank=4, calibrate=True)     # rank 4 again -> hit
+    assert measure_counter["n"] == n2
+
+
+def test_allow_set_calibrates_separately(tmp_path, measure_counter):
+    t = small_tensor()
+    ing = ingest(t, cache=tmp_path)
+    ing.plan("auto", rank=8, calibrate=True)
+    n1 = measure_counter["n"]
+    p = ing.plan("auto", rank=8, calibrate=True, allow=("segment",))
+    assert measure_counter["n"] > n1, "narrower allow set must re-measure"
+    assert all(m.impl == "segment" for m in p.modes)
+
+
+# ---------------------------------------------------------------------------
+# registry invalidation
+# ---------------------------------------------------------------------------
+
+def test_registry_change_invalidates_calibration(tmp_path, measure_counter):
+    t = small_tensor()
+    ing = ingest(t, cache=tmp_path)
+    ing.plan("auto", rank=8, calibrate=True)
+    warm = measure_counter["n"]
+    fp_before = registry_fingerprint("mttkrp")
+
+    # registering a new impl changes the fingerprint -> every stored entry
+    # is implicitly stale (its key can never be addressed again)
+    dummy = ImplSpec(name="_autotune_test_dummy",
+                     fn=REGISTRY["segment"].fn, layout="csf",
+                     needs_sorted=True, supports_order_gt3=True,
+                     benchmark_only=True)
+    register_impl(dummy)
+    try:
+        assert registry_fingerprint("mttkrp") != fp_before
+        ing.plan("auto", rank=8, calibrate=True)
+        assert measure_counter["n"] > warm, \
+            "stale registry entry was replayed"
+    finally:
+        REGISTRY.pop("_autotune_test_dummy", None)
+    assert registry_fingerprint("mttkrp") == fp_before
+
+
+def test_store_version_bump_evicts(tmp_path):
+    store = AutotuneStore(tmp_path)
+    store.store("ab" * 32, {"segment": 1.0})
+    path = store._path("ab" * 32)
+    payload = json.loads(path.read_text())
+    payload["version"] = -1
+    path.write_text(json.dumps(payload))
+    assert store.load("ab" * 32) is None
+    assert not path.exists(), "stale-version entry must self-evict"
+
+
+def test_store_roundtrip_and_counters(tmp_path):
+    store = AutotuneStore(tmp_path)
+    key = "cd" * 32
+    assert store.load(key) is None and store.misses == 1
+    store.store(key, {"segment": 1.25, "dense": 3.5}, meta={"mode": 2})
+    got = store.load(key)
+    assert got["costs"] == {"segment": 1.25, "dense": 3.5}
+    assert got["meta"] == {"mode": 2}
+    assert store.hits == 1 and store.misses == 1
+
+
+# ---------------------------------------------------------------------------
+# ttmc calibration (the planner.py:290 fix)
+# ---------------------------------------------------------------------------
+
+def test_ttmc_calibrate_works_with_factor_ranks(measure_counter):
+    t = small_tensor()
+    p = plan_decomposition(t, "auto", rank=16, kernel="ttmc",
+                           calibrate=True, factor_ranks=(4, 4, 4))
+    assert measure_counter["n"] > 0
+    assert all(m.source == "measured-fresh" for m in p.modes)
+    assert all(m.kernel == "ttmc" for m in p.modes)
+
+
+def test_ttmc_calibrate_without_factor_ranks_raises():
+    t = small_tensor()
+    with pytest.raises(ValueError, match="factor_ranks"):
+        plan_decomposition(t, "auto", rank=16, kernel="ttmc", calibrate=True)
+
+
+def test_tucker_hooi_calibrated_plan_end_to_end(tmp_path, measure_counter):
+    """The regression test for the old 'calibrate=True is implemented for
+    the mttkrp kernel only' raise: a calibrated Tucker plan now works, and
+    its calibration persists like any other."""
+    from repro.methods import fit
+
+    t = small_tensor()
+    ing = ingest(t, cache=tmp_path)
+    dec = fit(ing, (3, 3, 3), method="tucker_hooi", niters=2)
+    assert dec.core.shape == (3, 3, 3)
+    p1 = ing.plan("auto", rank=9, kernel="ttmc", calibrate=True,
+                  factor_ranks=(3, 3, 3))
+    cold = measure_counter["n"]
+    assert cold > 0
+    p2 = ing.plan("auto", rank=9, kernel="ttmc", calibrate=True,
+                  factor_ranks=(3, 3, 3))
+    assert measure_counter["n"] == cold
+    assert all(m.source == "measured-cached" for m in p2.modes)
+    assert [m.impl for m in p2.modes] == [m.impl for m in p1.modes]
+
+
+# ---------------------------------------------------------------------------
+# config / CLI surface
+# ---------------------------------------------------------------------------
+
+def test_planconfig_recalibrate_requires_calibrate():
+    from repro.api import ConfigError, PlanConfig, RunConfig
+
+    with pytest.raises(ConfigError, match="plan.recalibrate"):
+        PlanConfig(recalibrate=True)
+    cfg = RunConfig.from_dict(
+        {"plan": {"calibrate": True, "recalibrate": True}})
+    assert cfg.plan.recalibrate
+    # round-trips bit-exactly like every other field
+    import json as _json
+    assert RunConfig.from_dict(_json.loads(cfg.to_json())) == cfg
+
+
+def test_session_calibrated_plan_uses_store(tmp_path, measure_counter):
+    from repro.api import (DataConfig, MethodConfig, PlanConfig, RunConfig,
+                          Session)
+
+    t = small_tensor()
+    cfg = RunConfig(data=DataConfig(cache=str(tmp_path)),
+                    plan=PlanConfig(calibrate=True),
+                    method=MethodConfig(rank=8, niters=1))
+    p1 = Session.from_config(cfg, tensor=t).plan()
+    cold = measure_counter["n"]
+    assert cold > 0 and all(m.source == "measured-fresh" for m in p1.modes)
+    p2 = Session.from_config(cfg, tensor=t).plan()
+    assert measure_counter["n"] == cold
+    assert all(m.source == "measured-cached" for m in p2.modes)
+    # --recalibrate escape hatch, via the validated config path
+    cfg3 = RunConfig(data=DataConfig(cache=str(tmp_path)),
+                     plan=PlanConfig(calibrate=True, recalibrate=True),
+                     method=MethodConfig(rank=8, niters=1))
+    p3 = Session.from_config(cfg3, tensor=t).plan()
+    assert measure_counter["n"] > cold
+    assert all(m.source == "measured-fresh" for m in p3.modes)
+
+
+def test_cli_recalibrate_flag_implies_calibrate():
+    from repro.api.cli import config_from_args, main
+
+    import argparse
+    ns = argparse.Namespace(
+        config=None, source=None, dataset=None, scale=None, data_seed=None,
+        reorder=None, compact=None, cache=None, impl=None, calibrate=None,
+        recalibrate=True, method=None, rank=None, iters=None, tol=None,
+        seed=None, option=[], executor=None, checkpoint_dir=None,
+        checkpoint_every=None, monitor=None, n_chunks=None, chunk_nnz=None)
+    cfg = config_from_args(ns)
+    assert cfg.plan.calibrate and cfg.plan.recalibrate
+    # and the parser itself accepts the flag (full arg surface)
+    rc = main(["plan", "--dataset", "yelp", "--scale", "0.0005",
+               "--rank", "4", "--calibrate", "--recalibrate"])
+    assert rc == 0
+
+
+def test_plan_report_shows_cost_source(tmp_path):
+    from repro.utils.report import plan_report
+
+    t = small_tensor()
+    ing = ingest(t, cache=tmp_path)
+    rep = plan_report(ing.plan("auto", rank=8, calibrate=True))
+    assert "| costs |" in rep and "measured-fresh" in rep
+    rep2 = plan_report(ing.plan("auto", rank=8, calibrate=True))
+    assert "measured-cached" in rep2
+    rep3 = plan_report(ing.plan("auto", rank=8))
+    assert "predicted" in rep3

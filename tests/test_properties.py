@@ -159,3 +159,35 @@ def test_pallas_mttkrp_property(t, rank):
     want = ref.mttkrp_ref(csf, factors)[:, :rank]
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=5e-4, atol=5e-4)
+
+
+@settings(**SET)
+@given(
+    st.dictionaries(
+        st.sampled_from(["a.total_s", "b.total_s", "c.mttkrp_s",
+                         "d.iter_ms", "e.serve_s"]),
+        st.floats(1e-6, 1e6, allow_nan=False, allow_infinity=False),
+        min_size=1, max_size=5),
+    st.lists(st.floats(0.5, 2.0, allow_nan=False), min_size=1, max_size=5),
+    st.randoms(use_true_random=False),
+)
+def test_ratchet_verdict_invariant_under_metric_reordering(base, factors,
+                                                           rng):
+    """The ratchet verdict (and its regression set) depends only on the
+    metric VALUES, never on dict insertion order of either side."""
+    from benchmarks.history import compare_metrics
+
+    keys = list(base)
+    new = {k: base[k] * factors[i % len(factors)]
+           for i, k in enumerate(keys)}
+    want = compare_metrics(base, new)
+
+    for _ in range(3):
+        kb, kn = list(base), list(new)
+        rng.shuffle(kb), rng.shuffle(kn)
+        got = compare_metrics({k: base[k] for k in kb},
+                              {k: new[k] for k in kn})
+        assert got == want
+    # and the verdict agrees with first principles
+    flagged = {r["metric"] for r in want}
+    assert flagged == {k for k in base if new[k] > base[k] * 1.10}

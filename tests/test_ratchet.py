@@ -1,0 +1,190 @@
+"""Benchmark-history perf ratchet: trajectory append/load, baseline
+selection, regression detection, anchor promotion, and the CLI exit codes
+CI keys off (``benchmarks/ratchet.py``)."""
+import json
+import math
+
+import pytest
+
+from benchmarks import history as H
+from benchmarks.ratchet import main as ratchet_main
+
+
+def cpals_summary(total_s=1.0, mttkrp_s=0.5):
+    return {"bench": "cpals_routines",
+            "cells": {"yelp/auto": {
+                "nnz": 1000, "fit": 0.9,
+                "routines_s": {"mttkrp": mttkrp_s, "solve": 0.1},
+                "total_s": total_s}}}
+
+
+def serve_summary(serve_s=0.2, latency=1.5):
+    return {"bench": "serve", "dataset": "yelp", "qps": 1e5,
+            "serve_s": serve_s, "latency_ms_per_batch": latency}
+
+
+# ---------------------------------------------------------------------------
+# trajectory store
+# ---------------------------------------------------------------------------
+
+def test_append_and_load_roundtrip(tmp_path):
+    rec = H.append_record("cpals", cpals_summary(), history_dir=tmp_path,
+                          sha="abc1234")
+    assert rec["git_sha"] == "abc1234" and rec["anchor"] is False
+    H.append_record("cpals", cpals_summary(1.1), history_dir=tmp_path)
+    records = H.load_history("cpals", history_dir=tmp_path)
+    assert len(records) == 2
+    assert records[0]["summary"] == cpals_summary()
+    # one JSON object per line, append-only
+    lines = (tmp_path / "cpals.jsonl").read_text().splitlines()
+    assert len(lines) == 2 and all(json.loads(l) for l in lines)
+
+
+def test_load_tolerates_corrupt_lines(tmp_path):
+    H.append_record("cpals", cpals_summary(), history_dir=tmp_path)
+    with open(tmp_path / "cpals.jsonl", "a") as f:
+        f.write("{torn json\n\n[1,2,3]\n")
+    H.append_record("cpals", cpals_summary(1.05), history_dir=tmp_path)
+    records = H.load_history("cpals", history_dir=tmp_path)
+    assert len(records) == 2
+
+
+def test_baseline_is_last_anchor_else_first(tmp_path):
+    H.append_record("serve", serve_summary(0.1), history_dir=tmp_path)
+    H.append_record("serve", serve_summary(0.2), history_dir=tmp_path)
+    records = H.load_history("serve", history_dir=tmp_path)
+    assert H.baseline_record(records)["summary"]["serve_s"] == 0.1
+    H.append_record("serve", serve_summary(0.15), history_dir=tmp_path,
+                    anchor=True)
+    H.append_record("serve", serve_summary(0.3), history_dir=tmp_path)
+    records = H.load_history("serve", history_dir=tmp_path)
+    assert H.baseline_record(records)["summary"]["serve_s"] == 0.15
+
+
+# ---------------------------------------------------------------------------
+# metric extraction + comparison
+# ---------------------------------------------------------------------------
+
+def test_extract_metrics_drops_nonfinite_and_nonpositive():
+    s = cpals_summary(total_s=float("nan"), mttkrp_s=0.5)
+    s["cells"]["bad/auto"] = {"total_s": -1.0,
+                              "routines_s": {"mttkrp": None}}
+    m = H.extract_metrics("cpals", s)
+    assert m == {"yelp/auto.mttkrp_s": 0.5}
+    assert all(math.isfinite(v) for v in m.values())
+
+
+def test_compare_metrics_flags_only_beyond_tolerance():
+    base = {"a.total_s": 1.0, "b.total_s": 2.0, "only_base": 1.0}
+    new = {"a.total_s": 1.09, "b.total_s": 2.5, "only_new": 9.9}
+    regs = H.compare_metrics(base, new, tolerance=0.10)
+    assert [r["metric"] for r in regs] == ["b.total_s"]
+    assert regs[0]["ratio"] == pytest.approx(1.25)
+    # improvements never flag
+    assert H.compare_metrics(base, {"a.total_s": 0.5, "b.total_s": 1.0}) == []
+
+
+def test_ratchet_passes_on_flat_history(tmp_path):
+    for s in (1.0, 1.02, 0.98, 1.05):
+        H.append_record("cpals", cpals_summary(s, s / 2),
+                        history_dir=tmp_path)
+    res = H.ratchet_section("cpals", history_dir=tmp_path)
+    assert res["status"] == "ok" and res["regressions"] == []
+
+
+def test_ratchet_fails_on_15pct_mttkrp_regression(tmp_path):
+    H.append_record("cpals", cpals_summary(1.0, 0.5), history_dir=tmp_path)
+    H.append_record("cpals", cpals_summary(1.0, 0.575),  # +15% mttkrp
+                    history_dir=tmp_path)
+    res = H.ratchet_section("cpals", history_dir=tmp_path)
+    assert res["status"] == "regressed"
+    assert [r["metric"] for r in res["regressions"]] \
+        == ["yelp/auto.mttkrp_s"]
+    assert res["regressions"][0]["ratio"] == pytest.approx(1.15)
+
+
+def test_ratchet_edge_cases_do_not_crash(tmp_path):
+    # missing section: no file at all
+    assert H.ratchet_section("serve",
+                             history_dir=tmp_path)["status"] == "missing"
+    # empty file
+    (tmp_path / "plan.jsonl").write_text("")
+    assert H.ratchet_section("plan",
+                             history_dir=tmp_path)["status"] == "missing"
+    # NaN-only metrics on both sides
+    H.append_record("api", {"direct_s": float("nan"), "session_s": None},
+                    history_dir=tmp_path)
+    H.append_record("api", {"direct_s": float("nan"), "session_s": None},
+                    history_dir=tmp_path)
+    assert H.ratchet_section("api",
+                             history_dir=tmp_path)["status"] == "no-metrics"
+
+
+def test_anchor_promotion_updates_baseline(tmp_path):
+    H.append_record("cpals", cpals_summary(1.0), history_dir=tmp_path)
+    H.append_record("cpals", cpals_summary(1.5), history_dir=tmp_path)
+    assert H.ratchet_section("cpals",
+                             history_dir=tmp_path)["status"] == "regressed"
+    rec = H.promote_anchor("cpals", history_dir=tmp_path)
+    assert rec["anchor"] is True
+    res = H.ratchet_section("cpals", history_dir=tmp_path)
+    assert res["status"] == "ok" and res["base"]["anchor"]
+    # the 1.5s floor is the new accepted baseline: +10% of IT now fails
+    H.append_record("cpals", cpals_summary(1.7), history_dir=tmp_path)
+    assert H.ratchet_section("cpals",
+                             history_dir=tmp_path)["status"] == "regressed"
+    # promotion appends, never rewrites
+    assert len(H.load_history("cpals", history_dir=tmp_path)) == 4
+
+
+def test_promote_anchor_without_history_returns_none(tmp_path):
+    assert H.promote_anchor("cpals", history_dir=tmp_path) is None
+
+
+# ---------------------------------------------------------------------------
+# CLI exit codes (what CI keys off)
+# ---------------------------------------------------------------------------
+
+def test_cli_exit_codes(tmp_path, capsys):
+    H.append_record("cpals", cpals_summary(1.0), history_dir=tmp_path)
+    assert ratchet_main(["--history", str(tmp_path)]) == 0
+    H.append_record("cpals", cpals_summary(1.2), history_dir=tmp_path)
+    assert ratchet_main(["--history", str(tmp_path)]) == 1
+    out = capsys.readouterr().out
+    assert "RATCHET FAILED" in out and "yelp/auto.total_s" in out
+    # wider tolerance passes the same history
+    assert ratchet_main(["--history", str(tmp_path),
+                         "--tolerance", "0.5"]) == 0
+    # --anchor promotes and the check goes green again
+    assert ratchet_main(["--history", str(tmp_path), "--anchor",
+                         "--section", "cpals"]) == 0
+    assert ratchet_main(["--history", str(tmp_path)]) == 0
+
+
+def test_cli_strict_fails_on_missing(tmp_path):
+    assert ratchet_main(["--history", str(tmp_path),
+                         "--section", "serve"]) == 0
+    assert ratchet_main(["--history", str(tmp_path),
+                         "--section", "serve", "--strict"]) == 1
+
+
+def test_cli_json_verdicts(tmp_path):
+    H.append_record("serve", serve_summary(0.2), history_dir=tmp_path)
+    H.append_record("serve", serve_summary(0.4), history_dir=tmp_path)
+    out = tmp_path / "verdicts.json"
+    assert ratchet_main(["--history", str(tmp_path), "--section", "serve",
+                         "--json", str(out)]) == 1
+    verdicts = json.loads(out.read_text())
+    assert verdicts[0]["status"] == "regressed"
+    metrics = {r["metric"] for r in verdicts[0]["regressions"]}
+    assert "serve_s" in metrics
+
+
+def test_sections_registry_consistency():
+    """run.py's summarizer table and the ratchet's section table must name
+    the same sections (the assert in run.py import-checks this too)."""
+    import benchmarks.run as run_mod
+
+    assert set(run_mod._SUMMARIZERS) == set(H.SECTIONS)
+    for s in H.SECTIONS.values():
+        assert s.legacy_json == f"BENCH_{s.name}.json"
