@@ -4,7 +4,7 @@
 PY        ?= python
 PYTHONPATH := src
 
-.PHONY: test bench bench-quick lint quickstart clean ratchet anchor
+.PHONY: test bench bench-quick bench-cpals lint quickstart clean ratchet anchor
 
 test:
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m pytest -x -q
@@ -32,6 +32,12 @@ bench-api:
 
 bench-serve:
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.bench_serve --json BENCH_serve.json
+
+# quick per-routine CP-ALS breakdown on the scaled paper tensors — covers
+# every registered workspace impl (incl. linearized) x fused epilogue; the
+# CI quick-bench job runs exactly this target.
+bench-cpals:
+	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.bench_cpals_routines --quick --json BENCH_cpals.json
 
 # perf ratchet: latest BENCH_history record vs the last anchor (>10% time
 # regression fails).  `make anchor` promotes the latest records to the new

@@ -2,8 +2,15 @@
 
 Runs 20 ALS iterations at rank 35 (the paper's setting) on YELP- and
 NELL-2-shaped synthetic tensors (CPU-scaled) and reports seconds per routine
-(sort / mttkrp / ata / inverse / norm / fit), for the naive and optimized
-MTTKRP paths.
+(sort / mttkrp / ata / inverse / norm / fit) across MTTKRP impls — including
+the ALTO-style ``linearized`` workspace — and, per impl, a ``+fused`` cell
+where the whole post-MTTKRP chain runs as ONE jitted ``fused_mode_epilogue``
+call (timed under the single ``epilogue`` key).
+
+Every cell also reports an ``epilogue_s`` subtotal — ata+inverse+norm+fit
+for the routine-by-routine cells, the fused call's own time for ``+fused``
+cells — which is the lower-is-better metric the perf ratchet
+(``benchmarks.history``) guards, locking in the fusion win.
 
   PYTHONPATH=src python -m benchmarks.bench_cpals_routines \
       [--quick] [--json BENCH_cpals.json]
@@ -16,11 +23,19 @@ from pathlib import Path
 
 import jax
 
+from repro.core.cpals import EPILOGUE_ROUTINES, ROUTINES as ALL_ROUTINES
 from repro.methods import cp_als
 
 from .common import emit, paper_dataset_cached
 
-ROUTINES = ("sort", "mttkrp", "ata", "inverse", "norm", "fit")
+ROUTINES = ALL_ROUTINES  # ("sort", "mttkrp", "ata", "inverse", "norm", "fit")
+IMPLS = ("gather_scatter", "segment", "linearized")
+
+
+def _epilogue_s(timers: dict, fused: bool) -> float:
+    if fused:
+        return timers.get("epilogue", 0.0)
+    return sum(timers.get(k, 0.0) for k in EPILOGUE_ROUTINES)
 
 
 def run(scale: float = 0.002, rank: int = 35, niters: int = 20):
@@ -28,30 +43,40 @@ def run(scale: float = 0.002, rank: int = 35, niters: int = 20):
     rows = []
     for name in ("yelp", "nell-2"):
         t = paper_dataset_cached(name, scale=scale, seed=3)
-        for impl in ("gather_scatter", "segment"):
-            # warm every jit cache so per-routine timers measure execution,
-            # not first-call compilation
-            cp_als(t, rank=rank, niters=2, impl=impl, key=key, timers={})
-            timers: dict = {}
-            dec = cp_als(t, rank=rank, niters=niters, impl=impl, key=key,
-                         timers=timers)
-            row = {"bench": "cpals_routines", "dataset": name, "impl": impl,
-                   "nnz": t.nnz, "fit": round(float(dec.fit), 4)}
-            for k in ROUTINES:
-                row[f"{k}_s"] = round(timers.get(k, 0.0), 4)
-            rows.append(row)
+        for impl in IMPLS:
+            for fused in (False, True):
+                # warm every jit cache so per-routine timers measure
+                # execution, not first-call compilation
+                cp_als(t, rank=rank, niters=2, impl=impl, key=key, timers={},
+                       fused_epilogue=fused)
+                timers: dict = {}
+                dec = cp_als(t, rank=rank, niters=niters, impl=impl, key=key,
+                             timers=timers, fused_epilogue=fused)
+                row = {"bench": "cpals_routines", "dataset": name,
+                       "impl": impl + ("+fused" if fused else ""),
+                       "nnz": t.nnz, "fit": round(float(dec.fit), 4)}
+                for k in ROUTINES + ("epilogue",):
+                    row[f"{k}_s"] = round(timers.get(k, 0.0), 4)
+                row["epilogue_total_s"] = round(_epilogue_s(timers, fused), 4)
+                row["total_s"] = round(
+                    sum(timers.get(k, 0.0)
+                        for k in ROUTINES + ("epilogue",)), 4)
+                rows.append(row)
     return rows
 
 
 def summarize(rows: list[dict]) -> dict:
     """JSON summary for the BENCH_cpals.json trajectory artifact: the
-    per-routine timings and final fit the paper's Table III measures."""
+    per-routine timings and final fit the paper's Table III measures, plus
+    the ``epilogue_s`` subtotal the ratchet guards."""
     cells = {}
     for r in rows:
         cells[f"{r['dataset']}/{r['impl']}"] = {
             "nnz": r["nnz"], "fit": r["fit"],
-            "routines_s": {k: r[f"{k}_s"] for k in ROUTINES},
-            "total_s": round(sum(r[f"{k}_s"] for k in ROUTINES), 4),
+            "routines_s": {k: r[f"{k}_s"]
+                           for k in ROUTINES + ("epilogue",)},
+            "epilogue_s": r["epilogue_total_s"],
+            "total_s": r["total_s"],
         }
     return {"bench": "cpals_routines", "cells": cells}
 

@@ -151,6 +151,9 @@ def _metrics_cpals(s: dict) -> dict:
     for cell, d in s.get("cells", {}).items():
         out[f"{cell}.total_s"] = d.get("total_s")
         out[f"{cell}.mttkrp_s"] = d.get("routines_s", {}).get("mttkrp")
+        # the post-MTTKRP chain subtotal (ata+inverse+norm+fit, or the fused
+        # epilogue call's own time) — guards the fused-epilogue win
+        out[f"{cell}.epilogue_s"] = d.get("epilogue_s")
     return out
 
 

@@ -8,7 +8,7 @@ from .mttkrp import (mttkrp, mttkrp_dense, mttkrp_gather_scatter,
 from .ttmc import (ttmc, ttmc_dense, ttmc_gather_scatter, ttmc_segment,
                    ttmc_pallas, TTMC_IMPLS, TTMC_REGISTRY,
                    register_ttmc_impl, get_ttmc_impl, available_ttmc_impls)
-from .gram import gram, hadamard_grams, solve_cholesky, normalize, kruskal_fit, kruskal_norm_sq, kruskal_inner
+from .gram import gram, hadamard_grams, solve_cholesky, solve_gram, normalize, kruskal_fit, kruskal_norm_sq, kruskal_inner
 from .cpals import (cp_als, CPDecomp, CPALSState, build_workspace,
                     resolve_plan, init_factors)
 
@@ -23,7 +23,8 @@ __all__ = [
     "ttmc", "ttmc_dense", "ttmc_gather_scatter", "ttmc_segment",
     "ttmc_pallas", "TTMC_IMPLS", "TTMC_REGISTRY", "register_ttmc_impl",
     "get_ttmc_impl", "available_ttmc_impls",
-    "gram", "hadamard_grams", "solve_cholesky", "normalize", "kruskal_fit",
+    "gram", "hadamard_grams", "solve_cholesky", "solve_gram", "normalize",
+    "kruskal_fit",
     "kruskal_norm_sq", "kruskal_inner", "cp_als", "CPDecomp", "CPALSState",
     "build_workspace", "resolve_plan", "init_factors",
 ]

@@ -28,13 +28,13 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from functools import partial
-from typing import Callable, Sequence
+from functools import lru_cache, partial
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from .gram import (gram, hadamard_grams, solve_cholesky, normalize,
+from .gram import (gram, hadamard_grams, solve_cholesky, solve_gram, normalize,
                    kruskal_fit)
 from .coo import SparseTensor
 from .csf import CSF, build_csf
@@ -138,18 +138,32 @@ def build_workspace(
     """One prebuilt structure per mode (SPLATT ALLMODE policy).
 
     ``plan`` is a :class:`repro.plan.DecompPlan` (each mode gets the layout
-    its planned impl consumes: the unified CSF workspace or raw COO) or, for
-    backwards compatibility, an impl-name string."""
+    its planned impl consumes: the unified CSF workspace, the mode-agnostic
+    linearized workspace, or raw COO) or, for backwards compatibility, an
+    impl-name string.  All ``"lin"`` modes share ONE
+    :class:`~repro.core.linearized.Linearized` object — the format's whole
+    point is a single resident buffer (and a single sort) for every mode."""
     if isinstance(plan, str):
         from repro.plan import plan_decomposition
 
         plan = plan_decomposition(t, plan, block=block, row_tile=row_tile,
                                   with_stats=plan == "auto")
-    return [
-        build_csf(t, p.mode, block=p.block, row_tile=p.row_tile)
-        if p.layout == "csf" else t
-        for p in plan.modes
-    ]
+    lin = None
+    ws = []
+    for p in plan.modes:
+        if p.layout == "csf":
+            ws.append(build_csf(t, p.mode, block=p.block,
+                                row_tile=p.row_tile))
+        elif p.layout == "lin":
+            if lin is None:
+                from .linearized import build_linearized
+
+                lin = build_linearized(t, block=p.block,
+                                       row_tile=p.row_tile)
+            ws.append(lin)
+        else:
+            ws.append(t)
+    return ws
 
 
 # ---------------------------------------------------------------------------
@@ -168,35 +182,108 @@ def init_factors(
 
 
 def _mode_update(ws_n, factors, grams, mode: int, impl: str, norm_kind: str):
-    v = hadamard_grams(grams, mode)
     m_mat = mttkrp(ws_n, factors, mode, impl=impl)
-    a_new = solve_cholesky(m_mat, v)
+    factors, grams, lam, _ = _mode_epilogue(
+        m_mat, tuple(factors), tuple(grams),
+        jnp.array(0.0, dtype=factors[0].dtype),
+        mode=mode, norm_kind=norm_kind, with_fit=False)
+    return factors[mode], grams[mode], lam, m_mat
+
+
+def _mode_epilogue(m_mat, factors, grams, norm_x_sq, *, mode: int,
+                   norm_kind: str, with_fit: bool):
+    """Everything after one mode's MTTKRP, as one traceable function: the
+    gram-hadamard, the Cholesky solve, the column normalization, the gram
+    refresh — and, when ``with_fit`` (the last mode), the work-free fit.
+
+    This is the chain the per-routine driver used to run as five separate
+    jitted calls with a host sync between each; fused under one jit the
+    intermediates (V, the un-normalized A_n, the column norms) never leave
+    the device and XLA fuses the small matrix ops end-to-end.  Returns the
+    *full* updated ``(factors, grams, lam, fit)`` tuples so the factor
+    buffers can be donated across calls (see :func:`fused_mode_epilogue`)."""
+    v = hadamard_grams(grams, mode)
+    # solve_gram, not solve_cholesky: inside the fused trace the GEMM
+    # formulation is what makes the collapsed chain beat the per-routine
+    # driver on CPU (cho_solve with I right-hand sides is scalar there)
+    a_new = solve_gram(m_mat, v)
     a_new, lam = normalize(a_new, kind=norm_kind)
     g_new = gram(a_new)
-    return a_new, g_new, lam, m_mat
-
-
-@partial(jax.jit, static_argnames=("impls", "norm_kind", "with_fit"))
-def _iteration(ws, factors, grams, norm_x_sq, *, impls, norm_kind,
-               with_fit=True):
-    """One fused ALS iteration; ``impls`` is the plan's per-mode impl tuple."""
-    factors = list(factors)
-    grams = list(grams)
-    lam = None
-    m_last = None
-    order = len(factors)
-    for n in range(order):
-        factors[n], grams[n], lam, m_last = _mode_update(
-            ws[n], factors, grams, n, impls[n], norm_kind
-        )
+    factors = tuple(a_new if m == mode else f for m, f in enumerate(factors))
+    grams = tuple(g_new if m == mode else g for m, g in enumerate(grams))
     if with_fit:
-        fit = kruskal_fit(norm_x_sq, lam, grams, m_last, factors[-1])
+        fit = kruskal_fit(norm_x_sq, lam, grams, m_mat, factors[-1])
     else:
         # No fit was computed: return NaN, not a fake 0.0 that downstream
         # reports would read as "converged to fit 0".  The driver keeps the
         # last *computed* fit (previous iteration / restored state) instead.
         fit = jnp.array(jnp.nan, dtype=factors[0].dtype)
-    return tuple(factors), tuple(grams), lam, fit
+    return factors, grams, lam, fit
+
+
+def donate_buffers() -> bool:
+    """Whether factor/gram buffer donation is worth requesting: jax only
+    implements input-output aliasing on TPU/GPU — on CPU it is ignored with
+    a warning per call site, so we don't ask."""
+    return jax.default_backend() in ("tpu", "gpu")
+
+
+@lru_cache(maxsize=None)
+def _fused_epilogue_jit(donate: bool):
+    return jax.jit(
+        _mode_epilogue,
+        static_argnames=("mode", "norm_kind", "with_fit"),
+        donate_argnums=(1, 2) if donate else ())
+
+
+def fused_mode_epilogue(m_mat, factors, grams, norm_x_sq, *, mode: int,
+                        norm_kind: str, with_fit: bool = False,
+                        donate: Optional[bool] = None):
+    """One jitted call for a mode's whole post-MTTKRP update.
+
+    ``donate`` (default: backend-resolved — :func:`donate_buffers`) hands
+    the incoming factor/gram buffers to XLA for in-place reuse; callers must
+    treat the inputs as consumed and keep only the returned tuples."""
+    if donate is None:
+        donate = donate_buffers()
+    return _fused_epilogue_jit(donate)(
+        m_mat, tuple(factors), tuple(grams), norm_x_sq,
+        mode=mode, norm_kind=norm_kind, with_fit=with_fit)
+
+
+def _iteration_impl(ws, factors, grams, norm_x_sq, *, impls, norm_kind,
+                    with_fit=True):
+    factors = tuple(factors)
+    grams = tuple(grams)
+    lam = None
+    fit = jnp.array(jnp.nan, dtype=factors[0].dtype)
+    order = len(factors)
+    for n in range(order):
+        m_mat = mttkrp(ws[n], factors, n, impl=impls[n])
+        factors, grams, lam, fit = _mode_epilogue(
+            m_mat, factors, grams, norm_x_sq, mode=n, norm_kind=norm_kind,
+            with_fit=with_fit and n == order - 1)
+    return factors, grams, lam, fit
+
+
+@lru_cache(maxsize=None)
+def _iteration_jit(donate: bool):
+    return jax.jit(
+        _iteration_impl,
+        static_argnames=("impls", "norm_kind", "with_fit"),
+        donate_argnums=(1, 2) if donate else ())
+
+
+def _iteration(ws, factors, grams, norm_x_sq, *, impls, norm_kind,
+               with_fit=True, donate=False):
+    """One fused ALS iteration; ``impls`` is the plan's per-mode impl tuple.
+
+    ``donate=True`` (the method drivers pass :func:`donate_buffers`) donates
+    the factor/gram buffers to the jitted body — zero-copy factor updates on
+    TPU/GPU; the caller must drop its references to the inputs."""
+    return _iteration_jit(bool(donate))(
+        ws, tuple(factors), tuple(grams), norm_x_sq,
+        impls=impls, norm_kind=norm_kind, with_fit=with_fit)
 
 
 # ---------------------------------------------------------------------------
@@ -204,6 +291,12 @@ def _iteration(ws, factors, grams, norm_x_sq, *, impls, norm_kind,
 # ---------------------------------------------------------------------------
 
 ROUTINES = ("sort", "mttkrp", "ata", "inverse", "norm", "fit")
+# the fused path collapses ata/inverse/norm/fit into one jitted call, timed
+# under a single key (bench_cpals_routines reports it as epilogue_s)
+ROUTINES_FUSED = ("sort", "mttkrp", "epilogue")
+# the routines that make up the per-mode post-MTTKRP chain — the "epilogue"
+# subtotal the fused path is measured against
+EPILOGUE_ROUTINES = ("ata", "inverse", "norm", "fit")
 
 
 def _timed(timers, key, fn, *args, **kwargs):
@@ -231,7 +324,29 @@ _jit_fit = jax.jit(kruskal_fit)
 
 
 def _iteration_timed(ws, factors, grams, norm_x_sq, timers, *, impls,
-                     norm_kind, with_fit=True):
+                     norm_kind, with_fit=True, fused=False):
+    """Per-routine timed iteration (paper Table III).
+
+    ``fused=False`` times each routine as its own jitted call with a host
+    sync in between — the historical breakdown.  ``fused=True`` times the
+    MTTKRP per mode and the whole post-MTTKRP chain as ONE jitted
+    ``fused_mode_epilogue`` call under the ``"epilogue"`` key — what the
+    fused path actually executes, so the two variants' timer totals are the
+    honest before/after of the fusion."""
+    if fused:
+        factors = tuple(factors)
+        grams = tuple(grams)
+        lam = None
+        fit = jnp.array(jnp.nan, dtype=factors[0].dtype)
+        order = len(factors)
+        for n in range(order):
+            m_mat = _timed(timers, "mttkrp", _jit_mttkrp, ws[n], factors,
+                           mode=n, impl=impls[n])
+            factors, grams, lam, fit = _timed(
+                timers, "epilogue", fused_mode_epilogue, m_mat, factors,
+                grams, norm_x_sq, mode=n, norm_kind=norm_kind,
+                with_fit=with_fit and n == order - 1)
+        return factors, grams, lam, fit
     factors = list(factors)
     grams = list(grams)
     lam = m_last = None

@@ -1,0 +1,297 @@
+"""Linearized (ALTO-style) workspace: one bit-packed index serves ALL modes.
+
+The CSF family (``core/csf.py``) keeps one sorted replica per mode — SPLATT's
+ALLMODE policy.  That buys every mode a conflict-free schedule at the price of
+N resident workspaces and N sorts.  Laukemann et al.'s ALTO line of work
+("Accelerating Sparse Tensor Decomposition Using Adaptive Linearized
+Representation", PAPERS.md 2403.06348) shows a third point in the design
+space: pack every coordinate tuple into ONE integer with per-mode bit fields,
+
+    lin(i_0, .., i_{N-1}) = sum_m  i_m << offset[m]
+
+sort the non-zero stream ONCE by that packed value, and recover any mode's
+coordinate in-kernel with a shift and a mask.  One resident buffer then
+serves every mode of the decomposition:
+
+  * the **sort mode** (the field placed most-significant; mode 0 by default)
+    gets the full no-lock treatment — the stream is ordered by its output
+    row, tile-aligned and block-padded exactly like a CSF replica, so both
+    the sorted segment reduction and the Pallas one-hot segment-matmul
+    kernel apply unchanged;
+  * every **other mode** trades the per-mode re-sort for a decode (two shifts
+    and a mask per coordinate — integer ALU work, cheap next to the float
+    gathers it accompanies) followed by a scatter-add, i.e. the
+    mutex/atomic regime of the paper at zero extra memory.
+
+Packing layout (``field_offsets``): the sort mode occupies the MOST
+significant field so the single ``argsort`` of the packed stream is exactly
+a sort by that mode's output row; the remaining modes fill the lower fields
+in ascending mode order (which also gives the stream fiber locality in
+those modes, for free).  Fields are sized ``max(1, ceil(log2(dim)))`` bits;
+the budget is :data:`PACK_BITS` = 64 total bits and (because jax arrays are
+32-bit by default) at most 32 bits per field — tensors beyond that are
+rejected at build time with a ``ValueError`` (``check_bit_budget``).
+
+The packed stream is stored as TWO uint32 arrays (``hi``/``lo``) rather
+than one uint64: jax disables 64-bit types by default, and the static
+decode (:func:`decode_field`) never needs a 64-bit op — each field lives
+entirely in one word or straddles the boundary with a known static shift.
+
+Registered in the MTTKRP/TTMc registries as ``linearized`` (pure jnp) and
+``linearized_pallas`` (in-kernel decode, ``kernels/linearized_pallas.py``);
+the planner cost-models and calibrates them like any other impl, and the
+ingest cache persists the build (``repro.ingest``).  Layout rationale in
+``docs/architecture.md`` §2 ("The linearized workspace").
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .coo import SparseTensor
+from .csf import DEFAULT_BLOCK, DEFAULT_ROW_TILE
+
+Array = jax.Array
+
+# Total bit budget of the packed index (stored as two uint32 words).
+PACK_BITS = 64
+# Per-field budget: a field must decode with 32-bit ops (jax default dtypes).
+FIELD_BITS = 32
+# The mode whose field is most significant — the stream is sorted (and
+# tile-aligned) by this mode's output row, so it gets the no-lock schedule.
+DEFAULT_SORT_MODE = 0
+
+
+def bit_widths(dims) -> tuple[int, ...]:
+    """Per-mode field width: bits needed for the largest index (dim - 1),
+    at least 1 so every mode owns a field even at dim == 1."""
+    return tuple(max(1, int(int(d) - 1).bit_length()) for d in dims)
+
+
+def check_bit_budget(dims) -> tuple[int, ...]:
+    """Validate that ``dims`` fit the packed layout; returns the widths.
+
+    Raises ``ValueError`` when the fields exceed :data:`PACK_BITS` total
+    bits (the linearized format simply does not apply — the planner's
+    candidate set falls back to CSF/COO impls) or any single field exceeds
+    :data:`FIELD_BITS` (the 32-bit decode budget)."""
+    widths = bit_widths(dims)
+    total = sum(widths)
+    if total > PACK_BITS:
+        raise ValueError(
+            f"dims {tuple(dims)} need {total} packed bits "
+            f"({'+'.join(str(w) for w in widths)}), over the {PACK_BITS}-bit "
+            "linearized-index budget")
+    if max(widths) > FIELD_BITS:
+        raise ValueError(
+            f"dims {tuple(dims)} need a {max(widths)}-bit field, over the "
+            f"{FIELD_BITS}-bit per-mode decode budget")
+    return widths
+
+
+def field_offsets(dims, sort_mode: int = DEFAULT_SORT_MODE
+                  ) -> tuple[int, ...]:
+    """Bit offset of each mode's field inside the packed index.
+
+    ``sort_mode`` is most significant (so sorting the packed stream sorts by
+    that mode's row); the remaining modes fill the lower fields in ascending
+    mode order."""
+    widths = bit_widths(dims)
+    offsets = [0] * len(widths)
+    shift = sum(widths)
+    for m in (sort_mode, *(m for m in range(len(widths)) if m != sort_mode)):
+        shift -= widths[m]
+        offsets[m] = shift
+    return tuple(offsets)
+
+
+def linearize_coords(inds: np.ndarray, dims,
+                     sort_mode: int = DEFAULT_SORT_MODE) -> np.ndarray:
+    """Pack an (n, order) int coordinate array into (n,) uint64 (host-side)."""
+    check_bit_budget(dims)
+    offsets = field_offsets(dims, sort_mode)
+    inds = np.asarray(inds).astype(np.uint64)
+    lin = np.zeros(inds.shape[0], dtype=np.uint64)
+    for m, off in enumerate(offsets):
+        lin |= inds[:, m] << np.uint64(off)
+    return lin
+
+
+def delinearize_coords(lin: np.ndarray, dims,
+                       sort_mode: int = DEFAULT_SORT_MODE) -> np.ndarray:
+    """Inverse of :func:`linearize_coords`: (n,) uint64 -> (n, order) int64."""
+    widths = check_bit_budget(dims)
+    offsets = field_offsets(dims, sort_mode)
+    lin = np.asarray(lin, dtype=np.uint64)
+    out = np.empty((lin.shape[0], len(widths)), dtype=np.int64)
+    for m, (off, w) in enumerate(zip(offsets, widths)):
+        mask = np.uint64((1 << w) - 1)
+        out[:, m] = ((lin >> np.uint64(off)) & mask).astype(np.int64)
+    return out
+
+
+def decode_field(hi: Array, lo: Array, offset: int, width: int) -> Array:
+    """Extract one static (offset, width) bit field from the hi/lo word pair.
+
+    All shifts and masks are static python ints, so this lowers to two or
+    three integer vector ops — usable both in jnp impls and inside the
+    Pallas kernel body (``kernels/linearized_pallas.py``)."""
+    mask = np.uint32((1 << width) - 1) if width < 32 else np.uint32(0xFFFFFFFF)
+    if offset >= 32:
+        word = hi >> np.uint32(offset - 32) if offset > 32 else hi
+        return (word & mask).astype(jnp.int32)
+    if offset + width <= 32:
+        word = lo >> np.uint32(offset) if offset else lo
+        return (word & mask).astype(jnp.int32)
+    # field straddles the 32-bit boundary: low part from lo, rest from hi
+    word = (lo >> np.uint32(offset)) | (hi << np.uint32(32 - offset))
+    return (word & mask).astype(jnp.int32)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Linearized:
+    """The mode-agnostic linearized workspace (one per tensor, not per mode).
+
+    hi/lo:      (pnnz,) uint32 — high/low words of the packed 64-bit index,
+                sorted ascending (== sorted by the sort mode's output row),
+                tile-aligned and block-padded for that mode like a CSF.
+    vals:       (pnnz,) values, 0 for padding (padding packs to the tile's
+                last real sort-mode row with all other fields 0, so every
+                impl treats padding as exact no-ops without masking).
+    block_tile: (pnnz/block,) int32 non-decreasing block -> sort-mode output
+                tile map (Pallas scalar prefetch, like ``CSF.block_tile``).
+    """
+
+    hi: Array
+    lo: Array
+    vals: Array
+    block_tile: Array
+    dims: tuple[int, ...]
+    nnz: int
+    block: int
+    row_tile: int
+    sort_mode: int = DEFAULT_SORT_MODE
+
+    def tree_flatten(self):
+        children = (self.hi, self.lo, self.vals, self.block_tile)
+        aux = (self.dims, self.nnz, self.block, self.row_tile, self.sort_mode)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        dims, nnz, block, row_tile, sort_mode = aux
+        hi, lo, vals, block_tile = children
+        return cls(hi, lo, vals, block_tile, dims, nnz, block, row_tile,
+                   sort_mode)
+
+    @property
+    def order(self) -> int:
+        return len(self.dims)
+
+    @property
+    def widths(self) -> tuple[int, ...]:
+        return bit_widths(self.dims)
+
+    @property
+    def offsets(self) -> tuple[int, ...]:
+        return field_offsets(self.dims, self.sort_mode)
+
+    @property
+    def num_rows(self) -> int:
+        return self.dims[self.sort_mode]
+
+    @property
+    def num_row_tiles(self) -> int:
+        return -(-self.dims[self.sort_mode] // self.row_tile)
+
+    @property
+    def padded_nnz(self) -> int:
+        return int(self.vals.shape[0])
+
+    @property
+    def num_blocks(self) -> int:
+        return self.padded_nnz // self.block
+
+    @property
+    def padding_overhead(self) -> float:
+        return 1.0 - self.nnz / max(1, self.padded_nnz)
+
+    def decode(self, mode: int) -> Array:
+        """The mode's (pnnz,) int32 coordinates, two shifts and a mask away."""
+        return decode_field(self.hi, self.lo, self.offsets[mode],
+                            self.widths[mode])
+
+
+def build_linearized(
+    t: SparseTensor,
+    *,
+    block: int = DEFAULT_BLOCK,
+    row_tile: int = DEFAULT_ROW_TILE,
+    sort_mode: int = DEFAULT_SORT_MODE,
+) -> Linearized:
+    """Pack, sort ONCE, tile-align and pad — the whole-tensor analogue of
+    ``build_csf`` that every mode shares.
+
+    Host-side numpy like the CSF build (pre-processing runs on the host);
+    one uint64 argsort replaces the per-mode lexsorts.  Padding entries pack
+    the tile's last real sort-mode row with every other field 0 and value 0:
+    they decode to in-range coordinates and contribute exact zeros on every
+    mode's reduction, and the packed stream stays globally non-decreasing so
+    the sort mode keeps its ``indices_are_sorted`` no-lock reduction."""
+    order = t.order
+    if not 0 <= sort_mode < order:
+        raise ValueError(
+            f"sort_mode {sort_mode} out of range for order-{order} tensor")
+    check_bit_budget(t.dims)
+    offsets = field_offsets(t.dims, sort_mode)
+
+    inds = np.asarray(t.inds[: t.nnz])
+    in_vals = np.asarray(t.vals[: t.nnz])
+    lin = linearize_coords(inds, t.dims, sort_mode)
+    perm = np.argsort(lin, kind="stable")
+    lin = lin[perm]
+    v = in_vals[perm]
+    rows = inds[perm, sort_mode].astype(np.int64)
+
+    # tile-align + block-pad against the sort mode's row tiles (the same
+    # vectorized counts -> blocks -> scatter scheme as csf._finalize)
+    n = int(v.shape[0])
+    n_tiles = -(-t.dims[sort_mode] // row_tile)
+    tile_of = rows // row_tile
+    counts = np.bincount(tile_of, minlength=n_tiles)
+    blocks_per = np.maximum(1, -(-counts // block))
+    tile_widths = blocks_per * block
+    offs = np.concatenate([[0], np.cumsum(tile_widths)])[:-1]
+    starts = np.concatenate([[0], np.cumsum(counts)])[:-1]
+    pnnz = int(tile_widths.sum())
+
+    tile_ids = np.arange(n_tiles, dtype=np.int64)
+    pad_row = tile_ids * row_tile
+    if n:
+        nz = counts > 0
+        pad_row[nz] = rows[(starts + counts - 1)[nz]]
+    out_lin = np.repeat(
+        pad_row.astype(np.uint64) << np.uint64(offsets[sort_mode]),
+        tile_widths)
+    out_vals = np.zeros(pnnz, dtype=in_vals.dtype)
+    if n:
+        pos = offs[tile_of] + (np.arange(n) - starts[tile_of])
+        out_lin[pos] = lin
+        out_vals[pos] = v
+    block_tile = np.repeat(tile_ids.astype(np.int32), blocks_per)
+
+    return Linearized(
+        hi=jnp.asarray((out_lin >> np.uint64(32)).astype(np.uint32)),
+        lo=jnp.asarray((out_lin & np.uint64(0xFFFFFFFF)).astype(np.uint32)),
+        vals=jnp.asarray(out_vals),
+        block_tile=jnp.asarray(block_tile),
+        dims=t.dims,
+        nnz=t.nnz,
+        block=block,
+        row_tile=row_tile,
+        sort_mode=sort_mode,
+    )

@@ -25,6 +25,14 @@ impl                what it reproduces
 ``pallas``          the TPU-native kernel (kernels/mttkrp_pallas.py): blocked
                     one-hot segment-matmul on the MXU; collisions inside a
                     block are reduced by the matmul itself.
+``linearized``      ALTO-style mode-agnostic workspace (core/linearized.py):
+                    one bit-packed sorted index serves every mode.  Sort mode
+                    runs the no-lock segment reduction; other modes decode
+                    coordinates (shift/mask) and scatter-add.  Pure jnp.
+``linearized_pallas``  the linearized workspace on the TPU kernel
+                    (kernels/linearized_pallas.py): the one-hot
+                    segment-matmul with the coordinate decode moved *inside*
+                    the kernel; non-sort modes fall back to the jnp decode.
 ``dense``           dense einsum oracle (tests only).
 ==================  =========================================================
 
@@ -32,9 +40,12 @@ All impls support arbitrary tensor order (the paper restricts to 3rd order;
 SPLATT itself and our port support order >= 3 — this is one of the paper's
 "future work" items implemented here).
 
-Every workspace-consuming impl (``segment``, ``pallas``, ``gather_scatter``)
+Every CSF-consuming impl (``segment``, ``pallas``, ``gather_scatter``)
 accepts the single unified :class:`~repro.core.csf.CSF` layout;
-``gather_scatter``/``rowloop``/``dense`` also run straight off COO.
+``gather_scatter``/``rowloop``/``dense`` also run straight off COO; the
+``linearized*`` impls consume the mode-agnostic
+:class:`~repro.core.linearized.Linearized` workspace (layout ``"lin"`` —
+ONE buffer for the whole decomposition instead of one CSF per mode).
 
 This table is kept in sync with ``docs/architecture.md`` ("The MTTKRP
 implementation registry").
@@ -49,6 +60,7 @@ import jax.numpy as jnp
 
 from .coo import SparseTensor
 from .csf import CSF
+from .linearized import Linearized
 
 Array = jax.Array
 
@@ -193,6 +205,52 @@ def mttkrp_pallas(csf: CSF, factors: Sequence[Array],
 
 
 # ---------------------------------------------------------------------------
+# linearized — ALTO-style mode-agnostic bit-packed workspace (all modes from
+# one resident buffer; see core/linearized.py for the format)
+# ---------------------------------------------------------------------------
+
+
+def _require_lin(ws) -> Linearized:
+    if not isinstance(ws, Linearized):
+        raise TypeError(
+            "linearized impls need a Linearized workspace "
+            "(build_linearized(t)); got " + type(ws).__name__)
+    return ws
+
+
+def mttkrp_linearized(ws, factors: Sequence[Array], mode: int) -> Array:
+    """Pure-jnp reference over the linearized workspace — any mode, one buffer.
+
+    Coordinates are recovered from the packed hi/lo words with static
+    shifts/masks (``Linearized.decode``).  On the sort mode the stream is
+    ordered by the output row (padding keeps it globally non-decreasing), so
+    the no-lock ``segment_sum`` fast path applies; other modes take the
+    scatter-add (mutex/atomic regime) — ALTO's recompute path, at zero extra
+    resident memory and no re-sort."""
+    lin = _require_lin(ws)
+    prod = lin.vals[:, None].astype(factors[0].dtype)
+    for m in range(lin.order):
+        if m != mode:
+            prod = prod * factors[m][lin.decode(m)]
+    rows = lin.decode(mode)
+    if mode == lin.sort_mode:
+        return jax.ops.segment_sum(prod, rows, num_segments=lin.dims[mode],
+                                   indices_are_sorted=True)
+    out = jnp.zeros((lin.dims[mode], prod.shape[1]), dtype=prod.dtype)
+    return out.at[rows].add(prod, mode="drop")
+
+
+def mttkrp_linearized_pallas(ws, factors: Sequence[Array], mode: int) -> Array:
+    """The linearized workspace on the TPU kernel: in-kernel shift/mask decode
+    on the sort mode (kernels/linearized_pallas.py), jnp decode + scatter on
+    the others (interpret mode off-TPU)."""
+    lin = _require_lin(ws)
+    from repro.kernels import ops as kops  # local import: optional dep
+
+    return kops.mttkrp_lin(lin, factors, mode)
+
+
+# ---------------------------------------------------------------------------
 # cost models (relative per-iteration work; consumed by the planner)
 # ---------------------------------------------------------------------------
 #
@@ -229,6 +287,32 @@ def _cost_pallas(stats, rank: int) -> float:
 
 def _cost_rowloop(stats, rank: int) -> float:
     return stats.nnz * rank * stats.order * 1e3  # sequential; never chosen
+
+
+# Integer shift/mask work per coordinate decode, relative to a float
+# gather+multiply unit of the models above.  Strictly positive: on predicted
+# costs the linearized variants price as their sorted/scatter counterparts
+# *plus* the decode, so they never displace a same-regime impl without a
+# measured (calibrated) win — the single-resident-buffer advantage doesn't
+# show up in flop-counting models.
+_DECODE_DISCOUNT = 0.25
+
+
+def _cost_decode(stats, rank: int) -> float:
+    return _DECODE_DISCOUNT * stats.nnz * stats.order
+
+
+def _cost_linearized(stats, rank: int) -> float:
+    # the sort mode runs the segment (no-lock) regime, other modes the
+    # scatter regime; scored per-mode we take whichever the mode's stats
+    # favor, plus the decode
+    base = min(_cost_segment(stats, rank), _cost_gather_scatter(stats, rank))
+    return base + _cost_decode(stats, rank)
+
+
+def _cost_linearized_pallas(stats, rank: int) -> float:
+    base = min(_cost_pallas(stats, rank), _cost_gather_scatter(stats, rank))
+    return base + _cost_decode(stats, rank)
 
 
 # ---------------------------------------------------------------------------
@@ -268,7 +352,7 @@ REGISTRY: dict[str, ImplSpec] = {}
 
 def register_impl(spec: ImplSpec) -> ImplSpec:
     """Add (or replace) an implementation in the registry."""
-    if spec.layout not in ("csf", "coo", "any"):
+    if spec.layout not in ("csf", "coo", "lin", "any"):
         raise ValueError(f"bad layout {spec.layout!r} for impl {spec.name!r}")
     REGISTRY[spec.name] = spec
     return spec
@@ -329,6 +413,14 @@ register_impl(ImplSpec(
     name="pallas", fn=mttkrp_pallas, layout="csf",
     needs_sorted=True, supports_order_gt3=True, backend="tpu",
     cost_model=_cost_pallas))
+register_impl(ImplSpec(
+    name="linearized", fn=mttkrp_linearized, layout="lin",
+    needs_sorted=True, supports_order_gt3=True,
+    cost_model=_cost_linearized))
+register_impl(ImplSpec(
+    name="linearized_pallas", fn=mttkrp_linearized_pallas, layout="lin",
+    needs_sorted=True, supports_order_gt3=True, backend="tpu",
+    cost_model=_cost_linearized_pallas))
 register_impl(ImplSpec(
     name="rowloop", fn=mttkrp_rowloop, layout="coo",
     needs_sorted=False, supports_order_gt3=True, benchmark_only=True,

@@ -23,6 +23,12 @@ strategy from ``core/mttkrp.py`` transfers:
                      the Kronecker rows are formed XLA-side and fed through
                      ``kernels.ops.ttmc`` (collisions inside a block are
                      again resolved by the MXU matmul).
+``linearized``       the ALTO-style mode-agnostic workspace
+                     (core/linearized.py): one bit-packed sorted stream
+                     serves all modes; sort mode segment-sums, other modes
+                     decode + scatter.  Pure jnp.
+``linearized_pallas``  the linearized workspace on the TPU kernel with the
+                     coordinate decode inside the kernel.
 ``dense``            dense einsum oracle (tests only).
 
 Kronecker column order: ascending other-mode order, row-major — for a 3rd
@@ -44,8 +50,10 @@ import jax.numpy as jnp
 
 from .coo import SparseTensor
 from .csf import CSF
+from .linearized import Linearized
 from .mttkrp import (ImplSpec, available_impls, get_impl,
-                     _cost_gather_scatter, _cost_pallas, _cost_segment)
+                     _cost_gather_scatter, _cost_linearized,
+                     _cost_linearized_pallas, _cost_pallas, _cost_segment)
 
 Array = jax.Array
 
@@ -130,6 +138,37 @@ def ttmc_pallas(csf: CSF, factors: Sequence[Array],
     return kops.ttmc(csf, factors)
 
 
+def ttmc_linearized(ws, factors: Sequence[Array], mode: int) -> Array:
+    """Kronecker rows over the mode-agnostic linearized workspace (pure jnp):
+    decode every mode's coordinates from the packed words, segment-sum on the
+    sort mode, scatter-add elsewhere.  One resident buffer for all modes."""
+    if not isinstance(ws, Linearized):
+        raise TypeError(
+            "linearized impls need a Linearized workspace "
+            "(build_linearized(t)); got " + type(ws).__name__)
+    rows_list = [factors[m][ws.decode(m)] for m in range(ws.order)
+                 if m != mode]
+    prod = ws.vals[:, None].astype(factors[0].dtype) * kron_chain(rows_list)
+    rows = ws.decode(mode)
+    if mode == ws.sort_mode:
+        return jax.ops.segment_sum(prod, rows, num_segments=ws.dims[mode],
+                                   indices_are_sorted=True)
+    out = jnp.zeros((ws.dims[mode], prod.shape[1]), dtype=prod.dtype)
+    return out.at[rows].add(prod, mode="drop")
+
+
+def ttmc_linearized_pallas(ws, factors: Sequence[Array], mode: int) -> Array:
+    """The linearized workspace on the TPU kernel (in-kernel decode on the
+    sort mode; jnp fallback on the others; interpret mode off-TPU)."""
+    if not isinstance(ws, Linearized):
+        raise TypeError(
+            "linearized impls need a Linearized workspace "
+            "(build_linearized(t)); got " + type(ws).__name__)
+    from repro.kernels import ops as kops  # local import: optional dep
+
+    return kops.ttmc_lin(ws, factors, mode)
+
+
 # ---------------------------------------------------------------------------
 # the registry — scored by the planner via plan_decomposition(kernel="ttmc")
 # ---------------------------------------------------------------------------
@@ -143,7 +182,7 @@ TTMC_REGISTRY: dict[str, ImplSpec] = {}
 
 
 def register_ttmc_impl(spec: ImplSpec) -> ImplSpec:
-    if spec.layout not in ("csf", "coo", "any"):
+    if spec.layout not in ("csf", "coo", "lin", "any"):
         raise ValueError(f"bad layout {spec.layout!r} for impl {spec.name!r}")
     TTMC_REGISTRY[spec.name] = spec
     return spec
@@ -169,6 +208,14 @@ register_ttmc_impl(ImplSpec(
     name="pallas", fn=ttmc_pallas, layout="csf",
     needs_sorted=True, supports_order_gt3=True, backend="tpu",
     cost_model=_cost_pallas))
+register_ttmc_impl(ImplSpec(
+    name="linearized", fn=ttmc_linearized, layout="lin",
+    needs_sorted=True, supports_order_gt3=True,
+    cost_model=_cost_linearized))
+register_ttmc_impl(ImplSpec(
+    name="linearized_pallas", fn=ttmc_linearized_pallas, layout="lin",
+    needs_sorted=True, supports_order_gt3=True, backend="tpu",
+    cost_model=_cost_linearized_pallas))
 register_ttmc_impl(ImplSpec(
     name="dense", fn=ttmc_dense, layout="coo",
     needs_sorted=False, supports_order_gt3=True, oracle=True))

@@ -32,6 +32,7 @@ from typing import Optional, Sequence, Union
 import jax
 
 from repro.core import csf as csf_mod
+from repro.core import linearized as lin_mod
 from repro.core.coo import SparseTensor
 from repro.core.csf import DEFAULT_BLOCK, DEFAULT_ROW_TILE
 from repro.plan.stats import ModeStats, tensor_stats
@@ -64,6 +65,7 @@ class Ingested:
     cache: Optional[IngestCache] = None
     cache_hit: bool = False
     _csf: dict = dataclasses.field(default_factory=dict)
+    _lin: Optional[object] = None
 
     # -- basics ------------------------------------------------------------
     @property
@@ -121,19 +123,33 @@ class Ingested:
                 self.tensor, mode, block=self.block, row_tile=self.row_tile)
         return self._csf[mode]
 
+    def lin(self):
+        """The tensor's single mode-agnostic linearized workspace
+        (``core/linearized.py``): cached if available, else built once and
+        memoized.  Goes through the module attribute so tests can
+        monkeypatch ``linearized.build_linearized`` and assert a warm cache
+        hit performs zero builds."""
+        if self._lin is None:
+            self._lin = lin_mod.build_linearized(
+                self.tensor, block=self.block, row_tile=self.row_tile)
+        return self._lin
+
     def workspace(self, plan) -> list:
-        """Per-mode workspace list for ``plan`` (CSF or raw COO per the
-        planned layout) — the cache-aware analogue of
-        :func:`repro.core.cpals.build_workspace`."""
+        """Per-mode workspace list for ``plan`` (CSF, the shared linearized
+        workspace, or raw COO per the planned layout) — the cache-aware
+        analogue of :func:`repro.core.cpals.build_workspace`."""
         out = []
         for p in plan.modes:
-            if p.layout == "csf":
+            if p.layout in ("csf", "lin"):
                 if (p.block, p.row_tile) != (self.block, self.row_tile):
                     raise ValueError(
                         f"plan wants (block={p.block}, row_tile={p.row_tile})"
                         f" but this tensor was ingested with tile="
                         f"({self.block}, {self.row_tile})")
+            if p.layout == "csf":
                 out.append(self.csf_for(p.mode))
+            elif p.layout == "lin":
+                out.append(self.lin())
             else:
                 out.append(self.tensor)
         return out
@@ -208,13 +224,13 @@ def ingest(
                           else "")
         hit = cache.load(key)
         if hit is not None:
-            t, relabeling, csfs, stats, stats_before = hit
+            t, relabeling, csfs, lin, stats, stats_before = hit
             return Ingested(
                 tensor=t, relabeling=relabeling, stats=tuple(stats),
                 stats_before=(None if stats_before is None
                               else tuple(stats_before)),
                 block=block, row_tile=row_tile, source=source, key=key,
-                cache=cache, cache_hit=True, _csf=csfs)
+                cache=cache, cache_hit=True, _csf=csfs, _lin=lin)
 
     # -- cold path ---------------------------------------------------------
     if isinstance(x, SparseTensor):
@@ -239,15 +255,23 @@ def ingest(
     stats = tuple(tensor_stats(t, block=block, row_tile=row_tile))
 
     csfs: dict[int, object] = {}
+    lin = None
     if cache is not None:
         # ALLMODE build (SPLATT's storage policy): persist every mode so any
         # later plan — whatever layouts it picks — is a pure cache read.
+        # The linearized workspace rides along (one buffer for all modes)
+        # unless the tensor's dims exceed its 64-bit packed-index budget.
         for m in range(t.order):
             csfs[m] = csf_mod.build_csf(t, m, block=block, row_tile=row_tile)
+        try:
+            lin = lin_mod.build_linearized(t, block=block, row_tile=row_tile)
+        except ValueError:
+            lin = None
         cache.store(key, t, relabeling, list(csfs.values()), list(stats),
-                    None if stats_before is None else list(stats_before))
+                    None if stats_before is None else list(stats_before),
+                    lin=lin)
 
     return Ingested(tensor=t, relabeling=relabeling, stats=stats,
                     stats_before=stats_before, block=block, row_tile=row_tile,
                     source=source, key=key, cache=cache, cache_hit=False,
-                    _csf=csfs)
+                    _csf=csfs, _lin=lin)

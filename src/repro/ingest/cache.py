@@ -35,11 +35,16 @@ import jax.numpy as jnp
 
 from repro.core.coo import SparseTensor
 from repro.core.csf import CSF
+from repro.core.linearized import Linearized
 from repro.plan.stats import ModeStats
 
 from .relabel import Relabeling
 
-CACHE_FORMAT_VERSION = 1
+# v2: entries additionally carry the mode-agnostic linearized workspace
+# (core/linearized.py) — lin_hi/lin_lo/lin_vals/lin_block_tile arrays plus
+# its geometry in meta["lin"].  The version is part of content_key, so v1
+# entries are simply never addressed again (stale dirs, no torn reads).
+CACHE_FORMAT_VERSION = 2
 
 
 def content_key(
@@ -118,7 +123,8 @@ class IngestCache:
     def store(self, key: str, t: SparseTensor,
               relabeling: Optional[Relabeling],
               csfs: list[CSF], stats: list[ModeStats],
-              stats_before: Optional[list[ModeStats]] = None) -> None:
+              stats_before: Optional[list[ModeStats]] = None,
+              lin: Optional[Linearized] = None) -> None:
         entry = self._dir(key)
         entry.parent.mkdir(parents=True, exist_ok=True)
 
@@ -140,6 +146,11 @@ class IngestCache:
             arrays[f"csf{m}_other_ids"] = np.asarray(c.other_ids)
             arrays[f"csf{m}_vals"] = np.asarray(c.vals)
             arrays[f"csf{m}_block_tile"] = np.asarray(c.block_tile)
+        if lin is not None:
+            arrays["lin_hi"] = np.asarray(lin.hi)
+            arrays["lin_lo"] = np.asarray(lin.lo)
+            arrays["lin_vals"] = np.asarray(lin.vals)
+            arrays["lin_block_tile"] = np.asarray(lin.block_tile)
 
         meta = {
             "version": CACHE_FORMAT_VERSION,
@@ -147,6 +158,9 @@ class IngestCache:
             "nnz": t.nnz,
             "csf": {str(c.mode): {"block": c.block, "row_tile": c.row_tile}
                     for c in csfs},
+            "lin": None if lin is None else {
+                "block": lin.block, "row_tile": lin.row_tile,
+                "sort_mode": lin.sort_mode},
             "relabeling": None if relabeling is None else {
                 "dims_old": list(relabeling.dims_old),
                 "dims_new": list(relabeling.dims_new),
@@ -173,8 +187,10 @@ class IngestCache:
 
     # -- load --------------------------------------------------------------
     def load(self, key: str):
-        """Returns ``(tensor, relabeling, {mode: CSF}, stats, stats_before)``
-        or None on a miss.  Counts hits/misses."""
+        """Returns ``(tensor, relabeling, {mode: CSF}, lin, stats,
+        stats_before)`` — ``lin`` is the shared linearized workspace, or
+        None when the tensor's dims exceed its bit budget — or None on a
+        miss.  Counts hits/misses."""
         entry = self._dir(key)
         meta_path = entry / "meta.json"
         if not meta_path.exists():
@@ -224,7 +240,21 @@ class IngestCache:
                 dims=dims, nnz=nnz,
                 block=int(geom["block"]), row_tile=int(geom["row_tile"]),
             )
+        lin = None
+        lmeta = meta.get("lin")
+        if lmeta is not None:
+            # widths/offsets are pure functions of (dims, sort_mode): only
+            # the arrays and the tile geometry need to round-trip
+            lin = Linearized(
+                hi=jnp.asarray(arrays["lin_hi"]),
+                lo=jnp.asarray(arrays["lin_lo"]),
+                vals=jnp.asarray(arrays["lin_vals"]),
+                block_tile=jnp.asarray(arrays["lin_block_tile"]),
+                dims=dims, nnz=nnz,
+                block=int(lmeta["block"]), row_tile=int(lmeta["row_tile"]),
+                sort_mode=int(lmeta["sort_mode"]),
+            )
         stats = [ModeStats(**d) for d in meta["stats"]]
         stats_before = (None if meta["stats_before"] is None
                         else [ModeStats(**d) for d in meta["stats_before"]])
-        return t, relabeling, csfs, stats, stats_before
+        return t, relabeling, csfs, lin, stats, stats_before

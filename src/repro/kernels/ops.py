@@ -16,7 +16,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.csf import CSF
+from repro.core.linearized import Linearized
 
+from .linearized_pallas import mttkrp_lin_pallas_call
 from .mttkrp_pallas import LANE, mttkrp_pallas_call
 from .syrk_pallas import syrk_pallas_call
 
@@ -106,6 +108,88 @@ def ttmc(csf: CSF, factors: Sequence[Array], *,
         interpret=interpret,
     )
     return out[: csf.num_rows, :width].astype(factors[0].dtype)
+
+
+@partial(jax.jit, static_argnames=("mode", "interpret"))
+def mttkrp_lin(lin: Linearized, factors: Sequence[Array], mode: int, *,
+               interpret: Optional[bool] = None) -> Array:
+    """MTTKRP for any mode from the single linearized workspace.
+
+    On the sort mode the stream is already ordered and tile-aligned by the
+    output row, so the Pallas one-hot segment-matmul kernel applies with the
+    row decode moved *inside* the kernel (shift/mask on the packed hi/lo
+    words); the factor-row gathers — which need the other modes' decoded
+    coordinates — stay XLA-side like the CSF path.  On non-sort modes there
+    is no block -> output-tile structure to exploit, so this follows ALTO's
+    recompute path: decode + scatter-add in plain jnp (the pure reference
+    impl), still from the same resident buffer with no re-sort.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    if mode != lin.sort_mode:  # static: sort_mode is pytree aux data
+        from repro.core.mttkrp import mttkrp_linearized
+        return mttkrp_linearized(lin, factors, mode)
+    rank = factors[0].shape[1]
+    om = [m for m in range(lin.order) if m != mode]
+    brows = _pad_lanes(factors[om[0]][lin.decode(om[0])])
+    crows = _pad_lanes(factors[om[1]][lin.decode(om[1])])
+    for m in om[2:]:
+        crows = crows * _pad_lanes(factors[m][lin.decode(m)])
+
+    nblocks, block = lin.num_blocks, lin.block
+    rp = brows.shape[-1]
+    out = mttkrp_lin_pallas_call(
+        lin.hi.reshape(nblocks, block),
+        lin.lo.reshape(nblocks, block),
+        lin.vals.reshape(nblocks, block),
+        brows.reshape(nblocks, block, rp),
+        crows.reshape(nblocks, block, rp),
+        lin.block_tile,
+        num_row_tiles=lin.num_row_tiles,
+        row_tile=lin.row_tile,
+        offset=lin.offsets[mode],
+        width=lin.widths[mode],
+        interpret=interpret,
+    )
+    return out[: lin.dims[mode], :rank].astype(factors[0].dtype)
+
+
+@partial(jax.jit, static_argnames=("mode", "interpret"))
+def ttmc_lin(lin: Linearized, factors: Sequence[Array], mode: int, *,
+             interpret: Optional[bool] = None) -> Array:
+    """Chain-of-modes TTMc from the linearized workspace (cf. ``ttmc``).
+
+    Sort mode: the Kronecker chain of the other modes' factor rows is formed
+    XLA-side and fed to the in-kernel-decode kernel with an all-ones second
+    operand.  Non-sort modes fall back to the jnp decode + scatter reference.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    from repro.core.ttmc import kron_chain, ttmc_linearized
+    if mode != lin.sort_mode:
+        return ttmc_linearized(lin, factors, mode)
+
+    om = [m for m in range(lin.order) if m != mode]
+    kron = kron_chain([factors[m][lin.decode(m)] for m in om])
+    width = kron.shape[-1]
+    kron = _pad_lanes(kron)
+
+    nblocks, block = lin.num_blocks, lin.block
+    rp = kron.shape[-1]
+    out = mttkrp_lin_pallas_call(
+        lin.hi.reshape(nblocks, block),
+        lin.lo.reshape(nblocks, block),
+        lin.vals.reshape(nblocks, block),
+        kron.reshape(nblocks, block, rp),
+        jnp.ones((nblocks, block, rp), dtype=kron.dtype),
+        lin.block_tile,
+        num_row_tiles=lin.num_row_tiles,
+        row_tile=lin.row_tile,
+        offset=lin.offsets[mode],
+        width=lin.widths[mode],
+        interpret=interpret,
+    )
+    return out[: lin.dims[mode], :width].astype(factors[0].dtype)
 
 
 @partial(jax.jit, static_argnames=("blk", "interpret"))

@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from repro.core.coo import SparseTensor
 from repro.core.cpals import (CPALSState, CPDecomp, _iteration,
                               _iteration_timed, _timed, build_workspace,
-                              init_factors, resolve_plan)
+                              donate_buffers, init_factors, resolve_plan)
 from repro.core.gram import gram
 
 from .registry import DecompState, MethodSpec, make_state, register_method
@@ -95,6 +95,7 @@ def cp_als(
     verbose: bool = False,
     first_norm: str = "max",
     with_fit: bool = True,
+    fused_epilogue: bool = False,
     state: CPALSState | DecompState | None = None,
     checkpoint_cb: Callable[[CPALSState], None] | None = None,
     monitor=None,
@@ -126,6 +127,12 @@ def cp_als(
 
     ``monitor``: optional :class:`repro.dist.StragglerMonitor`; per-iteration
     wall times are recorded so imbalance shows up at the driver.
+
+    ``fused_epilogue`` only changes the *timed* path (``timers=``): the
+    per-mode post-MTTKRP chain (ata/inverse/norm/fit) is executed — and
+    timed — as ONE jitted ``fused_mode_epilogue`` call under the
+    ``"epilogue"`` timer key instead of five host-synced routine calls.
+    The untimed path is always fully fused (one jit per iteration).
     """
     if key is None:
         key = jax.random.PRNGKey(0)
@@ -171,6 +178,12 @@ def cp_als(
         fit_prev = state.fit
         start_iter = int(state.iteration)
 
+    donate = donate_buffers()
+    if donate and state is not None:
+        # the first iteration donates the factor buffers; keep the caller's
+        # restored state intact by handing the loop its own copies
+        factors = tuple(jnp.array(a, copy=True) for a in factors)
+
     grams = tuple(gram(a) for a in factors)
 
     for it in range(start_iter, niters):
@@ -179,19 +192,27 @@ def cp_als(
         if timers is not None:
             factors, grams, lmbda, fit_new = _iteration_timed(
                 ws, factors, grams, norm_x_sq, timers, impls=impls,
-                norm_kind=norm_kind, with_fit=with_fit
+                norm_kind=norm_kind, with_fit=with_fit, fused=fused_epilogue
             )
         else:
             factors, grams, lmbda, fit_new = _iteration(
                 ws, tuple(factors), grams, norm_x_sq, impls=impls,
-                norm_kind=norm_kind, with_fit=with_fit
+                norm_kind=norm_kind, with_fit=with_fit,
+                # checkpoint_cb hands factor references out of the loop, so
+                # donation would invalidate the checkpointed arrays
+                donate=donate and checkpoint_cb is None
             )
         if with_fit:
             fit = fit_new
         record_iteration(monitor, time.perf_counter() - t0)
+        # one dtype-consistent delta scalar: cast both fits to python float
+        # FIRST, then subtract — printing float(fit - fit_prev) (a bf16/f32
+        # device subtraction) while comparing abs(float(fit) - float(fit_prev))
+        # against tol let the printed delta disagree with the stop decision
+        delta = float(fit) - float(fit_prev)
         if verbose:
             print(f"  its = {it + 1}  fit = {float(fit):.6f}  "
-                  f"delta = {float(fit - fit_prev):+.3e}")
+                  f"delta = {delta:+.3e}")
         if checkpoint_cb is not None:
             checkpoint_cb(
                 CPALSState(
@@ -199,7 +220,7 @@ def cp_als(
                     jnp.array(it + 1, dtype=jnp.int32),
                 )
             )
-        if tol > 0.0 and it > 0 and abs(float(fit) - float(fit_prev)) < tol:
+        if tol > 0.0 and it > 0 and abs(delta) < tol:
             fit_prev = fit
             break
         fit_prev = fit

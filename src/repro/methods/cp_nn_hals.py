@@ -23,14 +23,14 @@ so the reported fit is non-decreasing (up to float noise) — asserted by
 from __future__ import annotations
 
 import time
-from functools import partial
+from functools import lru_cache
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.cpals import CPDecomp, _timed, build_workspace, init_factors, \
-    resolve_plan
+from repro.core.cpals import CPDecomp, _timed, build_workspace, \
+    donate_buffers, init_factors, resolve_plan
 from repro.core.gram import gram, hadamard_grams, kruskal_fit, normalize
 from repro.core.mttkrp import mttkrp
 
@@ -45,34 +45,58 @@ Array = jax.Array
 _HALS_EPS = 1e-12
 
 
-@partial(jax.jit, static_argnames=("impls",))
-def _hals_iteration(ws, factors, grams, norm_x_sq, *, impls):
+def _hals_mode_epilogue(m_mat, factors, grams, norm_x_sq, *, mode: int,
+                        with_fit: bool):
+    """One mode's whole post-MTTKRP HALS update as a single traceable chain —
+    the nonnegative-projection counterpart of
+    :func:`repro.core.cpals._mode_epilogue` (same signature shape, same
+    full-tuples-in/full-tuples-out contract so the factor buffers can be
+    donated).  The rank-one column loop replaces the Cholesky solve; the
+    column loop unrolls at trace time (R is static and small — paper uses
+    35); the fit rides the last mode's MTTKRP with unit lambda (the HALS
+    factors carry their own scale)."""
+    v = hadamard_grams(grams, mode)
+    a = factors[mode]
+    rank = a.shape[1]
+    for r in range(rank):
+        # M[:, r] - A V[:, r] + a_r V[r, r]  ==  M[:, r] - sum_{s != r} ...
+        resid = m_mat[:, r] - a @ v[:, r] + a[:, r] * v[r, r]
+        a = a.at[:, r].set(
+            jnp.maximum(resid / jnp.maximum(v[r, r], _HALS_EPS), 0.0))
+    factors = tuple(a if m == mode else f for m, f in enumerate(factors))
+    grams = tuple(gram(a) if m == mode else g for m, g in enumerate(grams))
+    if with_fit:
+        ones = jnp.ones((rank,), dtype=factors[0].dtype)
+        fit = kruskal_fit(norm_x_sq, ones, grams, m_mat, factors[-1])
+    else:
+        fit = jnp.array(jnp.nan, dtype=factors[0].dtype)
+    return factors, grams, fit
+
+
+def _hals_iteration_impl(ws, factors, grams, norm_x_sq, *, impls):
     """One full HALS sweep (every mode, every column); returns the same
-    (factors, grams, fit) contract as the CP-ALS iteration body.  The column
-    loop is unrolled at trace time (R is static and small — paper uses 35).
-    """
-    factors = list(factors)
-    grams = list(grams)
+    (factors, grams, fit) contract as the CP-ALS iteration body."""
+    factors = tuple(factors)
+    grams = tuple(grams)
     order = len(factors)
-    rank = factors[0].shape[1]
-    m_last = None
+    fit = jnp.array(jnp.nan, dtype=factors[0].dtype)
     for n in range(order):
-        v = hadamard_grams(grams, n)
         m_mat = mttkrp(ws[n], factors, n, impl=impls[n])
-        a = factors[n]
-        for r in range(rank):
-            # M[:, r] - A V[:, r] + a_r V[r, r]  ==  M[:, r] - sum_{s != r} ...
-            resid = m_mat[:, r] - a @ v[:, r] + a[:, r] * v[r, r]
-            a = a.at[:, r].set(
-                jnp.maximum(resid / jnp.maximum(v[r, r], _HALS_EPS), 0.0))
-        factors[n] = a
-        grams[n] = gram(a)
-        m_last = m_mat
-    # <X, Xhat> falls out of the final mode's MTTKRP (SPLATT's inner-product
-    # trick) with unit lambda — the factors carry their own scale in HALS.
-    ones = jnp.ones((rank,), dtype=factors[0].dtype)
-    fit = kruskal_fit(norm_x_sq, ones, grams, m_last, factors[-1])
-    return tuple(factors), tuple(grams), fit
+        factors, grams, fit = _hals_mode_epilogue(
+            m_mat, factors, grams, norm_x_sq, mode=n,
+            with_fit=n == order - 1)
+    return factors, grams, fit
+
+
+@lru_cache(maxsize=None)
+def _hals_iteration_jit(donate: bool):
+    return jax.jit(_hals_iteration_impl, static_argnames=("impls",),
+                   donate_argnums=(1, 2) if donate else ())
+
+
+def _hals_iteration(ws, factors, grams, norm_x_sq, *, impls, donate=False):
+    return _hals_iteration_jit(bool(donate))(
+        ws, tuple(factors), tuple(grams), norm_x_sq, impls=impls)
 
 
 def cp_nn_hals(
@@ -133,19 +157,30 @@ def cp_nn_hals(
         fit, fit_prev = state.fit, state.fit
         start_iter = int(state.iteration)
 
+    donate = donate_buffers()
+    if donate and state is not None:
+        # first iteration donates the factor buffers; don't consume the
+        # caller's restored state in place
+        factors = tuple(jnp.array(a, copy=True) for a in factors)
+
     grams = tuple(gram(a) for a in factors)
 
     for it in range(start_iter, niters):
         t0 = time.perf_counter()
         factors, grams, fit = _hals_iteration(
-            ws, tuple(factors), grams, norm_x_sq, impls=impls)
+            ws, tuple(factors), grams, norm_x_sq, impls=impls,
+            # checkpoint_cb hands factor references out of the loop
+            donate=donate and checkpoint_cb is None)
         record_iteration(monitor, time.perf_counter() - t0)
+        # cast-then-subtract: one delta scalar drives both the printout and
+        # the tol stop (see cp_als — the two disagreed for bf16/f32 fits)
+        delta = float(fit) - float(fit_prev)
         if verbose:
             print(f"  its = {it + 1}  fit = {float(fit):.6f}  "
-                  f"delta = {float(fit - fit_prev):+.3e}")
+                  f"delta = {delta:+.3e}")
         if checkpoint_cb is not None:
             checkpoint_cb(make_state(factors, {}, fit, fit_prev, it + 1))
-        if tol > 0.0 and it > 0 and abs(float(fit) - float(fit_prev)) < tol:
+        if tol > 0.0 and it > 0 and abs(delta) < tol:
             fit_prev = fit
             break
         fit_prev = fit

@@ -42,6 +42,19 @@ from typing import Optional, Sequence, Union
 CALIBRATION_FORMAT_VERSION = 1
 
 
+def canonical_candidates(names: Sequence[str]) -> tuple[str, ...]:
+    """THE canonical ordering of a candidate impl set — sorted by name.
+
+    Every consumer of a candidate set (the calibration key here, the
+    planner's cost table, ``plan_report``'s costs column) goes through this
+    one helper, so the on-disk key, the in-memory ``ModePlan.costs`` dict
+    and the human-facing report all agree on one ordering.  Registry
+    *insertion* order is never part of any cache identity: re-ordering
+    registrations must not invalidate cached calibrations (only the
+    registry fingerprint — declared capabilities — may)."""
+    return tuple(sorted(names))
+
+
 def registry_fingerprint(kernel: str) -> str:
     """Digest of the kernel family's registry *as declared*: impl names plus
     every capability field of each :class:`ImplSpec`.  Any registry change
@@ -84,7 +97,7 @@ def calibration_key(
     that hash alike but were relabeled in memory."""
     h = hashlib.sha256()
     h.update(f"reg={registry_fingerprint(kernel)}|tensor={tensor_key}|"
-             f"mode={mode}|names={','.join(sorted(names))}|"
+             f"mode={mode}|names={','.join(canonical_candidates(names))}|"
              f"backend={backend}|rank={rank}|kernel={kernel}|"
              f"block={block}|row_tile={row_tile}|"
              f"stats={stats_digest}|".encode())

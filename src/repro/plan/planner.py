@@ -32,7 +32,24 @@ from repro.core.coo import SparseTensor
 from repro.core.csf import DEFAULT_BLOCK, DEFAULT_ROW_TILE, build_csf
 from repro.core.mttkrp import REGISTRY, available_impls, get_impl, mttkrp
 
+from .autotune import canonical_candidates
 from .stats import ModeStats, mode_stats, tensor_stats
+
+
+def _fits_lin_budget(t: SparseTensor, names, *, registry=None):
+    """Drop linearized-layout candidates when the tensor's dims exceed the
+    64-bit packed-index budget — the format simply does not apply there
+    (``core/linearized.check_bit_budget``); CSF/COO candidates remain."""
+    if any(get_impl(n, registry=registry).layout == "lin" for n in names):
+        from repro.core.linearized import check_bit_budget
+
+        try:
+            check_bit_budget(t.dims)
+        except ValueError:
+            names = tuple(
+                n for n in names
+                if get_impl(n, registry=registry).layout != "lin")
+    return names
 
 
 def _kernel_registry(kernel: str) -> dict:
@@ -120,7 +137,9 @@ def _layout_for(impl: str, *, registry: Optional[dict] = None) -> str:
     spec = get_impl(impl, registry=registry)
     # "any"-layout impls (gather_scatter) run straight off COO when they are
     # the only consumer of a mode, skipping that mode's sort entirely.
-    return "csf" if spec.layout == "csf" else "coo"
+    if spec.layout in ("csf", "lin"):
+        return spec.layout
+    return "coo"
 
 
 def _measure_ms(fn, *args, iters: int = 3) -> float:
@@ -170,6 +189,7 @@ def _calibrate_mode(t: SparseTensor, mode: int, names, *, rank: int,
         factors = init_factors(t.dims, rank, jax.random.PRNGKey(0),
                                dtype=t.vals.dtype)
     csf = None
+    lin = None
     measured = {}
     for name in names:
         spec = get_impl(name, registry=registry)
@@ -177,6 +197,12 @@ def _calibrate_mode(t: SparseTensor, mode: int, names, *, rank: int,
             if csf is None:
                 csf = build_csf(t, mode, block=block, row_tile=row_tile)
             ws = csf
+        elif spec.layout == "lin":
+            if lin is None:
+                from repro.core.linearized import build_linearized
+
+                lin = build_linearized(t, block=block, row_tile=row_tile)
+            ws = lin
         else:
             ws = t
         fn = jax.jit(functools.partial(kernel_fn, impl=name, mode=mode))
@@ -252,8 +278,10 @@ def plan_mode(t: SparseTensor, mode: int, *, rank,
             f"precomputed stats were measured for (block={stats.block}, "
             f"row_tile={stats.row_tile}), planner asked (block={block}, "
             f"row_tile={row_tile})")
-    names = available_impls(order=t.order, backend=backend, allow=allow,
-                            registry=registry)
+    names = canonical_candidates(
+        _fits_lin_budget(t, available_impls(order=t.order, backend=backend,
+                                            allow=allow, registry=registry),
+                         registry=registry))
     if not names:
         raise ValueError(
             f"no registered {kernel} impl covers order={t.order} on "

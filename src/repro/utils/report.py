@@ -26,10 +26,14 @@ def plan_report(plan, *, reorder_deltas=None, method=None) -> str:
     showing what the locality-aware reordering bought (negative collision /
     padding deltas are wins).
 
-    The "costs" column states where each mode's impl costs came from:
+    The "costs" column states where each mode's impl costs came from —
     ``predicted`` (cost models), ``measured-fresh`` (timed on this tensor,
     just now) or ``measured-cached`` (timed earlier, replayed from the
-    persistent autotune store).
+    persistent autotune store) — followed by the per-candidate cost table
+    in THE canonical candidate ordering
+    (:func:`repro.plan.autotune.canonical_candidates` — the same ordering
+    the calibration key hashes, so the printed table and the cached entry
+    can never disagree about which candidate set was scored).
 
     ``method``: the decomposition method executing the plan
     (``repro.methods``); the "method" column renders it together with the
@@ -56,10 +60,17 @@ def plan_report(plan, *, reorder_deltas=None, method=None) -> str:
                        f"pad {d['padding']:+.2f}")
         else:
             re_cell = "-"
+        costs_cell = getattr(p, "source", "predicted")
+        if p.costs:
+            from repro.plan.autotune import canonical_candidates
+
+            costs_cell += " " + " ".join(
+                f"{name}={p.costs[name]:.3g}"
+                for name in canonical_candidates(p.costs))
         rows.append(
             f"| {p.mode} | {m_cell} | {cells} | {re_cell} "
             f"| {p.layout} | **{p.impl}** "
-            f"| {getattr(p, 'source', 'predicted')} | {p.predicted_regime} "
+            f"| {costs_cell} | {p.predicted_regime} "
             f"| {p.reason} |")
     return "\n".join([head] + rows)
 

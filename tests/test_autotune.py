@@ -288,6 +288,47 @@ def test_cli_recalibrate_flag_implies_calibrate():
     assert rc == 0
 
 
+# ---------------------------------------------------------------------------
+# canonical candidate ordering — ONE helper feeds the key AND the report
+# ---------------------------------------------------------------------------
+
+def test_canonical_candidates_is_the_single_ordering():
+    """Regression for the double-bookkeeping bug: the calibration key and
+    plan_report's costs column must consume the SAME ordering helper, so a
+    registry re-ordering can never split the cache or desync the report."""
+    from repro.plan.autotune import canonical_candidates
+
+    names = ("segment", "gather_scatter", "dense", "linearized")
+    canon = canonical_candidates(names)
+    assert canon == tuple(sorted(names))
+    # any permutation / container maps to the one canonical tuple
+    assert canonical_candidates(tuple(reversed(names))) == canon
+    assert canonical_candidates(set(names)) == canon
+    # and the key consumes exactly that ordering
+    base = dict(mode=0, backend="cpu", rank=8, kernel="mttkrp",
+                block=512, row_tile=128, stats_digest="ab")
+    assert (calibration_key("t", names=names, **base)
+            == calibration_key("t", names=canon, **base))
+
+
+def test_plan_report_costs_follow_canonical_order():
+    """The costs column lists every candidate in canonical order — the same
+    order the calibration key hashes (``canonical_candidates``)."""
+    from repro.plan.autotune import canonical_candidates
+    from repro.utils.report import plan_report
+
+    t = small_tensor()
+    p = plan_decomposition(t, "auto", rank=8, backend="cpu")
+    rep = plan_report(p)
+    for m in p.modes:
+        assert m.costs, "auto plan must carry the per-candidate cost table"
+        assert tuple(sorted(m.costs)) == canonical_candidates(m.costs)
+        row = next(line for line in rep.splitlines()
+                   if line.startswith(f"| {m.mode} |"))
+        pos = [row.index(f" {name}=") for name in canonical_candidates(m.costs)]
+        assert pos == sorted(pos), "report order != canonical order"
+
+
 def test_plan_report_shows_cost_source(tmp_path):
     from repro.utils.report import plan_report
 

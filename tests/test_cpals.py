@@ -8,7 +8,7 @@ import pytest
 from repro.core import (
     random_sparse, from_factors, build_csf, build_csf_tiled,
     mttkrp, cp_als, init_factors, gram, hadamard_grams, solve_cholesky,
-    normalize, kruskal_fit,
+    solve_gram, normalize, kruskal_fit,
 )
 
 KEY = jax.random.PRNGKey(42)
@@ -66,6 +66,19 @@ def test_solve_cholesky_matches_lstsq():
     got = solve_cholesky(m, v)
     want = m @ jnp.linalg.inv(v)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-4)
+
+
+def test_solve_gram_matches_solve_cholesky():
+    """The fused epilogue's inverse-then-GEMM solve agrees with the
+    triangular-solve formulation on tall right-hand sides."""
+    k1, k2 = jax.random.split(KEY, 2)
+    a = jax.random.normal(k1, (60, 12))
+    v = a.T @ a + 0.1 * jnp.eye(12)
+    m = jax.random.normal(k2, (500, 12))
+    got = solve_gram(m, v)
+    want = solve_cholesky(m, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=1e-4)
 
 
 @pytest.mark.parametrize("kind", ["max", "2"])

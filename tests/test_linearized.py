@@ -1,0 +1,270 @@
+"""The ALTO-style linearized workspace (core/linearized.py): bit packing,
+the one-sort build, dense parity of both registered impls (jnp + Pallas
+in-kernel decode) across every mode at order 3 and 4, planner/calibration
+integration, workspace sharing, and the ingest-cache ride-along."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (SparseTensor, available_impls, build_workspace,
+                        cp_als, init_factors, mttkrp, random_sparse)
+from repro.core.linearized import (Linearized, bit_widths, build_linearized,
+                                   check_bit_budget, delinearize_coords,
+                                   field_offsets, linearize_coords)
+from repro.core.ttmc import available_ttmc_impls, ttmc
+from repro.plan import plan_decomposition
+
+KEY = jax.random.PRNGKey(11)
+
+
+def small_tensor(order=3, nnz=500, key=KEY):
+    dims = (23, 17, 31, 11)[:order]
+    return random_sparse(dims, nnz, key)
+
+
+# ---------------------------------------------------------------------------
+# packing layout
+# ---------------------------------------------------------------------------
+
+def test_bit_widths_and_offsets():
+    dims = (23, 17, 31)          # widths 5, 5, 5
+    assert bit_widths(dims) == (5, 5, 5)
+    assert bit_widths((1, 2, 1024)) == (1, 1, 10)
+    # sort mode owns the most-significant field; others ascend below it
+    assert field_offsets(dims, 0) == (10, 5, 0)
+    assert field_offsets(dims, 1) == (5, 10, 0)
+    assert field_offsets(dims, 2) == (5, 0, 10)
+
+
+def test_linearize_roundtrip_order_3_and_4():
+    for order in (3, 4):
+        t = small_tensor(order=order)
+        inds = np.asarray(t.inds[: t.nnz])
+        for sm in range(order):
+            lin = linearize_coords(inds, t.dims, sm)
+            back = delinearize_coords(lin, t.dims, sm)
+            np.testing.assert_array_equal(back, inds.astype(np.int64))
+
+
+def test_overflow_rejected_everywhere():
+    """Over-budget dims fail at check, at pack, and at build — with the
+    per-mode widths named in the error."""
+    dims = (2**40, 2**31, 4)
+    with pytest.raises(ValueError, match=r"73 packed bits \(40\+31\+2\)"):
+        check_bit_budget(dims)
+    t = SparseTensor(inds=jnp.zeros((3, 3), dtype=jnp.int32),
+                     vals=jnp.ones(3, dtype=jnp.float32), dims=dims, nnz=3)
+    with pytest.raises(ValueError, match="64-bit"):
+        build_linearized(t)
+    # a single >32-bit field is rejected too (the per-field decode budget)
+    with pytest.raises(ValueError, match="per-mode decode budget"):
+        check_bit_budget((2**33, 2, 2))
+
+
+# ---------------------------------------------------------------------------
+# the build: one sort, csf-style padding, lossless
+# ---------------------------------------------------------------------------
+
+def test_build_preserves_multiset_and_sort():
+    t = small_tensor(nnz=800)
+    lin = build_linearized(t, block=64, row_tile=16)
+    assert isinstance(lin, Linearized)
+    assert lin.padded_nnz % lin.block == 0
+    assert lin.num_blocks == lin.block_tile.shape[0]
+    # decoded entries with nonzero value == the original nonzero multiset
+    decoded = np.stack([np.asarray(lin.decode(m)) for m in range(3)], 1)
+    vals = np.asarray(lin.vals)
+    built = sorted((tuple(decoded[n]), float(vals[n]))
+                   for n in range(lin.padded_nnz) if vals[n] != 0.0)
+    orig = sorted((tuple(int(v) for v in np.asarray(t.inds)[n]),
+                   float(t.vals[n])) for n in range(t.nnz))
+    assert built == orig
+    # the stream is globally sorted by the sort mode's row (padding included)
+    rows = np.asarray(lin.decode(lin.sort_mode))
+    assert (np.diff(rows) >= 0).all()
+    # block_tile is non-decreasing and consistent with the rows it covers
+    bt = np.asarray(lin.block_tile)
+    assert (np.diff(bt) >= 0).all()
+    per_block = rows.reshape(lin.num_blocks, lin.block) // lin.row_tile
+    np.testing.assert_array_equal(per_block.min(1), bt)
+    np.testing.assert_array_equal(per_block.max(1), bt)
+
+
+def test_one_workspace_serves_every_mode():
+    """The format's whole point: ONE buffer, no per-mode re-sort — a single
+    build answers MTTKRP and TTMc on every mode."""
+    t = small_tensor(order=4)
+    lin = build_linearized(t)
+    factors = init_factors(t.dims, 5, KEY)
+    for mode in range(4):
+        want = mttkrp(t, factors, mode, impl="dense")
+        got = mttkrp(lin, factors, mode, impl="linearized")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# registry + dense parity (both impls, both kernels, order 3 and 4)
+# ---------------------------------------------------------------------------
+
+def test_linearized_registered_for_both_kernel_families():
+    for avail in (available_impls, available_ttmc_impls):
+        names = avail(order=4)  # backend=None -> includes pallas variants
+        assert "linearized" in names
+        assert "linearized_pallas" in names
+    # but not on an explicit cpu backend (pallas variant is tpu-only)
+    assert "linearized" in available_impls(order=3, backend="cpu")
+    assert "linearized_pallas" not in available_impls(order=3, backend="cpu")
+
+
+@pytest.mark.parametrize("order", [3, 4])
+@pytest.mark.parametrize("impl", ["linearized", "linearized_pallas"])
+def test_mttkrp_parity_all_modes(order, impl):
+    t = small_tensor(order=order)
+    lin = build_linearized(t, block=64, row_tile=16)
+    factors = init_factors(t.dims, 6, KEY)
+    for mode in range(order):
+        want = mttkrp(t, factors, mode, impl="dense")
+        got = mttkrp(lin, factors, mode, impl=impl)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4,
+            err_msg=f"impl={impl} mode={mode} order={order}")
+
+
+@pytest.mark.parametrize("order", [3, 4])
+@pytest.mark.parametrize("impl", ["linearized", "linearized_pallas"])
+def test_ttmc_parity_all_modes(order, impl):
+    t = small_tensor(order=order, nnz=300)
+    lin = build_linearized(t, block=64, row_tile=16)
+    keys = jax.random.split(KEY, order)
+    factors = tuple(jax.random.normal(k, (d, 3))
+                    for k, d in zip(keys, t.dims))
+    for mode in range(order):
+        want = ttmc(t, factors, mode, impl="dense")
+        got = ttmc(lin, factors, mode, impl=impl)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4,
+            err_msg=f"impl={impl} mode={mode} order={order}")
+
+
+def test_linearized_impls_reject_wrong_workspace():
+    t = small_tensor()
+    factors = init_factors(t.dims, 4, KEY)
+    with pytest.raises(TypeError, match="Linearized workspace"):
+        mttkrp(t, factors, 0, impl="linearized")
+    with pytest.raises(TypeError, match="Linearized workspace"):
+        ttmc(t, factors, 0, impl="linearized")
+
+
+# ---------------------------------------------------------------------------
+# planner integration: cost-modeled, budget-gated, calibratable
+# ---------------------------------------------------------------------------
+
+def test_auto_plan_scores_linearized():
+    t = small_tensor()
+    plan = plan_decomposition(t, "auto", rank=8, backend="cpu")
+    for p in plan.modes:
+        assert "linearized" in p.costs
+        assert np.isfinite(p.costs["linearized"])
+
+
+def test_fixed_linearized_plan_and_shared_workspace():
+    t = small_tensor()
+    plan = plan_decomposition(t, "linearized", rank=8)
+    assert all(p.layout == "lin" for p in plan.modes)
+    ws = build_workspace(t, plan)
+    assert all(isinstance(w, Linearized) for w in ws)
+    # ONE resident buffer: every mode gets the same object, not a copy
+    assert all(w is ws[0] for w in ws)
+
+
+def test_budget_gate_drops_lin_candidates():
+    from repro.plan.planner import _fits_lin_budget
+
+    names = available_impls(order=3)
+    assert "linearized" in names
+    huge = SparseTensor(inds=jnp.zeros((3, 3), dtype=jnp.int32),
+                        vals=jnp.ones(3, dtype=jnp.float32),
+                        dims=(2**40, 2**31, 4), nnz=3)
+    kept = _fits_lin_budget(huge, names)
+    assert "linearized" not in kept and "linearized_pallas" not in kept
+    assert set(kept) == {n for n in names if "linearized" not in n}
+    # an in-budget tensor keeps the full candidate set
+    assert _fits_lin_budget(small_tensor(), names) == names
+
+
+def test_calibration_times_linearized():
+    t = small_tensor()
+    plan = plan_decomposition(
+        t, "auto", rank=6, backend="cpu", calibrate=True,
+        allow=("segment", "gather_scatter", "linearized"))
+    for p in plan.modes:
+        assert p.source == "measured-fresh"
+        assert set(p.costs) == {"segment", "gather_scatter", "linearized"}
+        assert all(c > 0 for c in p.costs.values())
+
+
+# ---------------------------------------------------------------------------
+# end to end + ingest cache ride-along
+# ---------------------------------------------------------------------------
+
+def test_cp_als_on_linearized_matches_reference():
+    t = small_tensor(nnz=700)
+    key = jax.random.PRNGKey(0)
+    ref = cp_als(t, rank=6, niters=8, impl="gather_scatter", key=key)
+    got = cp_als(t, rank=6, niters=8, impl="linearized", key=key)
+    np.testing.assert_allclose(float(got.fit), float(ref.fit), atol=2e-4)
+
+
+def test_ingest_cache_roundtrips_linearized(tmp_path, monkeypatch):
+    from repro.core import linearized as lin_mod
+    from repro.ingest import ingest
+
+    t = small_tensor()
+    ing = ingest(t, cache=tmp_path)
+    assert not ing.cache_hit
+    cold = ing.lin()
+    assert isinstance(cold, Linearized)
+
+    # warm hit: the linearized workspace comes back from the cache with
+    # ZERO builds (the module attribute is the monkeypatch seam)
+    def boom(*a, **k):
+        raise AssertionError("warm cache hit must not rebuild linearized")
+
+    monkeypatch.setattr(lin_mod, "build_linearized", boom)
+    ing2 = ingest(t, cache=tmp_path)
+    assert ing2.cache_hit
+    warm = ing2.lin()
+    assert isinstance(warm, Linearized)
+    np.testing.assert_array_equal(np.asarray(warm.hi), np.asarray(cold.hi))
+    np.testing.assert_array_equal(np.asarray(warm.lo), np.asarray(cold.lo))
+    np.testing.assert_array_equal(np.asarray(warm.vals),
+                                  np.asarray(cold.vals))
+    np.testing.assert_array_equal(np.asarray(warm.block_tile),
+                                  np.asarray(cold.block_tile))
+    assert (warm.dims, warm.nnz, warm.block, warm.row_tile, warm.sort_mode) \
+        == (cold.dims, cold.nnz, cold.block, cold.row_tile, cold.sort_mode)
+    # and a lin-layout plan's workspace comes straight off the handle
+    plan = plan_decomposition(t, "linearized", rank=4,
+                              block=ing2.block, row_tile=ing2.row_tile)
+    ws = ing2.workspace(plan)
+    assert all(w is warm for w in ws)
+
+
+def test_ingest_skips_linearized_when_over_budget(tmp_path):
+    """A tensor over the packed-bit budget still ingests (CSF path) — the
+    linearized ride-along is simply absent, never an error."""
+    from repro.ingest import ingest
+
+    # 22+22+22 = 66 packed bits: over budget, but each mode stays small
+    # enough for the CSF build and the stats pass to run normally
+    huge = SparseTensor(
+        inds=jnp.asarray(np.array([[0, 1, 0], [1, 0, 1], [2, 2, 2]],
+                                  dtype=np.int32)),
+        vals=jnp.ones(3, dtype=jnp.float32),
+        dims=(2**22, 2**22, 2**22), nnz=3)
+    ing = ingest(huge, cache=tmp_path)
+    assert ing._lin is None
+    with pytest.raises(ValueError, match="64-bit"):
+        ing.lin()

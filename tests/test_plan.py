@@ -119,18 +119,23 @@ def test_plan_report_renders_modes():
 
 @pytest.mark.parametrize("order", [3, 4])
 def test_registered_impls_match_dense_on_unified_workspace(order):
-    """All registered (non-oracle) impls consume the same CSF workspace and
+    """All registered (non-oracle) impls consume the same CSF workspace —
+    or the one shared linearized workspace for lin-layout impls — and
     agree with the dense oracle, at order 3 and 4."""
+    from repro.core.linearized import build_linearized
+
     dims = (23, 17, 31, 11)[:order]
     t = random_sparse(dims, 400, KEY)
     factors = init_factors(t.dims, 6, KEY)
     names = available_impls(order=order)  # backend=None: includes pallas
-    assert set(names) >= {"gather_scatter", "segment", "pallas"}
+    assert set(names) >= {"gather_scatter", "segment", "pallas", "linearized"}
+    lin = build_linearized(t, block=64, row_tile=32)
     for mode in range(order):
         want = mttkrp(t, factors, mode, impl="dense")
         ws = build_csf(t, mode, block=64, row_tile=32)
         for name in names:
-            x = ws if get_impl(name).layout != "coo" else t
+            layout = get_impl(name).layout
+            x = lin if layout == "lin" else (ws if layout != "coo" else t)
             got = mttkrp(x, factors, mode, impl=name)
             np.testing.assert_allclose(
                 np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4,

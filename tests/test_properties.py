@@ -161,6 +161,65 @@ def test_pallas_mttkrp_property(t, rank):
                                rtol=5e-4, atol=5e-4)
 
 
+@st.composite
+def packable_dims(draw, order):
+    """Random dims whose packed widths fit the 64-bit linearized budget,
+    biased toward powers of two so some dim EXACTLY fills its bit field
+    (dim 2**k needs k bits and value dim-1 sets every one of them)."""
+    from repro.core.linearized import PACK_BITS
+
+    dims = []
+    remaining = PACK_BITS
+    for m in range(order):
+        # leave >=1 bit for every mode still to draw
+        cap = min(10, remaining - (order - 1 - m))
+        width = draw(st.integers(1, max(1, cap)))
+        exact = draw(st.booleans())
+        dims.append(2 ** width if exact else draw(st.integers(
+            max(2, 2 ** (width - 1) + 1), 2 ** width)))
+        remaining -= width
+    return tuple(dims)
+
+
+@settings(**SET)
+@given(st.integers(3, 4), st.data())
+def test_linearize_roundtrip_bit_exact(order, data):
+    """linearize -> delinearize is bit-exact for any in-budget dims and any
+    coordinates — including dims that exactly fill their bit field — at
+    order 3 and 4, for every sort mode."""
+    from repro.core.linearized import (delinearize_coords, field_offsets,
+                                       linearize_coords)
+
+    dims = data.draw(packable_dims(order))
+    sort_mode = data.draw(st.integers(0, order - 1))
+    nnz = data.draw(st.integers(1, 64))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**31 - 1)))
+    # hit the field extremes (0 and dim-1) as well as uniform draws
+    inds = np.stack([rng.integers(0, d, nnz) for d in dims], 1)
+    inds[0] = [d - 1 for d in dims]
+    inds[-1] = 0
+    lin = linearize_coords(inds, dims, sort_mode=sort_mode)
+    back = delinearize_coords(lin, dims, sort_mode=sort_mode)
+    np.testing.assert_array_equal(back, inds.astype(np.int64))
+    # the packed stream sorts by the sort mode's coordinate (msb field)
+    order_by_lin = np.argsort(lin, kind="stable")
+    assert (np.diff(inds[order_by_lin, sort_mode]) >= 0).all()
+    offsets = field_offsets(dims, sort_mode=sort_mode)
+    assert offsets[sort_mode] == max(offsets)
+
+
+def test_linearize_rejects_over_budget_dims():
+    """Dims needing more than 64 packed bits are rejected up front with an
+    error naming the per-mode widths — never silently truncated."""
+    from repro.core.linearized import check_bit_budget, linearize_coords
+
+    dims = (2**40, 2**31, 4)
+    with pytest.raises(ValueError, match="64-bit"):
+        check_bit_budget(dims)
+    with pytest.raises(ValueError, match="64-bit"):
+        linearize_coords(np.zeros((3, 3), dtype=np.int64), dims)
+
+
 @settings(**SET)
 @given(
     st.dictionaries(

@@ -74,6 +74,25 @@ def test_extract_metrics_drops_nonfinite_and_nonpositive():
     assert all(math.isfinite(v) for v in m.values())
 
 
+def test_cpals_epilogue_metric_is_registered():
+    """The fused-epilogue win is ratcheted: a cpals summary carrying an
+    ``epilogue_s`` subtotal must yield a ``{cell}.epilogue_s`` metric via
+    the SECTIONS table (so ``make ratchet`` guards it automatically)."""
+    s = cpals_summary()
+    s["cells"]["yelp/auto"]["epilogue_s"] = 0.25
+    s["cells"]["yelp/segment+fused"] = {
+        "nnz": 1000, "fit": 0.9,
+        "routines_s": {"mttkrp": 0.4, "epilogue": 0.1},
+        "epilogue_s": 0.1, "total_s": 0.9}
+    m = H.extract_metrics("cpals", s)
+    assert m["yelp/auto.epilogue_s"] == pytest.approx(0.25)
+    assert m["yelp/segment+fused.epilogue_s"] == pytest.approx(0.1)
+    assert m["yelp/segment+fused.total_s"] == pytest.approx(0.9)
+    # cells without the subtotal (older records) simply lack the metric
+    assert "yelp/auto.epilogue_s" not in H.extract_metrics(
+        "cpals", cpals_summary())
+
+
 def test_compare_metrics_flags_only_beyond_tolerance():
     base = {"a.total_s": 1.0, "b.total_s": 2.0, "only_base": 1.0}
     new = {"a.total_s": 1.09, "b.total_s": 2.5, "only_new": 9.9}
