@@ -33,6 +33,11 @@ bench-api:
 bench-serve:
 	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.bench_serve --json BENCH_serve.json
 
+# tracing overhead gates (disabled < 1%, enabled < 5%) — exits non-zero on
+# a gate failure; the CI test job runs exactly this target.
+bench-obs:
+	PYTHONPATH=$(PYTHONPATH) $(PY) -m benchmarks.bench_obs --json BENCH_obs.json
+
 # quick per-routine CP-ALS breakdown on the scaled paper tensors — covers
 # every registered workspace impl (incl. linearized) x fused epilogue; the
 # CI quick-bench job runs exactly this target.
@@ -52,7 +57,7 @@ anchor:
 # (syntax + tabs/indentation errors) and import the package graph.
 lint:
 	$(PY) -m compileall -q src tests benchmarks examples
-	PYTHONPATH=$(PYTHONPATH) $(PY) -c "import repro.api, repro.api.cli, repro.core, repro.dist, repro.ingest, repro.plan, repro.methods, repro.kernels, repro.launch.mesh, repro.launch.steps, repro.models, repro.optim, repro.checkpoint, repro.data, repro.utils.roofline, repro.configs"
+	PYTHONPATH=$(PYTHONPATH) $(PY) -c "import repro.api, repro.api.cli, repro.core, repro.dist, repro.ingest, repro.plan, repro.methods, repro.kernels, repro.launch.mesh, repro.launch.steps, repro.models, repro.obs, repro.obs.report, repro.optim, repro.checkpoint, repro.data, repro.utils.roofline, repro.configs"
 
 quickstart:
 	PYTHONPATH=$(PYTHONPATH) $(PY) examples/quickstart.py

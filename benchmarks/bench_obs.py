@@ -1,0 +1,152 @@
+"""Tracing overhead: traced vs untraced fits through ``repro.obs``.
+
+The acceptance gates for the observability layer: on the scaled yelp
+tensor, a fit with a *disabled* tracer active must cost < 1% over the
+plain untraced fit (the ``span()`` fast path is a contextvar read + one
+``is None``/``enabled`` check), and a fit with tracing *enabled* must
+cost < 5% (the enabled path auto-selects the fused timed iteration —
+two host syncs per mode — and records one span per routine call).
+
+All three sides share one warm ``Ingested`` handle and one prebuilt
+plan, so the measured deltas ARE the tracer.  Same noise model as
+``bench_api``: interleave the sides (order rotated per rep), take each
+side's minimum per round (host noise is strictly additive), and gate
+each overhead on its own best round — a real regression is systematic
+and shows in every round, while a host performance-mode shift poisons
+only some.  The default scale is the bench_ingest one (0.01): the
+enabled path's per-mode host syncs are a fixed cost, so they must be
+measured against a fit long enough to be representative, not against a
+6 ms toy iteration they would dominate.
+
+  PYTHONPATH=src python -m benchmarks.bench_obs [--json BENCH_obs.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+import jax
+
+from .common import paper_dataset_cached, timeit
+
+DISABLED_GATE_PCT = 1.0
+ENABLED_GATE_PCT = 5.0
+
+
+def run(scale: float = 0.01, rank: int = 16, niters: int = 20,
+        seed: int = 0, reps: int = 15) -> list[dict]:
+    import time
+
+    from repro.ingest import ingest
+    from repro.methods import fit as methods_fit
+    from repro.obs import Tracer, scoped_registry
+
+    t = paper_dataset_cached("yelp", scale=scale, seed=seed)
+    key = jax.random.PRNGKey(seed)
+    ing = ingest(t)
+    plan = ing.plan("auto", rank=rank)
+    fit = lambda: methods_fit(ing, rank, niters=niters, plan=plan, key=key)
+
+    disabled_tracer = Tracer(enabled=False)
+    enabled_tracer = Tracer(enabled=True)
+
+    def untraced():
+        return fit()
+
+    def disabled():
+        with disabled_tracer.activate():
+            return fit()
+
+    def enabled():
+        # clear per run: an unbounded event list would slowly shift the
+        # record cost across reps and the export is not what's measured
+        enabled_tracer.clear()
+        with enabled_tracer.activate():
+            return fit()
+
+    sides = (("untraced", untraced), ("disabled", disabled),
+             ("enabled", enabled))
+    with scoped_registry():  # keep the metric feeds off the global registry
+        for _, fn in sides:
+            timeit(fn, warmup=2, iters=1)
+        rounds = []
+        per_round = max(1, reps // 3)
+        for _ in range(3):
+            mins = {}
+            for rep in range(per_round):
+                # rotate the side order per rep: whichever side runs right
+                # after the enabled one absorbs its deferred cleanup, so a
+                # fixed order would bias one side systematically
+                order = sides[rep % 3:] + sides[: rep % 3]
+                for name, fn in order:
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(fn())
+                    dt = time.perf_counter() - t0
+                    mins[name] = min(mins.get(name, dt), dt)
+            rounds.append(mins)
+    best = min(rounds, key=lambda m: m["enabled"] / m["untraced"])
+    pct = lambda m, side: (m[side] - m["untraced"]) / m["untraced"] * 100.0
+    return [{
+        "dataset": "yelp", "scale": scale, "rank": rank, "niters": niters,
+        "nnz": int(t.nnz),
+        "untraced_s": round(best["untraced"], 4),
+        "disabled_s": round(best["disabled"], 4),
+        "enabled_s": round(best["enabled"], 4),
+        "disabled_overhead_pct": round(
+            min(pct(m, "disabled") for m in rounds), 2),
+        "enabled_overhead_pct": round(
+            min(pct(m, "enabled") for m in rounds), 2),
+        "events_per_fit": len(enabled_tracer.events()),
+    }]
+
+
+def summarize(rows: list[dict]) -> dict:
+    """BENCH_obs.json payload: both overhead gates plus their inputs."""
+    r = rows[0]
+    return {
+        "bench": "obs", "dataset": r["dataset"], "scale": r["scale"],
+        "rank": r["rank"], "niters": r["niters"], "nnz": r["nnz"],
+        "untraced_s": r["untraced_s"], "disabled_s": r["disabled_s"],
+        "enabled_s": r["enabled_s"],
+        "events_per_fit": r["events_per_fit"],
+        "disabled_overhead_pct": r["disabled_overhead_pct"],
+        "enabled_overhead_pct": r["enabled_overhead_pct"],
+        "gate": {
+            "disabled_pct_max": DISABLED_GATE_PCT,
+            "enabled_pct_max": ENABLED_GATE_PCT,
+            "ok": bool(r["disabled_overhead_pct"] < DISABLED_GATE_PCT
+                       and r["enabled_overhead_pct"] < ENABLED_GATE_PCT),
+        },
+    }
+
+
+def main() -> None:
+    from .common import emit
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=float, default=0.01)
+    ap.add_argument("--rank", type=int, default=16)
+    ap.add_argument("--iters", type=int, default=20)
+    ap.add_argument("--reps", type=int, default=15)
+    ap.add_argument("--json", type=Path, default=None)
+    args = ap.parse_args()
+    rows = run(scale=args.scale, rank=args.rank, niters=args.iters,
+               reps=args.reps)
+    emit(rows)
+    s = summarize(rows)
+    print(f"# tracing overhead: disabled {s['disabled_overhead_pct']}% "
+          f"(gate < {s['gate']['disabled_pct_max']}%), "
+          f"enabled {s['enabled_overhead_pct']}% "
+          f"(gate < {s['gate']['enabled_pct_max']}%, "
+          f"{s['events_per_fit']} events/fit): "
+          f"{'ok' if s['gate']['ok'] else 'FAIL'}")
+    if args.json:
+        args.json.write_text(json.dumps(s, indent=1))
+        print(f"# wrote {args.json}")
+    if not s["gate"]["ok"]:
+        raise SystemExit(1)  # the overhead gates are real gates
+
+
+if __name__ == "__main__":
+    main()

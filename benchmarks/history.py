@@ -169,6 +169,15 @@ def _metrics_api(s: dict) -> dict:
     return {"direct_s": s.get("direct_s"), "session_s": s.get("session_s")}
 
 
+def _metrics_obs(s: dict) -> dict:
+    # absolute traced/untraced fit times: catches both a tracer slowdown
+    # and a fit slowdown the overhead ratio would hide (both sides moving
+    # together).  The overhead *gates* live in bench_obs itself.
+    return {"untraced_s": s.get("untraced_s"),
+            "disabled_s": s.get("disabled_s"),
+            "enabled_s": s.get("enabled_s")}
+
+
 def _metrics_serve(s: dict) -> dict:
     return {"serve_s": s.get("serve_s"),
             "latency_ms_per_batch": s.get("latency_ms_per_batch")}
@@ -195,6 +204,7 @@ SECTIONS: dict[str, Section] = {s.name: s for s in (
     Section("methods", _metrics_methods),
     Section("api", _metrics_api),
     Section("serve", _metrics_serve),
+    Section("obs", _metrics_obs),
 )}
 
 

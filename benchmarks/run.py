@@ -18,7 +18,7 @@ import time
 from pathlib import Path
 
 from . import (bench_api, bench_conflict, bench_cpals_routines, bench_ingest,
-               bench_methods, bench_mttkrp_variants, bench_plan,
+               bench_methods, bench_mttkrp_variants, bench_obs, bench_plan,
                bench_scaling, bench_serve, bench_sort_build)
 from .common import emit
 from .history import HISTORY_DIR, SECTIONS, append_record
@@ -100,6 +100,11 @@ def main() -> None:
     emit(serve_rows)
     finish("serve", serve_rows)
     print()
+    print("# bench_obs (tracing overhead: traced vs untraced fit)")
+    obs_rows = bench_obs.run(reps=9 if q else 15)
+    emit(obs_rows)
+    finish("obs", obs_rows)
+    print()
     if not args.skip_scaling:
         print("# bench_scaling (paper Figs 9/10 analogue: host devices)")
         emit(bench_scaling.run())
@@ -114,6 +119,7 @@ _SUMMARIZERS = {
     "methods": bench_methods.summarize,
     "api": bench_api.summarize,
     "serve": bench_serve.summarize,
+    "obs": bench_obs.summarize,
 }
 assert set(_SUMMARIZERS) == set(SECTIONS), \
     "benchmarks.history.SECTIONS and run.py summarizers drifted apart"

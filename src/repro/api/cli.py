@@ -7,6 +7,8 @@
     python -m repro fit     --config run.json [--dryrun]
     python -m repro serve   --dataset yelp --scale 0.002 --queries 2048
     python -m repro dryrun  --workload cpals-yelp --mesh single
+    python -m repro fit     --dataset yelp --trace-dir artifacts/trace
+    python -m repro trace   artifacts/trace   # Table-III-style breakdown
 
 Every subcommand builds one RunConfig (``--config file.json`` loads a base;
 explicit flags override it field by field) and drives a
@@ -120,6 +122,15 @@ def _add_config_args(p: argparse.ArgumentParser) -> None:
     g.add_argument("--monitor", action="store_true", default=None)
     g.add_argument("--n-chunks", type=int, default=None)
     g.add_argument("--chunk-nnz", type=int, default=None)
+    g = p.add_argument_group("obs")
+    g.add_argument("--trace-dir", default=None, metavar="DIR",
+                   help="record a span trace + metrics there "
+                        "(implies obs.enabled; read back with "
+                        "`python -m repro trace DIR`)")
+    g.add_argument("--trace-split", action="store_true", default=None,
+                   help="trace the paper's full Table-III routine set "
+                        "(ata/inverse/norm/fit) instead of the low-overhead "
+                        "fused sort/mttkrp/epilogue split")
 
 
 def config_from_args(args: argparse.Namespace) -> RunConfig:
@@ -141,7 +152,7 @@ def config_from_args(args: argparse.Namespace) -> RunConfig:
                 f"{type(base).__name__}")
     else:
         base = {}
-    for section in ("data", "plan", "method", "exec"):
+    for section in ("data", "plan", "method", "exec", "obs"):
         base.setdefault(section, {})
         if not isinstance(base[section], dict):
             # catch before flag overlay: put() below would TypeError on it
@@ -193,6 +204,12 @@ def config_from_args(args: argparse.Namespace) -> RunConfig:
     put("exec", "monitor", args.monitor)
     put("exec", "n_chunks", args.n_chunks)
     put("exec", "chunk_nnz", args.chunk_nnz)
+    if getattr(args, "trace_dir", None):
+        base["obs"]["enabled"] = True
+        base["obs"]["trace_dir"] = args.trace_dir
+    if getattr(args, "trace_split", None):
+        base["obs"]["enabled"] = True
+        base["obs"]["routines"] = "split"
     return RunConfig.from_dict(base)
 
 
@@ -244,6 +261,9 @@ def cmd_fit(args) -> int:
     dec = sess.fit()
     jax.block_until_ready(dec.fit)
     print(f"fit={float(dec.fit):.6f} wall={time.time() - t0:.2f}s")
+    if cfg.obs.trace_dir:
+        print(f"# trace written to {cfg.obs.trace_dir} "
+              f"(python -m repro trace {cfg.obs.trace_dir})")
     if args.out:
         _save_factors(args.out, dec)
         print(f"# wrote {args.out}")
@@ -278,8 +298,23 @@ def cmd_serve(args) -> int:
     t_fit = time.time() - t0
     bench = handle.benchmark(queries=args.queries, batch=args.batch,
                              seed=cfg.method.seed)
+    lat = bench["latency_ms"]
     print(f"fit={handle.fit:.4f} decompose={t_fit:.2f}s "
-          f"serve={bench['serve_s']:.2f}s ({bench['qps']:,.0f} vals/s)")
+          f"serve={bench['serve_s']:.2f}s ({bench['qps']:,.0f} vals/s, "
+          f"p50 {lat['p50']:.2f}ms p99 {lat['p99']:.2f}ms)")
+    sess.export_obs()  # serve spans + latency histogram join the trace
+    return 0
+
+
+def cmd_trace(args) -> int:
+    """Table-III-style per-routine breakdown of a recorded trace dir."""
+    from repro.obs.report import trace_report
+
+    try:
+        print(trace_report(args.dir, with_metrics=not args.no_metrics))
+    except FileNotFoundError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
     return 0
 
 
@@ -327,6 +362,15 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             p.add_argument("--queries", type=int, default=2048)
             p.add_argument("--batch", type=int, default=256)
         p.set_defaults(fn=fn)
+
+    p = sub.add_parser(
+        "trace",
+        help="print the Table-III-style per-routine breakdown of a "
+             "recorded trace dir (see fit --trace-dir)")
+    p.add_argument("dir", help="directory holding trace.jsonl/metrics.json")
+    p.add_argument("--no-metrics", action="store_true",
+                   help="skip the metrics dump, print the routine table only")
+    p.set_defaults(fn=cmd_trace)
 
     p = sub.add_parser("dryrun",
                        help="compile-matrix dry-run (repro.launch.dryrun)")

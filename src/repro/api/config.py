@@ -1,6 +1,6 @@
 """Declarative run configuration — the one parameter surface for the stack.
 
-A decomposition run is four frozen dataclasses composed into a
+A decomposition run is five frozen dataclasses composed into a
 :class:`RunConfig`:
 
     RunConfig(
@@ -9,6 +9,7 @@ A decomposition run is four frozen dataclasses composed into a
         plan=PlanConfig(policy="auto"),
         method=MethodConfig(name="cp_als", rank=35, niters=20),
         exec=ExecConfig(executor="local"),
+        obs=ObsConfig(enabled=True, trace_dir="artifacts/trace"),
     )
 
 Every field is validated at construction; a bad value raises
@@ -50,7 +51,7 @@ def _require(cond: bool, section: str, field: str, msg: str) -> None:
 
 
 # ---------------------------------------------------------------------------
-# the four sections
+# the five sections
 # ---------------------------------------------------------------------------
 
 
@@ -288,6 +289,43 @@ class ExecConfig:
                  f"must be >= 1, got {self.checkpoint_every}")
 
 
+@dataclasses.dataclass(frozen=True)
+class ObsConfig:
+    """Observability (``repro.obs``): structured tracing + metrics.
+
+    ``enabled`` turns span recording on — the fit drivers then take their
+    per-routine timed path so spans carry honest durations.  ``trace_dir``
+    makes the Session export ``trace.jsonl`` (Chrome-trace/Perfetto JSONL;
+    read it back with ``python -m repro trace <dir>``) and ``metrics.json``
+    there after fit/serve.  ``sample_rate`` keeps that fraction of root
+    spans (deterministic stride).  ``routines`` picks the traced routine
+    set: ``"fused"`` (sort/mttkrp/epilogue — two syncs per mode, the
+    low-overhead default) or ``"split"`` (the paper's full Table III:
+    ata/inverse/norm/fit, one sync per routine).  ``xla_annotations``
+    mirrors spans into ``jax.profiler.TraceAnnotation`` so they show up
+    inside XLA profiles."""
+
+    _section = "obs"
+
+    enabled: bool = False
+    trace_dir: Optional[str] = None
+    sample_rate: float = 1.0
+    routines: str = "fused"
+    xla_annotations: bool = True
+
+    def __post_init__(self):
+        s = self._section
+        _require(0.0 < self.sample_rate <= 1.0, s, "sample_rate",
+                 f"must be in (0, 1], got {self.sample_rate}")
+        _require(self.routines in ("fused", "split"), s, "routines",
+                 f"must be 'fused' or 'split', got {self.routines!r}"
+                 + _suggest(self.routines, ("fused", "split")))
+        _require(self.trace_dir is None or self.enabled, s, "trace_dir",
+                 "set obs.enabled=true to record a trace "
+                 "(a trace_dir with tracing off would silently write "
+                 "nothing)")
+
+
 # ---------------------------------------------------------------------------
 # composition + (de)serialization
 # ---------------------------------------------------------------------------
@@ -301,6 +339,7 @@ class RunConfig:
     plan: PlanConfig = dataclasses.field(default_factory=PlanConfig)
     method: MethodConfig = dataclasses.field(default_factory=MethodConfig)
     exec: ExecConfig = dataclasses.field(default_factory=ExecConfig)
+    obs: ObsConfig = dataclasses.field(default_factory=ObsConfig)
 
     def __post_init__(self):
         # the (method, executor) capability gate lives in exactly one place
@@ -353,7 +392,8 @@ class RunConfig:
 
 
 _SECTIONS = {"data": DataConfig, "plan": PlanConfig,
-             "method": MethodConfig, "exec": ExecConfig}
+             "method": MethodConfig, "exec": ExecConfig,
+             "obs": ObsConfig}
 
 
 def _build_section(cls, d: Any, *, path: str):

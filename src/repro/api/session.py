@@ -20,11 +20,20 @@ resumes from the latest complete step — kill-safe long decompositions.
 """
 from __future__ import annotations
 
+from contextlib import contextmanager
+
 import jax
 import jax.numpy as jnp
 
+from repro.obs.metrics import get_registry
+
 from .config import RunConfig
 from .executor import get_executor, require_capability
+
+# per-batch latency sampling in ServeHandle.benchmark: enough batches for
+# stable p50/p99, few enough that the sync-per-batch probe stays cheap next
+# to the async throughput loop it must not perturb
+_LATENCY_SAMPLE_BATCHES = 64
 
 
 class ServeHandle:
@@ -33,24 +42,43 @@ class ServeHandle:
     ``query(coords)`` takes an (n, order) int32 coordinate batch in the
     tensor's ORIGINAL label space (the session's ingest restored factor
     labels) and returns the reconstructed values; the underlying
-    ``values_at`` is jitted once per coordinate-batch shape."""
+    ``values_at`` is jitted once per coordinate-batch shape.
 
-    def __init__(self, decomp, dims: tuple[int, ...]):
+    ``tracer``: an optional :class:`repro.obs.Tracer`; queries then record
+    ``serve.query`` spans (the Session passes its own when obs is on)."""
+
+    def __init__(self, decomp, dims: tuple[int, ...], tracer=None):
         self.decomp = decomp
         self.dims = dims
         self._qfn = jax.jit(decomp.values_at)
+        self._tracer = tracer
 
     def query(self, coords) -> jax.Array:
-        return self._qfn(jnp.asarray(coords, dtype=jnp.int32))
+        coords = jnp.asarray(coords, dtype=jnp.int32)
+        if self._tracer is not None:
+            with self._tracer.span("serve.query",
+                                   batch=int(coords.shape[0])):
+                return self._qfn(coords)
+        return self._qfn(coords)
 
     def benchmark(self, *, queries: int, batch: int, seed: int = 0) -> dict:
         """Timed random-coordinate query loop (the serving benchmark the
         CLI and ``launch/serve.py`` both report): uniform coordinates over
         the handle's dims, one warmup/compile batch, then ``queries``
-        reconstructions in ``batch``-sized calls."""
+        reconstructions in ``batch``-sized calls.
+
+        Throughput (``serve_s``/``qps``) comes from the async pipelined
+        loop — one device sync at the end, queries overlap.  Per-query
+        latency is a *separate* smaller probe with a sync per batch (an
+        async loop has no per-batch latency to report), summarized as a
+        histogram: the ``latency_ms`` dict carries mean/p50/p90/p99 and
+        the observations feed the ``serve.query_ms`` histogram in the
+        metrics registry."""
         import time
 
         import numpy as np
+
+        from repro.obs.metrics import Histogram
 
         rng = np.random.default_rng(seed)
         n_batches = max(1, queries // batch)
@@ -64,8 +92,18 @@ class ServeHandle:
             out = self.query(coords[b])
         jax.block_until_ready(out)
         serve_s = time.time() - t0
+
+        hist = Histogram()
+        registry_hist = get_registry().histogram("serve.query_ms")
+        for b in range(min(n_batches, _LATENCY_SAMPLE_BATCHES)):
+            t1 = time.perf_counter()
+            jax.block_until_ready(self.query(coords[b]))
+            dt_ms = (time.perf_counter() - t1) * 1e3
+            hist.observe(dt_ms)
+            registry_hist.observe(dt_ms)
         return {"serve_s": serve_s, "queries": n_batches * batch,
-                "qps": n_batches * batch / max(serve_s, 1e-9)}
+                "qps": n_batches * batch / max(serve_s, 1e-9),
+                "latency_ms": hist.summary()}
 
     @property
     def fit(self) -> float:
@@ -92,6 +130,7 @@ class Session:
                 "to pass an in-memory tensor")
         self.cfg = cfg
         self._tensor = tensor
+        self._tracer = None
         self._ing = None
         self._plan = None
         self._plan_done = False
@@ -107,6 +146,48 @@ class Session:
     @classmethod
     def from_config(cls, cfg: RunConfig, tensor=None) -> "Session":
         return cls(cfg, tensor=tensor)
+
+    # -- observability -----------------------------------------------------
+    def tracer(self):
+        """The session's one :class:`repro.obs.Tracer` (lazy; None with
+        ``obs.enabled=false``) — every stage runs with it active, so spans
+        from ingest/plan/fit/serve all land in one trace."""
+        if self._tracer is None and self.cfg.obs.enabled:
+            from repro.obs import Tracer
+
+            o = self.cfg.obs
+            self._tracer = Tracer(sample_rate=o.sample_rate,
+                                  routines=o.routines,
+                                  xla_annotations=o.xla_annotations)
+        return self._tracer
+
+    @contextmanager
+    def _stage(self, name: str):
+        """Activate the session tracer and open a ``stage.<name>`` span
+        around one pipeline stage (a no-op when obs is disabled — zero
+        tracer traffic)."""
+        tracer = self.tracer()
+        if tracer is None:
+            yield
+            return
+        with tracer.activate(), tracer.span(f"stage.{name}"):
+            yield
+
+    def export_obs(self):
+        """Write ``trace.jsonl`` + ``metrics.json`` under ``obs.trace_dir``
+        (called after fit and after serve benchmarks; returns the trace
+        path, or None when no trace dir is configured)."""
+        tracer = self.tracer()
+        if tracer is None or not self.cfg.obs.trace_dir:
+            return None
+        from pathlib import Path
+
+        from repro.obs.trace import METRICS_FILENAME, TRACE_FILENAME
+
+        d = Path(self.cfg.obs.trace_dir)
+        path = tracer.export_jsonl(d / TRACE_FILENAME)
+        (d / METRICS_FILENAME).write_text(get_registry().to_json())
+        return path
 
     # -- stage 1: ingest ---------------------------------------------------
     def load_tensor(self):
@@ -144,9 +225,10 @@ class Session:
             d = self.cfg.data
             x = d.source if (d.source and self._tensor is None) \
                 else self.load_tensor()
-            self._ing = ingest(x, reorder=d.reorder, compact=d.compact,
-                               cache=d.cache, tile=d.tile, dims=d.dims,
-                               duplicates=d.duplicates, seed=d.seed)
+            with self._stage("ingest"):
+                self._ing = ingest(x, reorder=d.reorder, compact=d.compact,
+                                   cache=d.cache, tile=d.tile, dims=d.dims,
+                                   duplicates=d.duplicates, seed=d.seed)
         return self._ing
 
     def chunk_source(self):
@@ -226,16 +308,20 @@ class Session:
             rank = _kron_widths(factor_ranks)
         else:
             rank = cfg.method.rank
-        self._plan = ing.plan(cfg.plan.policy, rank=rank, kernel=spec.kernel,
-                              backend=cfg.plan.backend, allow=allow,
-                              calibrate=cfg.plan.calibrate,
-                              factor_ranks=factor_ranks,
-                              recalibrate=cfg.plan.recalibrate)
+        with self._stage("plan"):
+            self._plan = ing.plan(cfg.plan.policy, rank=rank,
+                                  kernel=spec.kernel,
+                                  backend=cfg.plan.backend, allow=allow,
+                                  calibrate=cfg.plan.calibrate,
+                                  factor_ranks=factor_ranks,
+                                  recalibrate=cfg.plan.recalibrate)
         self._plan_done = True
         return self._plan
 
     def plan_report(self) -> str:
-        """The human-readable per-mode planner table (serve/dryrun print)."""
+        """The human-readable per-mode planner table (serve/dryrun print),
+        with a provenance footer surfacing the ingest-cache and autotune
+        hit/miss counters behind this session's plan."""
         from repro.utils.report import plan_report
 
         plan = self.plan()
@@ -243,7 +329,20 @@ class Session:
             return (f"# method={self.cfg.method.name}: chunked "
                     "gather_scatter fold, no per-mode plan")
         return plan_report(plan, reorder_deltas=self.ingest().reorder_deltas(),
-                           method=self.cfg.method.name)
+                           method=self.cfg.method.name,
+                           provenance=self._plan_provenance())
+
+    def _plan_provenance(self) -> dict:
+        """Cache provenance for the plan_report footer: whether this
+        ingest was warm, and the per-store hit/miss counters."""
+        ing = self.ingest()
+        prov = {"cache_hit": ing.cache_hit}
+        if ing.cache is not None:
+            prov["ingest"] = {"hits": ing.cache.hits,
+                              "misses": ing.cache.misses}
+            store = ing.cache.autotune
+            prov["autotune"] = {"hits": store.hits, "misses": store.misses}
+        return prov
 
     # -- stage 3: fit ------------------------------------------------------
     def fit(self, *, force: bool = False):
@@ -252,7 +351,9 @@ class Session:
         if self._result is None or force:
             ex = get_executor(self.cfg.exec.executor)
             require_capability(self.cfg.method.name, ex.name)
-            self._result = ex.fn(self)
+            with self._stage("fit"):
+                self._result = ex.fn(self)
+            self.export_obs()
         return self._result
 
     # -- stage 4: serve ----------------------------------------------------
@@ -266,7 +367,8 @@ class Session:
                 dims = self._ing.original_dims
             else:  # streaming straight off a path: dims from factor rows
                 dims = tuple(int(f.shape[0]) for f in dec.factors)
-            self._handle = ServeHandle(dec, tuple(dims))
+            self._handle = ServeHandle(dec, tuple(dims),
+                                       tracer=self.tracer())
         return self._handle
 
     # -- executor plumbing (consumed by repro.api.executor) ----------------

@@ -34,6 +34,8 @@ from typing import Callable, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.obs import trace as obs_trace
+
 from .gram import (gram, hadamard_grams, solve_cholesky, solve_gram, normalize,
                    kruskal_fit)
 from .coo import SparseTensor
@@ -340,27 +342,37 @@ def _iteration_timed(ws, factors, grams, norm_x_sq, timers, *, impls,
         fit = jnp.array(jnp.nan, dtype=factors[0].dtype)
         order = len(factors)
         for n in range(order):
-            m_mat = _timed(timers, "mttkrp", _jit_mttkrp, ws[n], factors,
-                           mode=n, impl=impls[n])
-            factors, grams, lam, fit = _timed(
-                timers, "epilogue", fused_mode_epilogue, m_mat, factors,
-                grams, norm_x_sq, mode=n, norm_kind=norm_kind,
-                with_fit=with_fit and n == order - 1)
+            with obs_trace.span("mttkrp", mode=n, impl=impls[n]):
+                m_mat = _timed(timers, "mttkrp", _jit_mttkrp, ws[n], factors,
+                               mode=n, impl=impls[n])
+            with obs_trace.span("epilogue", mode=n):
+                factors, grams, lam, fit = _timed(
+                    timers, "epilogue", fused_mode_epilogue, m_mat, factors,
+                    grams, norm_x_sq, mode=n, norm_kind=norm_kind,
+                    with_fit=with_fit and n == order - 1)
         return factors, grams, lam, fit
     factors = list(factors)
     grams = list(grams)
     lam = m_last = None
     for n in range(len(factors)):
-        v = _timed(timers, "ata", _jit_hadamard, tuple(grams), mode=n)
-        m_mat = _timed(timers, "mttkrp", _jit_mttkrp, ws[n], tuple(factors), mode=n, impl=impls[n])
-        a_new = _timed(timers, "inverse", _jit_solve, m_mat, v)
-        a_new, lam = _timed(timers, "norm", _jit_normalize, a_new, kind=norm_kind)
-        grams[n] = _timed(timers, "ata", _jit_gram, a_new)
+        with obs_trace.span("ata", mode=n):
+            v = _timed(timers, "ata", _jit_hadamard, tuple(grams), mode=n)
+        with obs_trace.span("mttkrp", mode=n, impl=impls[n]):
+            m_mat = _timed(timers, "mttkrp", _jit_mttkrp, ws[n],
+                           tuple(factors), mode=n, impl=impls[n])
+        with obs_trace.span("inverse", mode=n):
+            a_new = _timed(timers, "inverse", _jit_solve, m_mat, v)
+        with obs_trace.span("norm", mode=n):
+            a_new, lam = _timed(timers, "norm", _jit_normalize, a_new,
+                                kind=norm_kind)
+        with obs_trace.span("ata", mode=n):
+            grams[n] = _timed(timers, "ata", _jit_gram, a_new)
         factors[n] = a_new
         m_last = m_mat
     if with_fit:
-        fit = _timed(timers, "fit", _jit_fit, norm_x_sq, lam, tuple(grams),
-                     m_last, factors[-1])
+        with obs_trace.span("fit"):
+            fit = _timed(timers, "fit", _jit_fit, norm_x_sq, lam,
+                         tuple(grams), m_last, factors[-1])
     else:
         # skipped entirely: no fit work done, no "fit" seconds charged
         fit = jnp.array(jnp.nan, dtype=factors[0].dtype)

@@ -87,6 +87,16 @@ class StragglerMonitor:
                                else "slow")
             else:
                 self._strikes[host] = 0
+        if flags:
+            # escalations feed the obs metrics registry (straggler.slow /
+            # straggler.persistent counters) so single-host runs see the
+            # flags too, not just the dist launcher's log line.  obs.metrics
+            # is jax-free, preserving this module's contract.
+            from repro.obs.metrics import get_registry
+
+            registry = get_registry()
+            for flag in flags.values():
+                registry.counter(f"straggler.{flag}").inc()
         return flags
 
     def reset(self) -> None:

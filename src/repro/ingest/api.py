@@ -39,6 +39,8 @@ from repro.plan.stats import ModeStats, tensor_stats
 
 from . import reader
 from .cache import IngestCache, content_key
+from repro.obs import trace as obs_trace
+
 from .relabel import REORDERINGS, Relabeling, compact as compact_fn, make_reorder
 
 Array = jax.Array
@@ -222,7 +224,8 @@ def ingest(
                           dims=dims, duplicates=duplicates,
                           extra=f"seed={seed}" if reorder == "random_block"
                           else "")
-        hit = cache.load(key)
+        with obs_trace.span("ingest.cache.load", warm=True):
+            hit = cache.load(key)
         if hit is not None:
             t, relabeling, csfs, lin, stats, stats_before = hit
             return Ingested(
@@ -236,23 +239,28 @@ def ingest(
     if isinstance(x, SparseTensor):
         t = x
     else:
-        t = reader.read_any(x, dims=dims, duplicates=duplicates)
+        with obs_trace.span("ingest.parse", source=source):
+            t = reader.read_any(x, dims=dims, duplicates=duplicates)
 
     relabeling: Optional[Relabeling] = None
     stats_before = None
     if compact or reorder != "identity":
-        stats_before = tuple(tensor_stats(t, block=block, row_tile=row_tile))
-        rel = None
-        if compact:
-            rel = compact_fn(t)
-            t = rel.apply(t)
-        if reorder != "identity":
-            r2 = make_reorder(t, reorder, block=block, seed=seed)
-            t = r2.apply(t)
-            rel = r2 if rel is None else rel.then(r2)
-        relabeling = rel
+        with obs_trace.span("ingest.relabel", reorder=reorder,
+                            compact=compact):
+            stats_before = tuple(tensor_stats(t, block=block,
+                                              row_tile=row_tile))
+            rel = None
+            if compact:
+                rel = compact_fn(t)
+                t = rel.apply(t)
+            if reorder != "identity":
+                r2 = make_reorder(t, reorder, block=block, seed=seed)
+                t = r2.apply(t)
+                rel = r2 if rel is None else rel.then(r2)
+            relabeling = rel
 
-    stats = tuple(tensor_stats(t, block=block, row_tile=row_tile))
+    with obs_trace.span("ingest.stats"):
+        stats = tuple(tensor_stats(t, block=block, row_tile=row_tile))
 
     csfs: dict[int, object] = {}
     lin = None
@@ -261,15 +269,19 @@ def ingest(
         # later plan — whatever layouts it picks — is a pure cache read.
         # The linearized workspace rides along (one buffer for all modes)
         # unless the tensor's dims exceed its 64-bit packed-index budget.
-        for m in range(t.order):
-            csfs[m] = csf_mod.build_csf(t, m, block=block, row_tile=row_tile)
-        try:
-            lin = lin_mod.build_linearized(t, block=block, row_tile=row_tile)
-        except ValueError:
-            lin = None
-        cache.store(key, t, relabeling, list(csfs.values()), list(stats),
-                    None if stats_before is None else list(stats_before),
-                    lin=lin)
+        with obs_trace.span("ingest.build", modes=t.order):
+            for m in range(t.order):
+                csfs[m] = csf_mod.build_csf(t, m, block=block,
+                                            row_tile=row_tile)
+            try:
+                lin = lin_mod.build_linearized(t, block=block,
+                                               row_tile=row_tile)
+            except ValueError:
+                lin = None
+        with obs_trace.span("ingest.cache.store"):
+            cache.store(key, t, relabeling, list(csfs.values()), list(stats),
+                        None if stats_before is None else list(stats_before),
+                        lin=lin)
 
     return Ingested(tensor=t, relabeling=relabeling, stats=stats,
                     stats_before=stats_before, block=block, row_tile=row_tile,

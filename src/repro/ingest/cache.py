@@ -191,10 +191,13 @@ class IngestCache:
         stats_before)`` — ``lin`` is the shared linearized workspace, or
         None when the tensor's dims exceed its bit budget — or None on a
         miss.  Counts hits/misses."""
+        from repro.obs.metrics import get_registry
+
         entry = self._dir(key)
         meta_path = entry / "meta.json"
         if not meta_path.exists():
             self.misses += 1
+            get_registry().counter("ingest.cache.miss").inc()
             return None
         meta = json.loads(meta_path.read_text())
         if meta.get("version") != CACHE_FORMAT_VERSION:
@@ -203,10 +206,12 @@ class IngestCache:
             import shutil
             shutil.rmtree(entry, ignore_errors=True)
             self.misses += 1
+            get_registry().counter("ingest.cache.miss").inc()
             return None
         arrays = {p.stem: np.load(p, mmap_mode="r")
                   for p in entry.glob("*.npy")}
         self.hits += 1
+        get_registry().counter("ingest.cache.hit").inc()
 
         dims = tuple(meta["dims"])
         nnz = int(meta["nnz"])

@@ -147,7 +147,8 @@ def serve_cpd(workload: str, *, smoke: bool, batch: int, queries: int,
     return {"fit": float(dec.fit), "decompose_s": t_decomp,
             "serve_s": bench["serve_s"], "plan": plan_summary,
             "method": method, "ingest_s": t_ingest,
-            "cache_hit": ing.cache_hit, "qps": bench["qps"]}
+            "cache_hit": ing.cache_hit, "qps": bench["qps"],
+            "latency_ms": bench["latency_ms"]}
 
 
 def main() -> None:
@@ -186,7 +187,9 @@ def main() -> None:
               f"ingest {out['ingest_s']:.2f}s"
               f"{' (cache hit)' if out['cache_hit'] else ''}  "
               f"decompose {out['decompose_s']:.2f}s  "
-              f"serve {out['serve_s']:.2f}s ({out['qps']:,.0f} vals/s)")
+              f"serve {out['serve_s']:.2f}s ({out['qps']:,.0f} vals/s, "
+              f"p50 {out['latency_ms']['p50']:.2f}ms "
+              f"p99 {out['latency_ms']['p99']:.2f}ms)")
         return
     out = serve(args.arch, smoke=args.smoke, batch=args.batch,
                 prompt_len=args.prompt_len, gen=args.gen)

@@ -10,7 +10,6 @@ historical call site keeps working.
 """
 from __future__ import annotations
 
-import time
 from typing import Callable, Optional
 
 import jax
@@ -21,8 +20,13 @@ from repro.core.cpals import (CPALSState, CPDecomp, _iteration,
                               _iteration_timed, _timed, build_workspace,
                               donate_buffers, init_factors, resolve_plan)
 from repro.core.gram import gram
+from repro.obs import trace as obs_trace
 
+from .iteration import IterationRecorder, record_iteration
 from .registry import DecompState, MethodSpec, make_state, register_method
+
+__all__ = ["cp_als", "cpals_state_to_decomp", "record_iteration",
+           "resolve_ingested"]
 
 Array = jax.Array
 
@@ -72,12 +76,18 @@ def resolve_ingested(t, name: str, *, block, row_tile):
         row_tile if row_tile is not None else 128)
 
 
-def record_iteration(monitor, dt: float) -> None:
-    """Feed one iteration's wall time to a StragglerMonitor (if any)."""
-    if monitor is not None:
-        from repro.dist.straggler import record_step_times
-
-        record_step_times(monitor, dt)
+def auto_timers(timers, tracer=None):
+    """The driver-side tracing switch: when an enabled tracer is active
+    and the caller did not ask for timers, hand back a fresh timer dict
+    so the driver takes its per-routine timed path (whose ``_timed``
+    syncs give the spans honest durations) — plus whether the tracer
+    wants the fused (sort/mttkrp/epilogue) or split (full Table-III)
+    routine set.  Returns ``(timers_or_None, fused_override_or_None)``."""
+    if tracer is None:
+        tracer = obs_trace.current_tracer()
+    if timers is None and tracer is not None and tracer.enabled:
+        return {}, tracer.routines == "fused"
+    return timers, None
 
 
 def cp_als(
@@ -155,8 +165,16 @@ def cp_als(
                          row_tile=row_tile)
         return p, build_workspace(t, p)
 
+    # tracing (obs enabled) implies the timed path: spans need the routine
+    # boundaries.  The tracer's default "fused" routine set keeps the added
+    # host syncs to two per mode — the overhead the obs benchmark gates.
+    timers, fused_override = auto_timers(timers)
+    if fused_override is not None:
+        fused_epilogue = fused_override
+
     if timers is not None:
-        plan, ws = _timed(timers, "sort", _plan_and_build)
+        with obs_trace.span("sort"):
+            plan, ws = _timed(timers, "sort", _plan_and_build)
     else:
         plan, ws = _plan_and_build()
     impls = plan.impls
@@ -186,33 +204,27 @@ def cp_als(
 
     grams = tuple(gram(a) for a in factors)
 
+    recorder = IterationRecorder("cp_als", monitor=monitor, verbose=verbose)
     for it in range(start_iter, niters):
         norm_kind = first_norm if it == 0 else "2"
-        t0 = time.perf_counter()
-        if timers is not None:
-            factors, grams, lmbda, fit_new = _iteration_timed(
-                ws, factors, grams, norm_x_sq, timers, impls=impls,
-                norm_kind=norm_kind, with_fit=with_fit, fused=fused_epilogue
-            )
-        else:
-            factors, grams, lmbda, fit_new = _iteration(
-                ws, tuple(factors), grams, norm_x_sq, impls=impls,
-                norm_kind=norm_kind, with_fit=with_fit,
-                # checkpoint_cb hands factor references out of the loop, so
-                # donation would invalidate the checkpointed arrays
-                donate=donate and checkpoint_cb is None
-            )
-        if with_fit:
-            fit = fit_new
-        record_iteration(monitor, time.perf_counter() - t0)
-        # one dtype-consistent delta scalar: cast both fits to python float
-        # FIRST, then subtract — printing float(fit - fit_prev) (a bf16/f32
-        # device subtraction) while comparing abs(float(fit) - float(fit_prev))
-        # against tol let the printed delta disagree with the stop decision
-        delta = float(fit) - float(fit_prev)
-        if verbose:
-            print(f"  its = {it + 1}  fit = {float(fit):.6f}  "
-                  f"delta = {delta:+.3e}")
+        with recorder.iteration(it):
+            if timers is not None:
+                factors, grams, lmbda, fit_new = _iteration_timed(
+                    ws, factors, grams, norm_x_sq, timers, impls=impls,
+                    norm_kind=norm_kind, with_fit=with_fit,
+                    fused=fused_epilogue
+                )
+            else:
+                factors, grams, lmbda, fit_new = _iteration(
+                    ws, tuple(factors), grams, norm_x_sq, impls=impls,
+                    norm_kind=norm_kind, with_fit=with_fit,
+                    # checkpoint_cb hands factor references out of the loop,
+                    # so donation would invalidate the checkpointed arrays
+                    donate=donate and checkpoint_cb is None
+                )
+            if with_fit:
+                fit = fit_new
+        delta = recorder.progress(it, fit, fit_prev)
         if checkpoint_cb is not None:
             checkpoint_cb(
                 CPALSState(

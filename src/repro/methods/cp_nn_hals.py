@@ -22,19 +22,20 @@ so the reported fit is non-decreasing (up to float noise) — asserted by
 """
 from __future__ import annotations
 
-import time
 from functools import lru_cache
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.cpals import CPDecomp, _timed, build_workspace, \
-    donate_buffers, init_factors, resolve_plan
+from repro.core.cpals import CPDecomp, _jit_mttkrp, _timed, \
+    build_workspace, donate_buffers, init_factors, resolve_plan
 from repro.core.gram import gram, hadamard_grams, kruskal_fit, normalize
 from repro.core.mttkrp import mttkrp
+from repro.obs import trace as obs_trace
 
-from .cp_als import record_iteration, resolve_ingested
+from .cp_als import auto_timers, resolve_ingested
+from .iteration import IterationRecorder
 from .registry import DecompState, MethodSpec, make_state, register_method
 
 Array = jax.Array
@@ -99,6 +100,33 @@ def _hals_iteration(ws, factors, grams, norm_x_sq, *, impls, donate=False):
         ws, tuple(factors), tuple(grams), norm_x_sq, impls=impls)
 
 
+@lru_cache(maxsize=None)
+def _hals_epilogue_jit():
+    return jax.jit(_hals_mode_epilogue, static_argnames=("mode", "with_fit"))
+
+
+def _hals_iteration_timed(ws, factors, grams, norm_x_sq, timers, *, impls):
+    """Per-routine timed HALS sweep (the tracing / ``timers=`` path).
+
+    HALS's post-MTTKRP chain is already one fused rank-one-update call, so
+    the fused/split routine distinction collapses here: both record the
+    per-mode ``mttkrp`` and ``epilogue`` split — same keys, same span
+    names, as CP-ALS's fused timed path."""
+    factors = tuple(factors)
+    grams = tuple(grams)
+    order = len(factors)
+    fit = jnp.array(jnp.nan, dtype=factors[0].dtype)
+    for n in range(order):
+        with obs_trace.span("mttkrp", mode=n, impl=impls[n]):
+            m_mat = _timed(timers, "mttkrp", _jit_mttkrp, ws[n], factors,
+                           mode=n, impl=impls[n])
+        with obs_trace.span("epilogue", mode=n):
+            factors, grams, fit = _timed(
+                timers, "epilogue", _hals_epilogue_jit(), m_mat, factors,
+                grams, norm_x_sq, mode=n, with_fit=n == order - 1)
+    return factors, grams, fit
+
+
 def cp_nn_hals(
     t,
     rank: int,
@@ -137,8 +165,12 @@ def cp_nn_hals(
                          row_tile=row_tile)
         return p, build_workspace(t, p)
 
+    # tracing implies the timed path (see cp_als.auto_timers); the fused /
+    # split distinction is moot here — HALS's epilogue is already one call
+    timers, _ = auto_timers(timers)
     if timers is not None:
-        plan_, ws = _timed(timers, "sort", _plan_and_build)
+        with obs_trace.span("sort"):
+            plan_, ws = _timed(timers, "sort", _plan_and_build)
     else:
         plan_, ws = _plan_and_build()
     impls = plan_.impls
@@ -165,19 +197,19 @@ def cp_nn_hals(
 
     grams = tuple(gram(a) for a in factors)
 
+    recorder = IterationRecorder("cp_nn_hals", monitor=monitor,
+                                 verbose=verbose)
     for it in range(start_iter, niters):
-        t0 = time.perf_counter()
-        factors, grams, fit = _hals_iteration(
-            ws, tuple(factors), grams, norm_x_sq, impls=impls,
-            # checkpoint_cb hands factor references out of the loop
-            donate=donate and checkpoint_cb is None)
-        record_iteration(monitor, time.perf_counter() - t0)
-        # cast-then-subtract: one delta scalar drives both the printout and
-        # the tol stop (see cp_als — the two disagreed for bf16/f32 fits)
-        delta = float(fit) - float(fit_prev)
-        if verbose:
-            print(f"  its = {it + 1}  fit = {float(fit):.6f}  "
-                  f"delta = {delta:+.3e}")
+        with recorder.iteration(it):
+            if timers is not None:
+                factors, grams, fit = _hals_iteration_timed(
+                    ws, factors, grams, norm_x_sq, timers, impls=impls)
+            else:
+                factors, grams, fit = _hals_iteration(
+                    ws, tuple(factors), grams, norm_x_sq, impls=impls,
+                    # checkpoint_cb hands factor references out of the loop
+                    donate=donate and checkpoint_cb is None)
+        delta = recorder.progress(it, fit, fit_prev)
         if checkpoint_cb is not None:
             checkpoint_cb(make_state(factors, {}, fit, fit_prev, it + 1))
         if tol > 0.0 and it > 0 and abs(delta) < tol:

@@ -95,9 +95,12 @@ def fit(
         user_cb = checkpoint_cb
         checkpoint_cb = lambda s: user_cb(cpals_state_to_decomp(s))
 
-    result = spec.fn(x, rank, tol=tol, plan=plan, key=key, state=state,
-                     checkpoint_cb=checkpoint_cb, monitor=monitor,
-                     verbose=verbose, **kwargs)
+    from repro.obs import trace as obs_trace
+
+    with obs_trace.span("fit.dispatch", method=spec.name):
+        result = spec.fn(x, rank, tol=tol, plan=plan, key=key, state=state,
+                         checkpoint_cb=checkpoint_cb, monitor=monitor,
+                         verbose=verbose, **kwargs)
     if ing is not None:
         result = ing.restore(result)
     return result

@@ -31,7 +31,6 @@ the price of exact Gauss-Seidel updates.
 """
 from __future__ import annotations
 
-import time
 from typing import Callable, Optional
 
 import jax
@@ -43,8 +42,9 @@ from repro.core.cpals import (CPDecomp, _jit_fit, _jit_gram, _jit_hadamard,
 from repro.core.coo import SparseTensor
 from repro.core.gram import gram
 from repro.ingest.reader import open_chunk_source
+from repro.obs import trace as obs_trace
 
-from .cp_als import record_iteration
+from .iteration import IterationRecorder
 from .registry import DecompState, MethodSpec, make_state, register_method
 
 Array = jax.Array
@@ -150,27 +150,34 @@ def cp_als_streaming(
             raise ValueError("chunk source yielded no chunks")
         return acc
 
+    recorder = IterationRecorder("cp_als_streaming", monitor=monitor,
+                                 verbose=verbose)
     for it in range(start_iter, niters):
         norm_kind = first_norm if it == 0 else "2"
-        t0 = time.perf_counter()
-        m_last = None
-        for n in range(order):
-            m_new = _mode_mttkrp(n)
-            v = _jit_hadamard(tuple(grams), mode=n)
-            a_new = _jit_solve(m_new, v)
-            a_new, lmbda = _jit_normalize(a_new, kind=norm_kind)
-            grams[n] = _jit_gram(a_new)
-            factors[n] = a_new
-            m_last = m_new
-        fit = _jit_fit(norm_x_sq, lmbda, tuple(grams), m_last, factors[-1])
-        record_iteration(monitor, time.perf_counter() - t0)
-        if verbose:
-            print(f"  its = {it + 1}  fit = {float(fit):.6f}  "
-                  f"delta = {float(fit - fit_prev):+.3e}")
+        with recorder.iteration(it):
+            m_last = None
+            for n in range(order):
+                # the chunk fold is host-driven (one source pass), so its
+                # span duration is honest; the dense epilogue spans time
+                # the dispatches only — no extra sync is added here
+                with obs_trace.span("mttkrp", mode=n, impl="gather_scatter",
+                                    chunked=True):
+                    m_new = _mode_mttkrp(n)
+                with obs_trace.span("epilogue", mode=n):
+                    v = _jit_hadamard(tuple(grams), mode=n)
+                    a_new = _jit_solve(m_new, v)
+                    a_new, lmbda = _jit_normalize(a_new, kind=norm_kind)
+                    grams[n] = _jit_gram(a_new)
+                factors[n] = a_new
+                m_last = m_new
+            with obs_trace.span("fit"):
+                fit = _jit_fit(norm_x_sq, lmbda, tuple(grams), m_last,
+                               factors[-1])
+        delta = recorder.progress(it, fit, fit_prev)
         if checkpoint_cb is not None:
             checkpoint_cb(make_state(factors, {"lmbda": lmbda}, fit,
                                      fit_prev, it + 1))
-        if tol > 0.0 and it > 0 and abs(float(fit) - float(fit_prev)) < tol:
+        if tol > 0.0 and it > 0 and abs(delta) < tol:
             fit_prev = fit
             break
         fit_prev = fit

@@ -19,7 +19,6 @@ sweeps (the monotone-fit property the tests assert).
 from __future__ import annotations
 
 import dataclasses
-import time
 from functools import partial
 from typing import Callable, Optional, Sequence
 
@@ -29,8 +28,10 @@ import jax.numpy as jnp
 from repro.core.coo import SparseTensor
 from repro.core.cpals import build_workspace
 from repro.core.ttmc import ttmc
+from repro.obs import trace as obs_trace
 
-from .cp_als import record_iteration, resolve_ingested
+from .cp_als import resolve_ingested
+from .iteration import IterationRecorder
 from .registry import DecompState, MethodSpec, make_state, register_method
 
 Array = jax.Array
@@ -199,25 +200,28 @@ def tucker_hooi(
 
     order = t.order
     y_last = None
+    recorder = IterationRecorder("tucker_hooi", monitor=monitor,
+                                 verbose=verbose)
     for it in range(start_iter, niters):
-        t0 = time.perf_counter()
-        factors = list(factors)
-        for n in range(order):
-            factors[n], y_last = _hooi_mode(
-                ws[n], tuple(factors), mode=n, impl=impls[n],
-                out_rank=ranks[n])
-        factors = tuple(factors)
-        core = _core_from_last(factors[-1], y_last, ranks)
-        # orthonormal factors: ||X - Xhat||^2 = ||X||^2 - ||G||^2
-        resid_sq = jnp.maximum(norm_x_sq - jnp.sum(core * core), 0.0)
-        fit = 1.0 - jnp.sqrt(resid_sq) / norm_x
-        record_iteration(monitor, time.perf_counter() - t0)
-        if verbose:
-            print(f"  its = {it + 1}  fit = {float(fit):.6f}  "
-                  f"delta = {float(fit - fit_prev):+.3e}")
+        with recorder.iteration(it):
+            factors = list(factors)
+            for n in range(order):
+                # TTMc + thin SVD is one jitted call per mode; the span
+                # times the dispatch only — no added sync
+                with obs_trace.span("ttmc", mode=n, impl=impls[n]):
+                    factors[n], y_last = _hooi_mode(
+                        ws[n], tuple(factors), mode=n, impl=impls[n],
+                        out_rank=ranks[n])
+            factors = tuple(factors)
+            with obs_trace.span("fit"):
+                core = _core_from_last(factors[-1], y_last, ranks)
+                # orthonormal factors: ||X - Xhat||^2 = ||X||^2 - ||G||^2
+                resid_sq = jnp.maximum(norm_x_sq - jnp.sum(core * core), 0.0)
+                fit = 1.0 - jnp.sqrt(resid_sq) / norm_x
+        delta = recorder.progress(it, fit, fit_prev)
         if checkpoint_cb is not None:
             checkpoint_cb(make_state(factors, {}, fit, fit_prev, it + 1))
-        if tol > 0.0 and it > 0 and abs(float(fit) - float(fit_prev)) < tol:
+        if tol > 0.0 and it > 0 and abs(delta) < tol:
             fit_prev = fit
             break
         fit_prev = fit

@@ -1,0 +1,30 @@
+"""repro.obs — structured observability: hierarchical spans + metrics.
+
+The paper's central artifact is a per-routine timing table (Table III:
+sort / MTTKRP / inverse / normalization / fit).  This package is that
+table as infrastructure: :mod:`repro.obs.trace` records hierarchical
+spans across ingest → plan → fit → serve and exports Chrome-trace /
+Perfetto-compatible JSONL; :mod:`repro.obs.metrics` is a process-local
+registry of counters/gauges/histograms that unifies the signals the rest
+of the repo already measures but keeps internal (autotune hits/misses,
+ingest cache warm/cold, straggler escalations, fit trajectory, serve
+latency percentiles); :mod:`repro.obs.report` renders a recorded trace
+as the paper's Table-III-style per-routine breakdown
+(``python -m repro trace <dir>``).
+
+Everything here is jax-optional: the tracer bridges spans into
+``jax.profiler.TraceAnnotation`` when jax is importable, and degrades to
+plain perf_counter spans when it is not — so ``repro.dist.straggler``
+and other jax-free modules can feed metrics without import cycles.
+"""
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                      get_registry, scoped_registry)
+from .trace import (Span, Tracer, current_tracer, read_trace, span, traced,
+                    tracing)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "get_registry",
+    "scoped_registry",
+    "Span", "Tracer", "current_tracer", "read_trace", "span", "traced",
+    "tracing",
+]

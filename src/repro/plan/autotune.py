@@ -129,18 +129,25 @@ class AutotuneStore:
 
     def load(self, key: str) -> Optional[dict]:
         """The stored ``{"costs": {impl: ms}, "meta": {...}}`` payload, or
-        None on a miss / version mismatch.  Counts hits/misses."""
+        None on a miss / version mismatch.  Counts hits/misses (instance
+        counters AND the obs metrics registry's ``autotune.hit`` /
+        ``autotune.miss``)."""
+        from repro.obs.metrics import get_registry
+
         p = self._path(key)
         try:
             payload = json.loads(p.read_text())
         except (OSError, json.JSONDecodeError):
             self.misses += 1
+            get_registry().counter("autotune.miss").inc()
             return None
         if payload.get("version") != CALIBRATION_FORMAT_VERSION:
             p.unlink(missing_ok=True)  # self-heal: next store() republishes
             self.misses += 1
+            get_registry().counter("autotune.miss").inc()
             return None
         self.hits += 1
+        get_registry().counter("autotune.hit").inc()
         return payload
 
     def store(self, key: str, costs: dict, *,

@@ -234,9 +234,13 @@ def _measured_costs(t: SparseTensor, mode: int, names, *, rank: int,
             hit = autotune.load(key)
             if hit is not None and set(hit["costs"]) == set(names):
                 return dict(hit["costs"]), "measured-cached"
-    costs = _calibrate_mode(t, mode, names, rank=rank, block=block,
-                            row_tile=row_tile, kernel=kernel,
-                            factor_ranks=factor_ranks)
+    from repro.obs import trace as obs_trace
+
+    with obs_trace.span("plan.calibrate", mode=mode, kernel=kernel,
+                        candidates=len(tuple(names))):
+        costs = _calibrate_mode(t, mode, names, rank=rank, block=block,
+                                row_tile=row_tile, kernel=kernel,
+                                factor_ranks=factor_ranks)
     if key is not None:
         autotune.store(key, costs, meta={
             "mode": mode, "backend": backend, "rank": int(rank),
@@ -402,8 +406,14 @@ def plan_decomposition(
                     f"row_tile={row_tile})")
         stats_per_mode = list(stats)
     else:
-        stats_per_mode = (tensor_stats(t, block=block, row_tile=row_tile)
-                          if with_stats or calibrate else [None] * t.order)
+        if with_stats or calibrate:
+            from repro.obs import trace as obs_trace
+
+            with obs_trace.span("plan.stats"):
+                stats_per_mode = tensor_stats(t, block=block,
+                                              row_tile=row_tile)
+        else:
+            stats_per_mode = [None] * t.order
     modes = []
     for m, stats in enumerate(stats_per_mode):
         source = "predicted"

@@ -14,7 +14,8 @@ def load_cells(d: Path) -> list[dict]:
     return [json.loads(p.read_text()) for p in sorted(d.glob("*.json"))]
 
 
-def plan_report(plan, *, reorder_deltas=None, method=None) -> str:
+def plan_report(plan, *, reorder_deltas=None, method=None,
+                provenance=None) -> str:
     """Per-mode planner table for a :class:`repro.plan.DecompPlan`.
 
     One row per mode: workspace layout, chosen impl, measured collision rate
@@ -38,6 +39,12 @@ def plan_report(plan, *, reorder_deltas=None, method=None) -> str:
     ``method``: the decomposition method executing the plan
     (``repro.methods``); the "method" column renders it together with the
     kernel family each mode was scored against (``mttkrp`` / ``ttmc``).
+
+    ``provenance``: cache counters behind this plan (what
+    ``Session.plan_report`` assembles) — ``{"cache_hit": bool, "ingest":
+    {"hits", "misses"}, "autotune": {"hits", "misses"}}`` — rendered as a
+    footer line so warm/cold ingest and replayed/fresh calibration stop
+    being internal-only counters.
     """
     head = (f"# plan: policy={plan.policy} backend={plan.backend} "
             f"rank={plan.rank}"
@@ -72,7 +79,27 @@ def plan_report(plan, *, reorder_deltas=None, method=None) -> str:
             f"| {p.layout} | **{p.impl}** "
             f"| {costs_cell} | {p.predicted_regime} "
             f"| {p.reason} |")
+    if provenance is not None:
+        rows.append(_provenance_footer(provenance))
     return "\n".join([head] + rows)
+
+
+def _provenance_footer(prov: dict) -> str:
+    """One ``# provenance:`` line from the Session's cache counters."""
+    parts = []
+    hit = prov.get("cache_hit")
+    if "ingest" in prov:
+        ing = prov["ingest"]
+        state = "warm" if hit else "cold"
+        parts.append(f"ingest-cache {state} "
+                     f"(hits={ing['hits']} misses={ing['misses']})")
+    else:
+        parts.append("no ingest cache (cold build; attach data.cache "
+                     "for warm starts)")
+    if "autotune" in prov:
+        at = prov["autotune"]
+        parts.append(f"autotune hits={at['hits']} misses={at['misses']}")
+    return "# provenance: " + " | ".join(parts)
 
 
 def _fmt_s(x: float) -> str:
