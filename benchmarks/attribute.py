@@ -1,0 +1,192 @@
+"""Regression attribution: name the routine behind a ratchet failure.
+
+The ratchet (``benchmarks/ratchet.py``) says *that* a section regressed;
+this module says *where*.  The cpals trajectory records carry the
+paper's Table-III per-routine breakdown per cell
+(``summary["cells"][cell]["routines_s"]`` — sort / mttkrp / ata /
+inverse / norm / fit — plus the fused ``epilogue_s`` subtotal), so the
+baseline and head records can be joined routine-by-routine: each
+routine's delta, and its **share** of the cell's total slowdown, ranks
+the culprits.  ``python -m repro ratchet -- --attribute`` (or
+``python -m benchmarks.ratchet --attribute``) prints this next to every
+failed section.
+
+Sections without a per-routine breakdown (serve, plan, ingest, ...)
+attribute at metric granularity — the worst-ratio regressed metric is
+the named culprit (``serve.query`` for the serve section's latency).
+
+:func:`attribute_traces` is the trace-level fallback: diff two recorded
+trace *directories* (``obs.report.routine_breakdown`` over each
+``trace.jsonl``) when the regression being hunted never went through the
+benchmark history at all.
+"""
+from __future__ import annotations
+
+from pathlib import Path
+from typing import Optional
+
+from .history import (DEFAULT_TOLERANCE, HISTORY_DIR, baseline_record,
+                      compare_metrics, extract_metrics, load_history)
+
+# ranked display order for known routines (unknown names sort after)
+ROUTINE_ORDER = ("sort", "mttkrp", "ata", "inverse", "norm", "fit",
+                 "epilogue", "serve.query")
+
+
+def cell_routines(cell: dict) -> dict:
+    """One benchmark cell's per-routine seconds: ``routines_s`` plus the
+    fused ``epilogue_s`` subtotal under the name ``"epilogue"``."""
+    out = {k: float(v) for k, v in cell.get("routines_s", {}).items()
+           if isinstance(v, (int, float))}
+    ep = cell.get("epilogue_s")
+    if isinstance(ep, (int, float)):
+        out["epilogue"] = float(ep)
+    return out
+
+
+def _diff_routines(base: dict, head: dict) -> list[dict]:
+    """Per-routine deltas of two ``{routine: seconds}`` maps, ranked by
+    delta (worst first).  ``share`` is each routine's fraction of the
+    summed positive delta — "mttkrp accounts for 80% of the slowdown"."""
+    rows = []
+    total_up = sum(max(0.0, head.get(r, 0.0) - base.get(r, 0.0))
+                   for r in set(base) | set(head))
+    for r in sorted(set(base) | set(head)):
+        b, h = base.get(r, 0.0), head.get(r, 0.0)
+        delta = h - b
+        rows.append({"routine": r, "base_s": b, "head_s": h,
+                     "delta_s": delta,
+                     "share": (max(0.0, delta) / total_up)
+                     if total_up > 0 else 0.0})
+    rows.sort(key=lambda x: (-x["delta_s"], x["routine"]))
+    return rows
+
+
+def attribute_cells(base_summary: dict, head_summary: dict, *,
+                    tolerance: float = DEFAULT_TOLERANCE) -> dict:
+    """Join the per-cell routine breakdowns of two cpals-style summaries.
+
+    Returns ``{cell: {"base_total_s", "head_total_s", "delta_s",
+    "routines": [ranked rows], "culprit": name}}`` for every shared cell
+    whose total regressed past ``tolerance``."""
+    out = {}
+    base_cells = base_summary.get("cells", {})
+    head_cells = head_summary.get("cells", {})
+    for cell in sorted(set(base_cells) & set(head_cells)):
+        b, h = base_cells[cell], head_cells[cell]
+        bt, ht = b.get("total_s"), h.get("total_s")
+        if not (isinstance(bt, (int, float)) and isinstance(ht, (int, float))
+                and bt > 0):
+            continue
+        if ht <= bt * (1.0 + tolerance):
+            continue
+        rows = _diff_routines(cell_routines(b), cell_routines(h))
+        out[cell] = {"base_total_s": float(bt), "head_total_s": float(ht),
+                     "delta_s": float(ht - bt), "routines": rows,
+                     "culprit": rows[0]["routine"] if rows else None}
+    return out
+
+
+def attribute_section(section: str, *,
+                      history_dir: Path = HISTORY_DIR,
+                      tolerance: float = DEFAULT_TOLERANCE) -> Optional[dict]:
+    """Attribution report for one section's baseline-vs-latest pair.
+
+    ``{"section", "kind": "routines" | "metrics", "culprit", ...}`` —
+    ``kind="routines"`` carries the per-cell routine join (summaries with
+    ``cells[*].routines_s``); ``kind="metrics"`` falls back to naming the
+    worst-ratio regressed metric.  None when the section has fewer than
+    two comparable records."""
+    records = load_history(section, history_dir)
+    if not records:
+        return None
+    base_rec, head_rec = baseline_record(records), records[-1]
+    if base_rec is head_rec:
+        return None
+    base_s, head_s = base_rec["summary"], head_rec["summary"]
+
+    cells = attribute_cells(base_s, head_s, tolerance=tolerance)
+    if cells:
+        # overall culprit: the routine with the largest summed delta
+        totals: dict[str, float] = {}
+        for c in cells.values():
+            for row in c["routines"]:
+                totals[row["routine"]] = (totals.get(row["routine"], 0.0)
+                                          + row["delta_s"])
+        culprit = max(totals, key=lambda r: totals[r]) if totals else None
+        return {"section": section, "kind": "routines", "cells": cells,
+                "culprit": culprit,
+                "base": base_rec.get("git_sha"),
+                "head": head_rec.get("git_sha")}
+
+    regressions = compare_metrics(extract_metrics(section, base_s),
+                                  extract_metrics(section, head_s),
+                                  tolerance=tolerance)
+    if not regressions:
+        return None
+    worst = regressions[0]["metric"]
+    # the serve section's only timed path is the query loop
+    culprit = "serve.query" if section == "serve" else worst
+    return {"section": section, "kind": "metrics",
+            "metrics": regressions, "culprit": culprit,
+            "base": base_rec.get("git_sha"),
+            "head": head_rec.get("git_sha")}
+
+
+def attribute_traces(base_dir, head_dir) -> dict:
+    """Trace-level attribution: per-routine totals of two recorded trace
+    directories (``obs.report.routine_breakdown`` over each
+    ``trace.jsonl``), diffed and ranked."""
+    from pathlib import Path
+
+    from repro.obs.report import routine_breakdown
+    from repro.obs.trace import TRACE_FILENAME, read_trace
+
+    def totals(d) -> dict:
+        path = Path(d)
+        if path.is_dir():
+            path = path / TRACE_FILENAME
+        summary = routine_breakdown(read_trace(path))
+        return {name: r["total_s"]
+                for name, r in summary.get("routines", {}).items()}
+
+    base, head = totals(base_dir), totals(head_dir)
+    rows = _diff_routines(base, head)
+    return {"kind": "traces", "routines": rows,
+            "culprit": rows[0]["routine"] if rows else None}
+
+
+def format_attribution(att: dict) -> str:
+    """Human-readable attribution block (what ``--attribute`` prints)."""
+    lines = []
+    if att.get("kind") == "routines":
+        lines.append(f"    attribution ({att['base']} -> {att['head']}): "
+                     f"culprit routine = {att['culprit']}")
+        for cell, c in sorted(att["cells"].items()):
+            lines.append(
+                f"      {cell}: {c['base_total_s']:.4g}s -> "
+                f"{c['head_total_s']:.4g}s (+{c['delta_s']:.4g}s)")
+            for row in c["routines"]:
+                if row["delta_s"] <= 0:
+                    continue
+                lines.append(
+                    f"        {row['routine']:<9} {row['base_s']:.4g}s -> "
+                    f"{row['head_s']:.4g}s  (+{row['delta_s']:.4g}s, "
+                    f"{row['share'] * 100:.0f}% of slowdown)")
+    elif att.get("kind") == "metrics":
+        lines.append(f"    attribution ({att['base']} -> {att['head']}): "
+                     f"culprit = {att['culprit']}")
+        for r in att["metrics"]:
+            lines.append(f"      {r['metric']}: {r['base']:.6g} -> "
+                         f"{r['new']:.6g} ({(r['ratio'] - 1) * 100:+.1f}%)")
+    elif att.get("kind") == "traces":
+        lines.append(f"    attribution (trace diff): culprit routine = "
+                     f"{att['culprit']}")
+        for row in att["routines"]:
+            if row["delta_s"] <= 0:
+                continue
+            lines.append(
+                f"      {row['routine']:<9} {row['base_s']:.4g}s -> "
+                f"{row['head_s']:.4g}s  (+{row['delta_s']:.4g}s, "
+                f"{row['share'] * 100:.0f}% of slowdown)")
+    return "\n".join(lines)

@@ -6,8 +6,11 @@ plain untraced fit (the ``span()`` fast path is a contextvar read + one
 ``is None``/``enabled`` check), and a fit with tracing *enabled* must
 cost < 5% (the enabled path auto-selects the fused timed iteration —
 two host syncs per mode — and records one span per routine call).
+The fourth side, *exposed*, is the enabled tracer plus a live
+``ExpositionServer`` scraped once per fit — live telemetry must fit
+under the same < 5% gate as plain enabled tracing.
 
-All three sides share one warm ``Ingested`` handle and one prebuilt
+All four sides share one warm ``Ingested`` handle and one prebuilt
 plan, so the measured deltas ARE the tracer.  Same noise model as
 ``bench_api``: interleave the sides (order rotated per rep), take each
 side's minimum per round (host noise is strictly additive), and gate
@@ -50,6 +53,7 @@ def run(scale: float = 0.01, rank: int = 16, niters: int = 20,
 
     disabled_tracer = Tracer(enabled=False)
     enabled_tracer = Tracer(enabled=True)
+    exposed_tracer = Tracer(enabled=True)
 
     def untraced():
         return fit()
@@ -65,20 +69,42 @@ def run(scale: float = 0.01, rank: int = 16, niters: int = 20,
         with enabled_tracer.activate():
             return fit()
 
+    import urllib.request
+
+    from repro.obs.exposition import ExpositionServer
+
+    server = ExpositionServer(0)  # live registry resolved per request
+
+    def exposed():
+        # enabled tracing with the exposition endpoint live and one
+        # scrape per fit — the live-telemetry configuration end to end
+        exposed_tracer.clear()
+        with exposed_tracer.activate():
+            out = fit()
+        urllib.request.urlopen(f"{server.url}/metrics", timeout=10).read()
+        return out
+
     sides = (("untraced", untraced), ("disabled", disabled),
-             ("enabled", enabled))
-    with scoped_registry():  # keep the metric feeds off the global registry
+             ("enabled", enabled), ("exposed", exposed))
+    n = len(sides)
+    with scoped_registry(), server:  # metric feeds off the global registry
         for _, fn in sides:
             timeit(fn, warmup=2, iters=1)
         rounds = []
-        per_round = max(1, reps // 3)
+        per_round = max(1, reps // n)
+        rep_no = 0
         for _ in range(3):
             mins = {}
-            for rep in range(per_round):
+            for _rep in range(per_round):
                 # rotate the side order per rep: whichever side runs right
                 # after the enabled one absorbs its deferred cleanup, so a
-                # fixed order would bias one side systematically
-                order = sides[rep % 3:] + sides[: rep % 3]
+                # fixed order would bias one side systematically.  The
+                # counter runs across rounds — a per-round counter with
+                # per_round < n would pin each side to a position subset
+                # (e.g. the last side never first), re-biasing what the
+                # rotation exists to remove
+                order = sides[rep_no % n:] + sides[: rep_no % n]
+                rep_no += 1
                 for name, fn in order:
                     t0 = time.perf_counter()
                     jax.block_until_ready(fn())
@@ -93,10 +119,13 @@ def run(scale: float = 0.01, rank: int = 16, niters: int = 20,
         "untraced_s": round(best["untraced"], 4),
         "disabled_s": round(best["disabled"], 4),
         "enabled_s": round(best["enabled"], 4),
+        "exposed_s": round(best["exposed"], 4),
         "disabled_overhead_pct": round(
             min(pct(m, "disabled") for m in rounds), 2),
         "enabled_overhead_pct": round(
             min(pct(m, "enabled") for m in rounds), 2),
+        "exposed_overhead_pct": round(
+            min(pct(m, "exposed") for m in rounds), 2),
         "events_per_fit": len(enabled_tracer.events()),
     }]
 
@@ -108,15 +137,18 @@ def summarize(rows: list[dict]) -> dict:
         "bench": "obs", "dataset": r["dataset"], "scale": r["scale"],
         "rank": r["rank"], "niters": r["niters"], "nnz": r["nnz"],
         "untraced_s": r["untraced_s"], "disabled_s": r["disabled_s"],
-        "enabled_s": r["enabled_s"],
+        "enabled_s": r["enabled_s"], "exposed_s": r["exposed_s"],
         "events_per_fit": r["events_per_fit"],
         "disabled_overhead_pct": r["disabled_overhead_pct"],
         "enabled_overhead_pct": r["enabled_overhead_pct"],
+        "exposed_overhead_pct": r["exposed_overhead_pct"],
         "gate": {
             "disabled_pct_max": DISABLED_GATE_PCT,
             "enabled_pct_max": ENABLED_GATE_PCT,
+            "exposed_pct_max": ENABLED_GATE_PCT,
             "ok": bool(r["disabled_overhead_pct"] < DISABLED_GATE_PCT
-                       and r["enabled_overhead_pct"] < ENABLED_GATE_PCT),
+                       and r["enabled_overhead_pct"] < ENABLED_GATE_PCT
+                       and r["exposed_overhead_pct"] < ENABLED_GATE_PCT),
         },
     }
 
@@ -139,7 +171,9 @@ def main() -> None:
           f"(gate < {s['gate']['disabled_pct_max']}%), "
           f"enabled {s['enabled_overhead_pct']}% "
           f"(gate < {s['gate']['enabled_pct_max']}%, "
-          f"{s['events_per_fit']} events/fit): "
+          f"{s['events_per_fit']} events/fit), "
+          f"exposed {s['exposed_overhead_pct']}% "
+          f"(gate < {s['gate']['exposed_pct_max']}%): "
           f"{'ok' if s['gate']['ok'] else 'FAIL'}")
     if args.json:
         args.json.write_text(json.dumps(s, indent=1))

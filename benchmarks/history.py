@@ -173,9 +173,13 @@ def _metrics_obs(s: dict) -> dict:
     # absolute traced/untraced fit times: catches both a tracer slowdown
     # and a fit slowdown the overhead ratio would hide (both sides moving
     # together).  The overhead *gates* live in bench_obs itself.
+    # exposed_s (enabled + live exposition endpoint) is absent from
+    # pre-phase-2 records; compare_metrics skips non-shared keys, so old
+    # anchors stay comparable.
     return {"untraced_s": s.get("untraced_s"),
             "disabled_s": s.get("disabled_s"),
-            "enabled_s": s.get("enabled_s")}
+            "enabled_s": s.get("enabled_s"),
+            "exposed_s": s.get("exposed_s")}
 
 
 def _metrics_serve(s: dict) -> dict:

@@ -16,6 +16,11 @@ the ratchet measures drift from the new accepted floor, not from history.
 Sections with no history yet report ``missing`` and do not fail the run
 (a fresh checkout has nothing to regress against); ``--strict`` upgrades
 ``missing`` to a failure for CI jobs that must have produced history.
+
+``--attribute`` joins each failed section's baseline and head records
+with their per-routine breakdowns (``benchmarks/attribute.py``) and
+prints which routine — sort / mttkrp / epilogue / serve query — accounts
+for the regression.
 """
 from __future__ import annotations
 
@@ -58,6 +63,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                          "anchor instead of checking")
     ap.add_argument("--strict", action="store_true",
                     help="missing history is a failure, not a skip")
+    ap.add_argument("--attribute", action="store_true",
+                    help="on failure, join base/head per-routine "
+                         "breakdowns and name the regressed routine "
+                         "(benchmarks/attribute.py)")
     ap.add_argument("--json", type=Path, default=None,
                     help="also write the verdicts as JSON here")
     args = ap.parse_args(argv)
@@ -78,6 +87,15 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
                                tolerance=args.tolerance) for name in names]
     for res in results:
         _print_result(res, tolerance=args.tolerance)
+        if args.attribute and res["status"] == "regressed":
+            from .attribute import attribute_section, format_attribution
+
+            att = attribute_section(res["section"],
+                                    history_dir=args.history,
+                                    tolerance=args.tolerance)
+            if att is not None:
+                res["attribution"] = att
+                print(format_attribution(att))
     if args.json is not None:
         args.json.write_text(json.dumps(results, indent=1, sort_keys=True))
         print(f"# wrote {args.json}")

@@ -9,6 +9,9 @@
     python -m repro dryrun  --workload cpals-yelp --mesh single
     python -m repro fit     --dataset yelp --trace-dir artifacts/trace
     python -m repro trace   artifacts/trace   # Table-III-style breakdown
+    python -m repro metrics artifacts/trace   # standalone metrics table
+    python -m repro fit     --dataset yelp --trace-dir t --http-port 9100
+    python -m repro ratchet -- --attribute    # name a regressed routine
 
 Every subcommand builds one RunConfig (``--config file.json`` loads a base;
 explicit flags override it field by field) and drives a
@@ -131,6 +134,17 @@ def _add_config_args(p: argparse.ArgumentParser) -> None:
                    help="trace the paper's full Table-III routine set "
                         "(ata/inverse/norm/fit) instead of the low-overhead "
                         "fused sort/mttkrp/epilogue split")
+    g.add_argument("--http-port", type=int, default=None, metavar="PORT",
+                   help="serve live /metrics + /healthz + /trace on "
+                        "127.0.0.1:PORT for the duration of fit/serve "
+                        "(implies obs.enabled; 0 = ephemeral port)")
+    g.add_argument("--heartbeat-s", type=float, default=None, metavar="S",
+                   help="atomically rewrite <trace-dir>/heartbeat.json "
+                        "(metrics + recent events) every S seconds "
+                        "(needs --trace-dir)")
+    g.add_argument("--events-buffer", type=int, default=None, metavar="N",
+                   help="flight-recorder ring capacity (events kept for "
+                        "crash dumps / events.jsonl; default 1024)")
 
 
 def config_from_args(args: argparse.Namespace) -> RunConfig:
@@ -210,6 +224,11 @@ def config_from_args(args: argparse.Namespace) -> RunConfig:
     if getattr(args, "trace_split", None):
         base["obs"]["enabled"] = True
         base["obs"]["routines"] = "split"
+    if getattr(args, "http_port", None) is not None:
+        base["obs"]["enabled"] = True
+        base["obs"]["http_port"] = args.http_port
+    put("obs", "heartbeat_s", getattr(args, "heartbeat_s", None))
+    put("obs", "events_buffer", getattr(args, "events_buffer", None))
     return RunConfig.from_dict(base)
 
 
@@ -257,9 +276,21 @@ def cmd_fit(args) -> int:
     if args.dryrun:
         print("# --dryrun: plan only, skipping execution")
         return 0
+    if cfg.obs.http_port is not None:
+        # bring the endpoint up (and print the resolved port) BEFORE the
+        # fit blocks, so a watcher can start curling immediately
+        print(f"# live metrics at {sess.exposition().url}/metrics",
+              flush=True)
     t0 = time.time()
-    dec = sess.fit()
-    jax.block_until_ready(dec.fit)
+    try:
+        dec = sess.fit()
+        jax.block_until_ready(dec.fit)
+        if args.hold_s:
+            # keep the live endpoints up for scrapers that arrived late
+            # (the CI smoke curls a backgrounded fit through this window)
+            time.sleep(args.hold_s)
+    finally:
+        sess.close()
     print(f"fit={float(dec.fit):.6f} wall={time.time() - t0:.2f}s")
     if cfg.obs.trace_dir:
         print(f"# trace written to {cfg.obs.trace_dir} "
@@ -293,16 +324,19 @@ def cmd_serve(args) -> int:
     import jax
 
     t0 = time.time()
-    handle = sess.serve_handle()
-    jax.block_until_ready(handle.decomp.fit)  # async dispatch: drain first
-    t_fit = time.time() - t0
-    bench = handle.benchmark(queries=args.queries, batch=args.batch,
-                             seed=cfg.method.seed)
-    lat = bench["latency_ms"]
-    print(f"fit={handle.fit:.4f} decompose={t_fit:.2f}s "
-          f"serve={bench['serve_s']:.2f}s ({bench['qps']:,.0f} vals/s, "
-          f"p50 {lat['p50']:.2f}ms p99 {lat['p99']:.2f}ms)")
-    sess.export_obs()  # serve spans + latency histogram join the trace
+    try:
+        handle = sess.serve_handle()
+        jax.block_until_ready(handle.decomp.fit)  # async dispatch: drain
+        t_fit = time.time() - t0
+        bench = handle.benchmark(queries=args.queries, batch=args.batch,
+                                 seed=cfg.method.seed)
+        lat = bench["latency_ms"]
+        print(f"fit={handle.fit:.4f} decompose={t_fit:.2f}s "
+              f"serve={bench['serve_s']:.2f}s ({bench['qps']:,.0f} vals/s, "
+              f"p50 {lat['p50']:.2f}ms p99 {lat['p99']:.2f}ms)")
+        sess.export_obs()  # serve spans + latency histogram join the trace
+    finally:
+        sess.close()
     return 0
 
 
@@ -316,6 +350,42 @@ def cmd_trace(args) -> int:
         print(f"error: {e}", file=sys.stderr)
         return 2
     return 0
+
+
+def cmd_metrics(args) -> int:
+    """Render a standalone ``metrics.json`` (or a trace dir holding one)
+    as the markdown metrics table."""
+    from pathlib import Path
+
+    from repro.obs.report import format_metrics
+    from repro.obs.trace import METRICS_FILENAME
+
+    path = Path(args.dir)
+    if path.is_dir():
+        path = path / METRICS_FILENAME
+    if not path.exists():
+        print(f"error: no {METRICS_FILENAME} at {args.dir} — record one "
+              f"with `python -m repro fit ... --trace-dir {args.dir}`",
+              file=sys.stderr)
+        return 2
+    print(format_metrics(json.loads(path.read_text())))
+    return 0
+
+
+def cmd_ratchet(args) -> int:
+    """Delegate to the benchmark-history perf ratchet (``benchmarks``
+    imports only from the repo root, where ``python -m`` puts the cwd)."""
+    try:
+        from benchmarks.ratchet import main as ratchet_main
+    except ImportError:
+        print("error: the benchmarks package is not importable — run "
+              "`python -m repro ratchet` from the repository root",
+              file=sys.stderr)
+        return 2
+    fwd = list(args.ratchet_args)
+    if fwd[:1] == ["--"]:  # REMAINDER keeps the separator; ratchet won't
+        fwd = fwd[1:]
+    return ratchet_main(fwd)
 
 
 def cmd_dryrun(args) -> int:
@@ -355,6 +425,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         if "dryrun" in extra:
             p.add_argument("--dryrun", action="store_true",
                            help="print the plan and exit without fitting")
+            p.add_argument("--hold-s", type=float, default=None, metavar="S",
+                           help="keep the live exposition endpoints up S "
+                                "seconds after the fit completes (for "
+                                "scrapers watching a short run)")
         if "out" in extra:
             p.add_argument("--out", default=None, metavar="FACTORS.npz",
                            help="save factors/lambda/fit to an .npz")
@@ -371,6 +445,23 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     p.add_argument("--no-metrics", action="store_true",
                    help="skip the metrics dump, print the routine table only")
     p.set_defaults(fn=cmd_trace)
+
+    p = sub.add_parser(
+        "metrics",
+        help="render a recorded metrics.json as the metrics table "
+             "(see fit --trace-dir)")
+    p.add_argument("dir", help="directory holding metrics.json (or the "
+                               "file itself)")
+    p.set_defaults(fn=cmd_metrics)
+
+    p = sub.add_parser(
+        "ratchet",
+        help="benchmark-history perf ratchet (benchmarks/ratchet.py); "
+             "pass --attribute to name the routine behind a regression")
+    p.add_argument("ratchet_args", nargs=argparse.REMAINDER,
+                   help="arguments forwarded to benchmarks.ratchet "
+                        "(--history/--section/--tolerance/--attribute/...)")
+    p.set_defaults(fn=cmd_ratchet)
 
     p = sub.add_parser("dryrun",
                        help="compile-matrix dry-run (repro.launch.dryrun)")

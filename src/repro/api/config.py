@@ -303,7 +303,16 @@ class ObsConfig:
     low-overhead default) or ``"split"`` (the paper's full Table III:
     ata/inverse/norm/fit, one sync per routine).  ``xla_annotations``
     mirrors spans into ``jax.profiler.TraceAnnotation`` so they show up
-    inside XLA profiles."""
+    inside XLA profiles.
+
+    The live half (phase 2): ``http_port`` starts the Prometheus
+    exposition endpoint (``/metrics`` + ``/healthz`` + ``/trace``) on
+    127.0.0.1 for the duration of fit/serve — 0 binds an ephemeral port,
+    read back from ``Session.exposition.port``.  ``heartbeat_s`` > 0
+    atomically rewrites ``<trace_dir>/heartbeat.json`` (metrics + recent
+    events + stage) at that interval so a live or killed run can be
+    inspected from the filesystem.  ``events_buffer`` bounds the flight
+    recorder's event ring (the crash-dump / events.jsonl tail)."""
 
     _section = "obs"
 
@@ -312,6 +321,9 @@ class ObsConfig:
     sample_rate: float = 1.0
     routines: str = "fused"
     xla_annotations: bool = True
+    http_port: Optional[int] = None
+    heartbeat_s: float = 0.0
+    events_buffer: int = 1024
 
     def __post_init__(self):
         s = self._section
@@ -324,6 +336,24 @@ class ObsConfig:
                  "set obs.enabled=true to record a trace "
                  "(a trace_dir with tracing off would silently write "
                  "nothing)")
+        if self.http_port is not None:
+            _require(isinstance(self.http_port, int)
+                     and 0 <= self.http_port <= 65535, s, "http_port",
+                     f"must be a port in [0, 65535] (0 = ephemeral), "
+                     f"got {self.http_port!r}")
+            _require(self.enabled, s, "http_port",
+                     "set obs.enabled=true to expose live metrics "
+                     "(an endpoint over a disabled registry would serve "
+                     "nothing)")
+        _require(self.heartbeat_s >= 0.0, s, "heartbeat_s",
+                 f"must be >= 0 (0 = off), got {self.heartbeat_s}")
+        _require(self.heartbeat_s == 0.0 or self.trace_dir is not None,
+                 s, "heartbeat_s",
+                 "requires obs.trace_dir (heartbeat snapshots are "
+                 "written under the trace directory)")
+        _require(isinstance(self.events_buffer, int)
+                 and self.events_buffer >= 1, s, "events_buffer",
+                 f"must be >= 1, got {self.events_buffer!r}")
 
 
 # ---------------------------------------------------------------------------

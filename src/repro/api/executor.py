@@ -194,7 +194,27 @@ def _run_dist(session):
         session.ingest(), cfg.method.rank, session.mesh(),
         shard_c=cfg.exec.shard_c, mode_order=cfg.exec.mode_order,
         plan=session.plan(), method=cfg.method.name, **kw)
+    _emit_host_metrics(session)
     return CPDecomp(factors=tuple(factors), lmbda=lam, fit=fit)
+
+
+def _emit_host_metrics(session) -> None:
+    """Drop this process's registry snapshot (histogram windows included)
+    as ``metrics-<host>.json`` under ``obs.trace_dir`` — the per-host half
+    of cross-host aggregation; ``Session.export_obs`` folds every such
+    file into ``metrics-aggregated.json``."""
+    cfg = session.cfg
+    if not (cfg.obs.enabled and cfg.obs.trace_dir):
+        return
+    import socket
+
+    import jax
+
+    from repro.obs.aggregate import write_host_metrics
+    from repro.obs.metrics import get_registry
+
+    host = f"{socket.gethostname()}-p{jax.process_index()}"
+    write_host_metrics(cfg.obs.trace_dir, host, registry=get_registry())
 
 
 def _run_streaming(session):

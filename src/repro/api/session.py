@@ -101,9 +101,12 @@ class ServeHandle:
             dt_ms = (time.perf_counter() - t1) * 1e3
             hist.observe(dt_ms)
             registry_hist.observe(dt_ms)
+        qps = n_batches * batch / max(serve_s, 1e-9)
+        # throughput next to the latency histogram, so the exposition
+        # endpoint shows both sides of the serving story
+        get_registry().gauge("serve.qps").set(qps)
         return {"serve_s": serve_s, "queries": n_batches * batch,
-                "qps": n_batches * batch / max(serve_s, 1e-9),
-                "latency_ms": hist.summary()}
+                "qps": qps, "latency_ms": hist.summary()}
 
     @property
     def fit(self) -> float:
@@ -131,6 +134,10 @@ class Session:
         self.cfg = cfg
         self._tensor = tensor
         self._tracer = None
+        self._recorder = None
+        self._exposition = None
+        self._heartbeat = None
+        self._stage_name = None
         self._ing = None
         self._plan = None
         self._plan_done = False
@@ -161,32 +168,108 @@ class Session:
                                   xla_annotations=o.xla_annotations)
         return self._tracer
 
+    def recorder(self):
+        """The session's flight recorder (lazy; None with obs off) —
+        active during every stage, so instrumented modules'
+        ``record_event`` calls land in its ring."""
+        if self._recorder is None and self.cfg.obs.enabled:
+            from repro.obs.recorder import FlightRecorder
+
+            self._recorder = FlightRecorder(
+                capacity=self.cfg.obs.events_buffer)
+        return self._recorder
+
+    def exposition(self):
+        """The live ``/metrics`` + ``/healthz`` + ``/trace`` endpoint
+        (started on first access when ``obs.http_port`` is set; None
+        otherwise).  ``http_port=0`` binds an ephemeral port — read it
+        back from ``session.exposition().port``."""
+        if self._exposition is None and self.cfg.obs.http_port is not None:
+            from repro.obs.exposition import ExpositionServer
+
+            tracer = self.tracer()
+            self._exposition = ExpositionServer(
+                self.cfg.obs.http_port,
+                events_fn=tracer.events if tracer is not None else None,
+                info_fn=lambda: {"stage": self._stage_name,
+                                 "run": self.cfg.summary()},
+            ).start()
+        return self._exposition
+
+    def _start_live(self):
+        """Bring up the live surfaces configured in ``obs``: the HTTP
+        exposition endpoint and the heartbeat writer (both no-ops when
+        their fields are unset)."""
+        self.exposition()
+        if self._heartbeat is None and self.cfg.obs.heartbeat_s > 0:
+            from repro.obs.recorder import Heartbeat
+
+            self._heartbeat = Heartbeat(
+                self.cfg.obs.trace_dir, self.cfg.obs.heartbeat_s,
+                registry_fn=lambda: get_registry().snapshot(),
+                recorder=self.recorder(),
+                info_fn=lambda: {"stage": self._stage_name}).start()
+
+    def close(self):
+        """Stop the live surfaces (heartbeat flushes a final snapshot;
+        the exposition socket closes).  Idempotent; the CLI calls it
+        after fit/serve, and both threads are daemons so an unclosed
+        session still exits cleanly."""
+        if self._heartbeat is not None:
+            self._heartbeat.stop()
+            self._heartbeat = None
+        if self._exposition is not None:
+            self._exposition.stop()
+            self._exposition = None
+
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc_info) -> None:
+        self.close()
+
     @contextmanager
     def _stage(self, name: str):
-        """Activate the session tracer and open a ``stage.<name>`` span
-        around one pipeline stage (a no-op when obs is disabled — zero
-        tracer traffic)."""
+        """Activate the session tracer + flight recorder and open a
+        ``stage.<name>`` span around one pipeline stage (a no-op when obs
+        is disabled — zero tracer traffic)."""
         tracer = self.tracer()
         if tracer is None:
             yield
             return
-        with tracer.activate(), tracer.span(f"stage.{name}"):
-            yield
+        recorder = self.recorder()
+        prev, self._stage_name = self._stage_name, name
+        try:
+            with tracer.activate(), recorder.activate(), \
+                    tracer.span(f"stage.{name}"):
+                yield
+        finally:
+            self._stage_name = prev
 
     def export_obs(self):
-        """Write ``trace.jsonl`` + ``metrics.json`` under ``obs.trace_dir``
-        (called after fit and after serve benchmarks; returns the trace
-        path, or None when no trace dir is configured)."""
+        """Write ``trace.jsonl`` + ``metrics.json`` (+ ``events.jsonl``
+        when the flight recorder saw traffic, + ``metrics-aggregated.json``
+        when per-host snapshots exist) under ``obs.trace_dir`` — called
+        after fit and after serve benchmarks; returns the trace path, or
+        None when no trace dir is configured."""
         tracer = self.tracer()
         if tracer is None or not self.cfg.obs.trace_dir:
             return None
         from pathlib import Path
 
+        from repro.obs.aggregate import aggregate_dir
+        from repro.obs.recorder import EVENTS_FILENAME
         from repro.obs.trace import METRICS_FILENAME, TRACE_FILENAME
 
         d = Path(self.cfg.obs.trace_dir)
         path = tracer.export_jsonl(d / TRACE_FILENAME)
         (d / METRICS_FILENAME).write_text(get_registry().to_json())
+        recorder = self.recorder()
+        if recorder is not None and recorder.recorded:
+            recorder.export_jsonl(d / EVENTS_FILENAME)
+        # dist runs drop metrics-<host>.json next to the trace; fold them
+        # into one cluster view (None / no-op for single-process runs)
+        aggregate_dir(d, write=True)
         return path
 
     # -- stage 1: ingest ---------------------------------------------------
@@ -315,6 +398,11 @@ class Session:
                                   calibrate=cfg.plan.calibrate,
                                   factor_ranks=factor_ranks,
                                   recalibrate=cfg.plan.recalibrate)
+        rec = self.recorder()
+        if rec is not None:
+            rec.record("plan", policy=cfg.plan.policy,
+                       impls=list(self._plan.impls),
+                       calibrated=cfg.plan.calibrate)
         self._plan_done = True
         return self._plan
 
@@ -347,14 +435,34 @@ class Session:
     # -- stage 3: fit ------------------------------------------------------
     def fit(self, *, force: bool = False):
         """The decomposition, computed by the configured executor (cached;
-        ``force=True`` re-runs — the benchmark's overhead probe)."""
+        ``force=True`` re-runs — the benchmark's overhead probe).
+
+        With ``obs.trace_dir`` set, an unhandled executor exception
+        leaves a ``crash.json`` postmortem (traceback + config + metrics
+        + flight-recorder tail) before re-raising."""
         if self._result is None or force:
             ex = get_executor(self.cfg.exec.executor)
             require_capability(self.cfg.method.name, ex.name)
-            with self._stage("fit"):
-                self._result = ex.fn(self)
+            self._start_live()
+            try:
+                with self._stage("fit"):
+                    self._result = ex.fn(self)
+            except Exception as exc:
+                self._write_crash_dump(exc)
+                raise
             self.export_obs()
         return self._result
+
+    def _write_crash_dump(self, exc: BaseException):
+        if not self.cfg.obs.trace_dir:
+            return None
+        from repro.obs.recorder import write_crash_dump
+
+        return write_crash_dump(self.cfg.obs.trace_dir, exc,
+                                recorder=self.recorder(),
+                                metrics=get_registry().snapshot(),
+                                config=self.cfg.to_dict(),
+                                stage="fit")
 
     # -- stage 4: serve ----------------------------------------------------
     def serve_handle(self) -> ServeHandle:

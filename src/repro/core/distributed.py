@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.obs import trace as obs_trace
 from repro.dist.collectives import (cpals_axes, gather_rows, pgram,
                                     pnormalize_columns, scatter_rows,
                                     shard_map)
@@ -368,10 +369,14 @@ def dist_cp_als(t: SparseTensor, rank: int, mesh: Mesh, *, niters: int = 10,
     a, b, c = a0, b0, c0
     lam = jnp.ones((rank,), dtype=t.vals.dtype)
     fit = jnp.array(0.0)
+    traced = obs_trace.tracing()
     for i in range(niters):
         fn = it_first if i == 0 else it_rest
         t0 = time.time()
-        a, b, c, lam, fit = fn(inds, vals, a, b, c, norm_x_sq)
+        with obs_trace.span("iteration", method="dist_cp_als", i=i):
+            a, b, c, lam, fit = fn(inds, vals, a, b, c, norm_x_sq)
+            if traced:
+                jax.block_until_ready(fit)  # honest span duration
         if monitor is not None:
             from repro.dist.straggler import record_step_times
             jax.block_until_ready(fit)
@@ -379,6 +384,11 @@ def dist_cp_als(t: SparseTensor, rank: int, mesh: Mesh, *, niters: int = 10,
             flags = monitor.check()
             if flags and verbose:
                 print(f"  dist its={i + 1} stragglers: {flags}")
+        if traced:
+            from repro.obs.recorder import record_event
+
+            record_event("dist.iteration", i=int(i), fit=float(fit),
+                         ms=(time.time() - t0) * 1e3)
         if verbose:
             print(f"  dist its={i + 1} fit={float(fit):.6f}")
     factors = (a[: t.dims[0]], b[: t.dims[1]], c[: t.dims[2]])

@@ -93,10 +93,13 @@ class StragglerMonitor:
             # flags too, not just the dist launcher's log line.  obs.metrics
             # is jax-free, preserving this module's contract.
             from repro.obs.metrics import get_registry
+            from repro.obs.recorder import record_event
 
             registry = get_registry()
-            for flag in flags.values():
+            for host, flag in flags.items():
                 registry.counter(f"straggler.{flag}").inc()
+                record_event("straggler", host=int(host), flag=flag,
+                             mean_s=means[host], baseline_s=baseline)
         return flags
 
     def reset(self) -> None:

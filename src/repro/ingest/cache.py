@@ -192,12 +192,14 @@ class IngestCache:
         None when the tensor's dims exceed its bit budget — or None on a
         miss.  Counts hits/misses."""
         from repro.obs.metrics import get_registry
+        from repro.obs.recorder import record_event
 
         entry = self._dir(key)
         meta_path = entry / "meta.json"
         if not meta_path.exists():
             self.misses += 1
             get_registry().counter("ingest.cache.miss").inc()
+            record_event("cache", store="ingest", key=key, hit=False)
             return None
         meta = json.loads(meta_path.read_text())
         if meta.get("version") != CACHE_FORMAT_VERSION:
@@ -207,11 +209,13 @@ class IngestCache:
             shutil.rmtree(entry, ignore_errors=True)
             self.misses += 1
             get_registry().counter("ingest.cache.miss").inc()
+            record_event("cache", store="ingest", key=key, hit=False)
             return None
         arrays = {p.stem: np.load(p, mmap_mode="r")
                   for p in entry.glob("*.npy")}
         self.hits += 1
         get_registry().counter("ingest.cache.hit").inc()
+        record_event("cache", store="ingest", key=key, hit=True)
 
         dims = tuple(meta["dims"])
         nnz = int(meta["nnz"])

@@ -27,6 +27,7 @@ from typing import Iterator, Optional
 
 from repro.obs import trace as obs_trace
 from repro.obs.metrics import get_registry
+from repro.obs.recorder import record_event
 
 
 def record_iteration(monitor, dt: float) -> None:
@@ -72,6 +73,8 @@ class IterationRecorder:
             registry = get_registry()
             registry.counter("fit.iterations").inc()
             registry.histogram("fit.iteration_ms").observe(dt * 1e3)
+            record_event("iteration", method=self.method, i=int(it),
+                         ms=dt * 1e3)
 
     def progress(self, it: int, fit, fit_prev) -> float:
         """One dtype-consistent delta scalar: cast both fits to python

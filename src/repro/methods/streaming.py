@@ -174,6 +174,18 @@ def cp_als_streaming(
                 fit = _jit_fit(norm_x_sq, lmbda, tuple(grams), m_last,
                                factors[-1])
         delta = recorder.progress(it, fit, fit_prev)
+        if delta < 0.0 and it > start_iter and obs_trace.tracing():
+            # a fit DROP on a streaming fold is the drift signal (the
+            # evolving target moved under the factors) — surface it as a
+            # gauge + counter and a flight-recorder event
+            from repro.obs.metrics import get_registry
+            from repro.obs.recorder import record_event
+
+            registry = get_registry()
+            registry.gauge("stream.fit_drop").set(-delta)
+            registry.counter("stream.fit_drops").inc()
+            record_event("stream.drift", i=int(it), drop=-delta,
+                         fit=float(fit))
         if checkpoint_cb is not None:
             checkpoint_cb(make_state(factors, {"lmbda": lmbda}, fit,
                                      fit_prev, it + 1))

@@ -12,13 +12,26 @@ latency percentiles); :mod:`repro.obs.report` renders a recorded trace
 as the paper's Table-III-style per-routine breakdown
 (``python -m repro trace <dir>``).
 
+Phase 2 adds the *live* half: :mod:`repro.obs.exposition` renders the
+registry in Prometheus text format and serves ``/metrics`` +
+``/healthz`` + ``/trace`` from a stdlib-HTTP daemon thread
+(``ObsConfig.http_port``); :mod:`repro.obs.recorder` is a bounded
+ring-buffer flight recorder of structured events with periodic heartbeat
+snapshots and crash dumps for killed runs; :mod:`repro.obs.aggregate`
+merges per-host metrics snapshots (counters sum, gauges keep host
+labels, histogram windows merge) into one cluster view.
+
 Everything here is jax-optional: the tracer bridges spans into
 ``jax.profiler.TraceAnnotation`` when jax is importable, and degrades to
 plain perf_counter spans when it is not — so ``repro.dist.straggler``
 and other jax-free modules can feed metrics without import cycles.
 """
+from .aggregate import aggregate_dir, merge_snapshots, write_host_metrics
+from .exposition import ExpositionServer, render_prometheus
 from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                       get_registry, scoped_registry)
+from .recorder import (FlightRecorder, Heartbeat, current_recorder,
+                       record_event, write_crash_dump)
 from .trace import (Span, Tracer, current_tracer, read_trace, span, traced,
                     tracing)
 
@@ -27,4 +40,8 @@ __all__ = [
     "scoped_registry",
     "Span", "Tracer", "current_tracer", "read_trace", "span", "traced",
     "tracing",
+    "ExpositionServer", "render_prometheus",
+    "FlightRecorder", "Heartbeat", "current_recorder", "record_event",
+    "write_crash_dump",
+    "aggregate_dir", "merge_snapshots", "write_host_metrics",
 ]

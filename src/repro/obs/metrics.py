@@ -24,7 +24,7 @@ import math
 import threading
 from collections import deque
 from contextlib import contextmanager
-from typing import Iterator, Optional
+from typing import Iterator, Optional, Sequence
 
 # per-histogram retention for percentile estimates; count/total/min/max
 # are exact over ALL observations regardless
@@ -85,14 +85,17 @@ class Histogram:
             self.min = value if self.min is None else min(self.min, value)
             self.max = value if self.max is None else max(self.max, value)
 
+    @property
+    def window_size(self) -> int:
+        """The retention bound (deque maxlen) percentiles are computed
+        over — what a cross-host merge must preserve."""
+        return self._window.maxlen
+
     def percentile(self, p: float) -> Optional[float]:
         """p-th percentile (nearest-rank) of the retained window."""
         with self._lock:
             window = sorted(self._window)
-        if not window:
-            return None
-        rank = max(1, math.ceil(p / 100.0 * len(window)))
-        return window[rank - 1]
+        return window_percentile(window, p)
 
     def summary(self) -> dict:
         with self._lock:
@@ -100,20 +103,34 @@ class Histogram:
             count, total = self.count, self.total
             lo, hi = self.min, self.max
 
-        def pct(p: float) -> Optional[float]:
-            if not window:
-                return None
-            return window[max(1, math.ceil(p / 100.0 * len(window))) - 1]
-
         return {
             "count": count,
+            "total": total,
             "mean": (total / count) if count else None,
             "min": lo,
             "max": hi,
-            "p50": pct(50),
-            "p90": pct(90),
-            "p99": pct(99),
+            "p50": window_percentile(window, 50),
+            "p90": window_percentile(window, 90),
+            "p99": window_percentile(window, 99),
         }
+
+    def state(self) -> dict:
+        """:meth:`summary` plus the raw retained window and its bound —
+        the mergeable per-host form (``repro.obs.aggregate`` recomputes
+        percentiles from the concatenated windows)."""
+        with self._lock:
+            window = list(self._window)
+        return {**self.summary(), "window": window,
+                "window_size": self.window_size}
+
+
+def window_percentile(window: Sequence[float], p: float) -> Optional[float]:
+    """Nearest-rank percentile of an already-sorted window (None when
+    empty) — shared by :class:`Histogram` and the cross-host merge."""
+    if not window:
+        return None
+    rank = max(1, math.ceil(p / 100.0 * len(window)))
+    return window[rank - 1]
 
 
 class MetricsRegistry:
@@ -146,8 +163,12 @@ class MetricsRegistry:
     def histogram(self, name: str) -> Histogram:
         return self._get(name, Histogram)
 
-    def snapshot(self) -> dict:
-        """JSON-ready dump: ``{name: {"type": ..., ...values...}}``."""
+    def snapshot(self, *, with_window: bool = False) -> dict:
+        """JSON-ready dump: ``{name: {"type": ..., ...values...}}``.
+
+        ``with_window=True`` includes each histogram's raw retained
+        window (and its bound) — the per-host form
+        ``repro.obs.aggregate`` merges across processes."""
         with self._lock:
             items = sorted(self._instruments.items())
         out = {}
@@ -158,7 +179,9 @@ class MetricsRegistry:
                 out[name] = {"type": "gauge", "value": instrument.value}
             else:
                 assert isinstance(instrument, Histogram)
-                out[name] = {"type": "histogram", **instrument.summary()}
+                dump = (instrument.state() if with_window
+                        else instrument.summary())
+                out[name] = {"type": "histogram", **dump}
         return out
 
     def to_json(self, **dump_kwargs) -> str:

@@ -133,6 +133,7 @@ class AutotuneStore:
         counters AND the obs metrics registry's ``autotune.hit`` /
         ``autotune.miss``)."""
         from repro.obs.metrics import get_registry
+        from repro.obs.recorder import record_event
 
         p = self._path(key)
         try:
@@ -140,14 +141,17 @@ class AutotuneStore:
         except (OSError, json.JSONDecodeError):
             self.misses += 1
             get_registry().counter("autotune.miss").inc()
+            record_event("cache", store="autotune", key=key, hit=False)
             return None
         if payload.get("version") != CALIBRATION_FORMAT_VERSION:
             p.unlink(missing_ok=True)  # self-heal: next store() republishes
             self.misses += 1
             get_registry().counter("autotune.miss").inc()
+            record_event("cache", store="autotune", key=key, hit=False)
             return None
         self.hits += 1
         get_registry().counter("autotune.hit").inc()
+        record_event("cache", store="autotune", key=key, hit=True)
         return payload
 
     def store(self, key: str, costs: dict, *,

@@ -126,6 +126,13 @@ def test_golden_config_file_matches_defaults():
     golden = json.loads(GOLDEN.read_text())
     assert json.loads(RunConfig().to_json()) == golden
     assert RunConfig.from_dict(golden) == RunConfig()
+    # the live-telemetry fields are part of the committed schema: an
+    # accidental rename/retype of any of them must trip this, not just
+    # the blanket equality above
+    obs = golden["obs"]
+    assert obs["http_port"] is None
+    assert obs["heartbeat_s"] == 0.0
+    assert obs["events_buffer"] == 1024
 
 
 # ---------------------------------------------------------------------------

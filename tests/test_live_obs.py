@@ -1,0 +1,634 @@
+"""repro.obs phase 2 — the live half: Prometheus exposition, the flight
+recorder (heartbeats + crash dumps), cross-host aggregation, and ratchet
+regression attribution.
+
+The acceptance contract pinned hardest here: counters scraped from the
+live ``/metrics`` endpoint during a fit must match the final
+``metrics.json`` the session exports — the live view and the postmortem
+view are the same registry.
+"""
+import dataclasses
+import json
+import threading
+import urllib.request
+import urllib.error
+
+import jax
+import pytest
+
+from conftest import exact_lowrank_tensor
+from repro.api import ConfigError, MethodConfig, ObsConfig, RunConfig, Session
+from repro.api.executor import EXECUTORS
+from repro.obs import MetricsRegistry, scoped_registry
+from repro.obs.aggregate import (AGGREGATED_FILENAME, aggregate_dir,
+                                 merge_files, merge_snapshots,
+                                 write_host_metrics)
+from repro.obs.exposition import (ExpositionServer, render_prometheus,
+                                  sanitize_metric_name)
+from repro.obs.metrics import Histogram, window_percentile
+from repro.obs.recorder import (CRASH_FILENAME, EVENTS_FILENAME,
+                                HEARTBEAT_FILENAME, FlightRecorder,
+                                Heartbeat, current_recorder, record_event,
+                                write_crash_dump)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def lowrank():
+    return exact_lowrank_tensor((10, 9, 8), 3, KEY)
+
+
+def live_session(tmp_path, **obs_kw):
+    obs_kw.setdefault("enabled", True)
+    obs_kw.setdefault("trace_dir", str(tmp_path / "trace"))
+    cfg = RunConfig(method=MethodConfig(rank=4, niters=3, seed=0),
+                    obs=ObsConfig(**obs_kw))
+    return Session.from_config(cfg, tensor=lowrank())
+
+
+def http_json(url):
+    return json.loads(urllib.request.urlopen(url, timeout=10).read())
+
+
+# ---------------------------------------------------------------------------
+# Prometheus rendering
+# ---------------------------------------------------------------------------
+
+def test_render_prometheus_all_instrument_kinds():
+    reg = MetricsRegistry()
+    reg.counter("fit.iterations").inc(3)
+    reg.gauge("serve.qps").set(1500.5)
+    h = reg.histogram("fit.iteration_ms")
+    for v in (1.0, 2.0, 3.0, 4.0):
+        h.observe(v)
+    text = render_prometheus(registry=reg)
+    assert "# TYPE fit_iterations counter" in text
+    assert "fit_iterations 3.0" in text
+    assert "# TYPE serve_qps gauge" in text
+    assert "serve_qps 1500.5" in text
+    # histograms render as summaries: quantile samples + exact sum/count
+    assert "# TYPE fit_iteration_ms summary" in text
+    assert 'fit_iteration_ms{quantile="0.5"} 2.0' in text
+    assert "fit_iteration_ms_sum 10.0" in text
+    assert "fit_iteration_ms_count 4" in text
+    # original (dotted) names survive in HELP lines
+    assert "# HELP fit_iterations repro metric 'fit.iterations'" in text
+
+
+def test_metric_name_sanitization():
+    assert sanitize_metric_name("fit.iteration_ms") == "fit_iteration_ms"
+    assert sanitize_metric_name("a-b c/d") == "a_b_c_d"
+    assert sanitize_metric_name("9lives")[0] == "_"  # no leading digit
+
+
+def test_render_prometheus_none_gauge_is_nan():
+    reg = MetricsRegistry()
+    reg.gauge("fit.fit")  # created, never set
+    assert "fit_fit NaN" in render_prometheus(registry=reg)
+
+
+# ---------------------------------------------------------------------------
+# ExpositionServer
+# ---------------------------------------------------------------------------
+
+def test_exposition_endpoints():
+    reg = MetricsRegistry()
+    reg.counter("c").inc(2)
+    with ExpositionServer(0, registry_fn=lambda: reg,
+                          info_fn=lambda: {"stage": "fit"}) as srv:
+        assert srv.port != 0  # ephemeral port resolved at bind
+        body = urllib.request.urlopen(f"{srv.url}/metrics",
+                                      timeout=10).read().decode()
+        assert "c 2.0" in body
+        hz = http_json(f"{srv.url}/healthz")
+        assert hz["status"] == "ok" and hz["stage"] == "fit"
+        tr = http_json(f"{srv.url}/trace")
+        assert tr["events"] == 0
+        with pytest.raises(urllib.error.HTTPError) as ei:
+            urllib.request.urlopen(f"{srv.url}/nope", timeout=10)
+        assert ei.value.code == 404
+    # after stop() the socket is closed
+    with pytest.raises(urllib.error.URLError):
+        urllib.request.urlopen(f"{srv.url}/healthz", timeout=1)
+
+
+def test_exposition_tracks_scoped_registry_swaps():
+    # the server resolves the registry per request, so tests/benchmarks
+    # that scope a fresh registry see THEIR metrics on the endpoint
+    with ExpositionServer(0) as srv:
+        with scoped_registry() as reg:
+            reg.counter("scoped.only").inc()
+            body = urllib.request.urlopen(f"{srv.url}/metrics",
+                                          timeout=10).read().decode()
+        assert "scoped_only 1.0" in body
+
+
+# ---------------------------------------------------------------------------
+# FlightRecorder + record_event
+# ---------------------------------------------------------------------------
+
+def test_recorder_ring_drops_oldest():
+    rec = FlightRecorder(capacity=3)
+    for i in range(5):
+        rec.record("iteration", i=i)
+    snap = rec.snapshot()
+    assert snap["capacity"] == 3
+    assert snap["recorded"] == 5 and snap["dropped"] == 2
+    assert [e["i"] for e in snap["events"]] == [2, 3, 4]
+    assert [e["seq"] for e in snap["events"]] == [2, 3, 4]
+    assert rec.events(kind="nope") == []
+
+
+def test_record_event_inert_without_active_recorder():
+    assert current_recorder() is None
+    record_event("iteration", i=0)  # no recorder: dropped for free
+    rec = FlightRecorder(capacity=4)
+    with rec.activate():
+        assert current_recorder() is rec
+        record_event("iteration", i=1)
+    assert current_recorder() is None
+    assert [e["i"] for e in rec.events()] == [1]
+
+
+def test_recorder_capacity_validation():
+    with pytest.raises(ValueError, match="capacity"):
+        FlightRecorder(capacity=0)
+
+
+def test_recorder_export_jsonl_roundtrip(tmp_path):
+    rec = FlightRecorder(capacity=8)
+    rec.record("cache", store="ingest", hit=True)
+    rec.record("straggler", host=1, flag="slow")
+    path = rec.export_jsonl(tmp_path / "events.jsonl")
+    lines = [json.loads(l) for l in path.read_text().splitlines()]
+    assert [e["kind"] for e in lines] == ["cache", "straggler"]
+    assert lines[1]["host"] == 1
+
+
+def test_recorder_thread_safety():
+    rec = FlightRecorder(capacity=64)
+
+    def spam(k):
+        for i in range(100):
+            rec.record("t", worker=k, i=i)
+
+    threads = [threading.Thread(target=spam, args=(k,)) for k in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    snap = rec.snapshot()
+    assert snap["recorded"] == 400
+    assert len(snap["events"]) == 64
+    # seq is a total order even under concurrent appends
+    seqs = [e["seq"] for e in snap["events"]]
+    assert seqs == sorted(seqs)
+
+
+# ---------------------------------------------------------------------------
+# Heartbeat
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_start_stop_writes(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("beats.seen").inc(7)
+    rec = FlightRecorder(capacity=4)
+    rec.record("iteration", i=0)
+    hb = Heartbeat(tmp_path, 30.0, registry_fn=reg.snapshot, recorder=rec,
+                   info_fn=lambda: {"stage": "fit"})
+    hb.start()  # one immediate beat, even though the interval is long
+    first = json.loads((tmp_path / HEARTBEAT_FILENAME).read_text())
+    assert first["seq"] == 0 and first["stage"] == "fit"
+    assert first["metrics"]["beats.seen"]["value"] == 7.0
+    assert first["events"]["events"][0]["kind"] == "iteration"
+    hb.stop()  # final flush bumps seq
+    final = json.loads((tmp_path / HEARTBEAT_FILENAME).read_text())
+    assert final["seq"] >= 1
+    assert hb.beats == final["seq"] + 1
+
+
+def test_heartbeat_interval_validation(tmp_path):
+    with pytest.raises(ValueError, match="interval"):
+        Heartbeat(tmp_path, 0.0)
+
+
+def test_heartbeat_survives_info_fn_failure(tmp_path):
+    def broken():
+        raise RuntimeError("advisory info must not kill the beat")
+
+    hb = Heartbeat(tmp_path, 30.0, info_fn=broken)
+    hb.beat()
+    assert json.loads((tmp_path / HEARTBEAT_FILENAME).read_text())["seq"] == 0
+
+
+# ---------------------------------------------------------------------------
+# crash dumps
+# ---------------------------------------------------------------------------
+
+def test_write_crash_dump_payload(tmp_path):
+    rec = FlightRecorder(capacity=4)
+    rec.record("iteration", i=2)
+    try:
+        raise RuntimeError("boom")
+    except RuntimeError as exc:
+        path = write_crash_dump(tmp_path, exc, recorder=rec,
+                                metrics={"m": {"type": "counter",
+                                               "value": 1.0}},
+                                config={"method": {"name": "cp_als"}},
+                                stage="fit")
+    dump = json.loads(path.read_text())
+    assert dump["error"]["type"] == "RuntimeError"
+    assert dump["error"]["message"] == "boom"
+    assert any("boom" in line for line in dump["error"]["traceback"])
+    assert dump["stage"] == "fit"
+    assert dump["config"]["method"]["name"] == "cp_als"
+    assert dump["events"]["events"][0]["i"] == 2
+
+
+def test_session_fit_writes_crash_dump(tmp_path, monkeypatch):
+    def boom(session):
+        raise RuntimeError("synthetic executor failure")
+
+    monkeypatch.setitem(EXECUTORS, "local",
+                        dataclasses.replace(EXECUTORS["local"], fn=boom))
+    with scoped_registry():
+        sess = live_session(tmp_path)
+        with pytest.raises(RuntimeError, match="synthetic"):
+            sess.fit()
+    dump = json.loads((tmp_path / "trace" / CRASH_FILENAME).read_text())
+    assert dump["error"]["type"] == "RuntimeError"
+    assert dump["stage"] == "fit"
+    assert dump["config"]["method"]["rank"] == 4
+    assert "metrics" in dump and "events" in dump
+
+
+# ---------------------------------------------------------------------------
+# the live session: acceptance — live /metrics matches final metrics.json
+# ---------------------------------------------------------------------------
+
+def test_live_fit_metrics_match_final_export(tmp_path):
+    with scoped_registry():
+        sess = live_session(tmp_path, http_port=0, heartbeat_s=30.0,
+                            events_buffer=64)
+        sess.fit()
+        srv = sess.exposition()
+        assert srv is sess.exposition()  # started once, cached
+        live = urllib.request.urlopen(f"{srv.url}/metrics",
+                                      timeout=10).read().decode()
+        hz = http_json(f"{srv.url}/healthz")
+        tr = http_json(f"{srv.url}/trace")
+        sess.close()
+    assert hz["status"] == "ok"
+    assert {"mttkrp", "epilogue"} <= set(tr["routines"]["routines"])
+    final = json.loads(
+        (tmp_path / "trace" / "metrics.json").read_text())
+    # THE acceptance check: the live scrape and the exported snapshot
+    # agree on the fit counters
+    iters = final["fit.iterations"]["value"]
+    assert iters == 3.0
+    assert f"fit_iterations {iters}" in live
+    count = final["fit.iteration_ms"]["count"]
+    assert f"fit_iteration_ms_count {count}" in live
+    # heartbeat + flight-recorder artifacts landed next to the trace
+    hb = json.loads((tmp_path / "trace" / HEARTBEAT_FILENAME).read_text())
+    assert hb["metrics"]["fit.iterations"]["value"] == 3.0
+    kinds = {json.loads(l)["kind"] for l in
+             (tmp_path / "trace" / EVENTS_FILENAME).read_text().splitlines()}
+    assert {"iteration", "plan"} <= kinds
+    # close() is idempotent and tears the endpoint down
+    sess.close()
+    with pytest.raises(urllib.error.URLError):
+        urllib.request.urlopen(f"{srv.url}/healthz", timeout=1)
+
+
+def test_session_without_live_config_has_no_surfaces(tmp_path):
+    with scoped_registry():
+        sess = live_session(tmp_path)  # trace_dir only
+        sess.fit()
+        assert sess.exposition() is None
+        sess.close()  # no-op
+    d = tmp_path / "trace"
+    assert not (d / HEARTBEAT_FILENAME).exists()
+    assert not (d / CRASH_FILENAME).exists()
+
+
+def test_serve_benchmark_records_qps_gauge(tmp_path):
+    with scoped_registry() as registry:
+        sess = live_session(tmp_path)
+        sess.fit()
+        bench = sess.serve_handle().benchmark(queries=64, batch=16)
+        qps = registry.gauge("serve.qps").value
+        assert qps is not None and qps == pytest.approx(bench["qps"])
+        assert registry.histogram("serve.query_ms").count > 0
+
+
+# ---------------------------------------------------------------------------
+# Histogram edge cases (merge prerequisites)
+# ---------------------------------------------------------------------------
+
+def test_percentile_on_empty_window():
+    h = Histogram()
+    assert h.percentile(50) is None
+    assert h.summary()["p50"] is None
+    assert window_percentile([], 99) is None
+    state = h.state()
+    assert state["window"] == [] and state["count"] == 0
+
+
+def test_histogram_state_carries_window_and_bound():
+    h = Histogram(window=4)
+    for v in (1.0, 2.0, 3.0, 4.0, 5.0):
+        h.observe(v)
+    s = h.state()
+    assert s["window"] == [2.0, 3.0, 4.0, 5.0]  # oldest dropped
+    assert s["window_size"] == 4
+    assert s["count"] == 5 and s["total"] == 15.0  # exact over ALL obs
+
+
+def test_merge_two_windowed_histograms_preserves_window_bound():
+    a, b = Histogram(window=4), Histogram(window=8)
+    for v in (1.0, 2.0, 3.0, 4.0, 100.0):  # 1.0 falls out of a's window
+        a.observe(v)
+    for v in (5.0, 6.0):
+        b.observe(v)
+    ra, rb = MetricsRegistry(), MetricsRegistry()
+    ra._instruments["h"], rb._instruments["h"] = a, b
+    merged = merge_snapshots({"h0": ra.snapshot(with_window=True),
+                              "h1": rb.snapshot(with_window=True)})["h"]
+    assert merged["count"] == 7  # exact counts sum across hosts
+    assert merged["total"] == pytest.approx(121.0)
+    assert merged["min"] == 1.0 and merged["max"] == 100.0
+    # merged retention = the LARGEST per-host bound, most recent kept
+    assert merged["window_size"] == 8
+    assert merged["p50"] is not None
+    assert merged["hosts"]["h0"]["count"] == 5
+
+
+def test_counter_and_gauge_merge_across_host_labels():
+    ra, rb = MetricsRegistry(), MetricsRegistry()
+    ra.counter("hits").inc(3)
+    rb.counter("hits").inc(7)
+    ra.gauge("fit.fit").set(0.5)
+    rb.gauge("fit.fit").set(0.9)
+    merged = merge_snapshots({"a": ra.snapshot(with_window=True),
+                              "b": rb.snapshot(with_window=True)})
+    # counters SUM and keep the per-host breakdown
+    assert merged["hits"]["value"] == 10.0
+    assert merged["hits"]["hosts"] == {"a": 3.0, "b": 7.0}
+    # gauges never sum: per-host labels, last (sorted) host's value on top
+    assert merged["fit.fit"]["hosts"] == {"a": 0.5, "b": 0.9}
+    assert merged["fit.fit"]["value"] == 0.9
+
+
+def test_merge_type_conflict_raises():
+    ra, rb = MetricsRegistry(), MetricsRegistry()
+    ra.counter("x").inc()
+    rb.gauge("x").set(1.0)
+    with pytest.raises(ValueError, match="refusing to merge"):
+        merge_snapshots({"a": ra.snapshot(), "b": rb.snapshot()})
+
+
+# ---------------------------------------------------------------------------
+# per-host files + directory aggregation
+# ---------------------------------------------------------------------------
+
+def test_write_host_metrics_and_aggregate_dir(tmp_path):
+    for host, n in (("host0-p0", 2), ("host1-p0", 5)):
+        reg = MetricsRegistry()
+        reg.counter("fit.iterations").inc(n)
+        reg.histogram("fit.iteration_ms").observe(float(n))
+        write_host_metrics(tmp_path, host, registry=reg)
+    agg = aggregate_dir(tmp_path, write=True)
+    assert agg["hosts"] == ["host0-p0", "host1-p0"]
+    assert agg["metrics"]["fit.iterations"]["value"] == 7.0
+    assert agg["metrics"]["fit.iteration_ms"]["count"] == 2
+    on_disk = json.loads((tmp_path / AGGREGATED_FILENAME).read_text())
+    assert on_disk == agg
+    # re-aggregating must not ingest its own output as a host file
+    assert aggregate_dir(tmp_path)["hosts"] == ["host0-p0", "host1-p0"]
+
+
+def test_aggregate_dir_empty_is_none(tmp_path):
+    assert aggregate_dir(tmp_path) is None
+
+
+def test_merge_files_explicit_list(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("c").inc()
+    p = write_host_metrics(tmp_path, "solo", registry=reg)
+    merged = merge_files([p])
+    assert merged["hosts"] == ["solo"]
+    assert merged["metrics"]["c"]["value"] == 1.0
+
+
+def test_export_obs_aggregates_host_files(tmp_path):
+    with scoped_registry():
+        sess = live_session(tmp_path)
+        sess.fit()
+        # simulate a second host having dropped its snapshot in the dir
+        other = MetricsRegistry()
+        other.counter("fit.iterations").inc(3)
+        write_host_metrics(tmp_path / "trace", "peer-p1", registry=other)
+        sess.export_obs()
+    agg = json.loads(
+        (tmp_path / "trace" / AGGREGATED_FILENAME).read_text())
+    assert "peer-p1" in agg["hosts"]
+    assert agg["metrics"]["fit.iterations"]["value"] == 3.0
+
+
+# ---------------------------------------------------------------------------
+# ObsConfig phase-2 fields
+# ---------------------------------------------------------------------------
+
+def test_obs_config_live_field_validation():
+    with pytest.raises(ConfigError, match="obs.http_port"):
+        ObsConfig(enabled=True, http_port=70000)
+    with pytest.raises(ConfigError, match="obs.http_port"):
+        ObsConfig(enabled=False, http_port=9100)  # needs enabled
+    with pytest.raises(ConfigError, match="obs.heartbeat_s"):
+        ObsConfig(enabled=True, heartbeat_s=-1.0)
+    with pytest.raises(ConfigError, match="obs.heartbeat_s"):
+        ObsConfig(enabled=True, heartbeat_s=5.0)  # needs trace_dir
+    with pytest.raises(ConfigError, match="obs.events_buffer"):
+        ObsConfig(events_buffer=0)
+    ok = ObsConfig(enabled=True, trace_dir="t", http_port=0,
+                   heartbeat_s=0.5, events_buffer=16)
+    assert ok.http_port == 0
+
+
+def test_obs_config_live_fields_roundtrip():
+    cfg = RunConfig(obs=ObsConfig(enabled=True, trace_dir="t",
+                                  http_port=9100, heartbeat_s=2.0,
+                                  events_buffer=256))
+    back = RunConfig.from_json(cfg.to_json())
+    assert back == cfg
+    assert back.obs.http_port == 9100
+    # defaults stay default (golden tripwire covers the file itself)
+    d = RunConfig().to_dict()["obs"]
+    assert d["http_port"] is None
+    assert d["heartbeat_s"] == 0.0
+    assert d["events_buffer"] == 1024
+
+
+def test_cli_live_flags_map_to_obs_config(tmp_path):
+    import argparse
+
+    from repro.api.cli import config_from_args
+
+    base = dict(config=None, source=None, dataset="yelp", scale=None,
+                data_seed=None, reorder=None, compact=None, cache=None,
+                impl=None, calibrate=None, method=None, rank=[4], iters=None,
+                tol=None, seed=None, option=None, executor=None,
+                checkpoint_dir=None, checkpoint_every=None, monitor=None,
+                n_chunks=None, chunk_nnz=None)
+    ns = argparse.Namespace(**base, trace_dir=str(tmp_path / "t"),
+                            trace_split=None, http_port=0, heartbeat_s=1.5,
+                            events_buffer=32)
+    cfg = config_from_args(ns)
+    assert cfg.obs.enabled and cfg.obs.http_port == 0
+    assert cfg.obs.heartbeat_s == 1.5 and cfg.obs.events_buffer == 32
+    # --http-port alone implies obs.enabled (like --trace-dir)
+    ns = argparse.Namespace(**base, trace_dir=None, trace_split=None,
+                            http_port=9100, heartbeat_s=None,
+                            events_buffer=None)
+    assert config_from_args(ns).obs.enabled
+
+
+def test_cli_metrics_subcommand(tmp_path, capsys):
+    from repro.api.cli import main
+
+    with scoped_registry():
+        sess = live_session(tmp_path)
+        sess.fit()
+    assert main(["metrics", str(tmp_path / "trace")]) == 0
+    out = capsys.readouterr().out
+    assert "# metrics" in out and "fit.iterations" in out
+    # exit 2 on a dir with no metrics.json, matching the trace CLI
+    assert main(["metrics", str(tmp_path / "nope")]) == 2
+    assert "metrics.json" in capsys.readouterr().err
+
+
+# ---------------------------------------------------------------------------
+# event feeds: instrumented modules -> the active recorder
+# ---------------------------------------------------------------------------
+
+def test_straggler_escalation_records_event():
+    from repro.dist import StragglerMonitor
+
+    rec = FlightRecorder(capacity=16)
+    mon = StragglerMonitor(window=4, threshold=1.5, patience=2, warmup=2)
+    with rec.activate(), scoped_registry():
+        for _ in range(4):
+            mon.record(0, 1.0)
+            mon.record(1, 10.0)
+        mon.check()
+    events = rec.events(kind="straggler")
+    assert events and events[0]["host"] == 1
+    assert events[0]["flag"] in ("slow", "persistent")
+
+
+def test_ingest_cache_records_events(tmp_path):
+    from repro.ingest import ingest
+
+    rec = FlightRecorder(capacity=16)
+    with rec.activate(), scoped_registry():
+        ingest(lowrank(), cache=str(tmp_path / "cache"))  # miss
+        ingest(lowrank(), cache=str(tmp_path / "cache"))  # hit
+    events = rec.events(kind="cache")
+    hits = [e["hit"] for e in events if e["store"] == "ingest"]
+    assert False in hits and True in hits
+
+
+# ---------------------------------------------------------------------------
+# ratchet regression attribution
+# ---------------------------------------------------------------------------
+
+def _cpals_cell(mttkrp=0.05, sort=0.01, epilogue=0.03):
+    total = sort + mttkrp + epilogue + 0.01
+    return {"total_s": total, "epilogue_s": epilogue,
+            "routines_s": {"sort": sort, "mttkrp": mttkrp, "ata": 0.004,
+                           "inverse": 0.003, "norm": 0.002, "fit": 0.001}}
+
+
+def test_attribute_cells_names_regressed_routine():
+    benchmarks = pytest.importorskip("benchmarks.attribute")
+    base = {"cells": {"yelp/segment": _cpals_cell()}}
+    head = {"cells": {"yelp/segment": _cpals_cell(mttkrp=0.15)}}
+    out = benchmarks.attribute_cells(base, head)
+    cell = out["yelp/segment"]
+    assert cell["culprit"] == "mttkrp"
+    top = cell["routines"][0]
+    assert top["routine"] == "mttkrp"
+    assert top["share"] == pytest.approx(1.0)
+    # a within-tolerance cell is not attributed
+    assert benchmarks.attribute_cells(base, base) == {}
+
+
+def test_attribute_section_and_ratchet_flag(tmp_path, capsys):
+    attribute = pytest.importorskip("benchmarks.attribute")
+    history = pytest.importorskip("benchmarks.history")
+    ratchet = pytest.importorskip("benchmarks.ratchet")
+
+    history.append_record(
+        "cpals", {"cells": {"yelp/segment": _cpals_cell()}},
+        history_dir=tmp_path, sha="aaaaaaa", anchor=True)
+    history.append_record(
+        "cpals", {"cells": {"yelp/segment": _cpals_cell(sort=0.08)}},
+        history_dir=tmp_path, sha="bbbbbbb")
+    att = attribute.attribute_section("cpals", history_dir=tmp_path)
+    assert att["kind"] == "routines" and att["culprit"] == "sort"
+    text = attribute.format_attribution(att)
+    assert "culprit routine = sort" in text
+
+    rc = ratchet.main(["--history", str(tmp_path), "--section", "cpals",
+                       "--attribute",
+                       "--json", str(tmp_path / "verdicts.json")])
+    assert rc == 1
+    assert "culprit routine = sort" in capsys.readouterr().out
+    verdicts = json.loads((tmp_path / "verdicts.json").read_text())
+    assert verdicts[0]["attribution"]["culprit"] == "sort"
+
+
+def test_attribute_section_metric_fallback(tmp_path):
+    attribute = pytest.importorskip("benchmarks.attribute")
+    history = pytest.importorskip("benchmarks.history")
+
+    history.append_record("serve", {"serve_s": 1.0,
+                                    "latency_ms_per_batch": 2.0},
+                          history_dir=tmp_path, sha="aaaaaaa", anchor=True)
+    history.append_record("serve", {"serve_s": 2.0,
+                                    "latency_ms_per_batch": 2.0},
+                          history_dir=tmp_path, sha="bbbbbbb")
+    att = attribute.attribute_section("serve", history_dir=tmp_path)
+    assert att["kind"] == "metrics"
+    assert att["culprit"] == "serve.query"
+    assert att["metrics"][0]["metric"] == "serve_s"
+
+
+def test_attribute_section_needs_two_records(tmp_path):
+    attribute = pytest.importorskip("benchmarks.attribute")
+    history = pytest.importorskip("benchmarks.history")
+
+    assert attribute.attribute_section("cpals",
+                                       history_dir=tmp_path) is None
+    history.append_record("cpals", {"cells": {}}, history_dir=tmp_path)
+    assert attribute.attribute_section("cpals",
+                                       history_dir=tmp_path) is None
+
+
+def test_attribute_traces_diffs_trace_dirs(tmp_path):
+    attribute = pytest.importorskip("benchmarks.attribute")
+
+    with scoped_registry():
+        live_session(tmp_path / "base").fit()
+    with scoped_registry():
+        cfg = RunConfig(method=MethodConfig(rank=4, niters=6, seed=0),
+                        obs=ObsConfig(enabled=True,
+                                      trace_dir=str(tmp_path / "head"
+                                                    / "trace")))
+        Session.from_config(cfg, tensor=lowrank()).fit()
+    att = attribute.attribute_traces(tmp_path / "base" / "trace",
+                                     tmp_path / "head" / "trace")
+    assert att["kind"] == "traces"
+    assert att["culprit"] in {"sort", "mttkrp", "epilogue"}
+    assert any(r["delta_s"] > 0 for r in att["routines"])
