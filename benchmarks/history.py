@@ -183,8 +183,18 @@ def _metrics_obs(s: dict) -> dict:
 
 
 def _metrics_serve(s: dict) -> dict:
-    return {"serve_s": s.get("serve_s"),
-            "latency_ms_per_batch": s.get("latency_ms_per_batch")}
+    # single-caller ServeHandle metrics plus (PR 10) the concurrent
+    # DecompServer section's per-tenant tail latencies — all
+    # lower-is-better.  qps/qps_ratio/batch_fill are higher-is-better and
+    # deliberately absent; older anchors lack the per-tenant keys and
+    # compare_metrics skips non-shared metrics, so history stays green.
+    out = {"serve_s": s.get("serve_s"),
+           "latency_ms_per_batch": s.get("latency_ms_per_batch"),
+           "concurrent_s": s.get("concurrent_s")}
+    for k, v in s.items():
+        if k.endswith("_p50_ms") or k.endswith("_p99_ms"):
+            out[k] = v
+    return out
 
 
 @dataclasses.dataclass(frozen=True)

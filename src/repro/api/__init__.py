@@ -1,7 +1,7 @@
 """repro.api — the single public API over the decomposition stack.
 
     config.py    RunConfig = DataConfig + PlanConfig + MethodConfig +
-                 ExecConfig + ObsConfig: frozen, validated,
+                 ExecConfig + ObsConfig + ServeConfig: frozen, validated,
                  JSON-round-trippable
     executor.py  ExecutorSpec registry (local / dist / streaming) + the one
                  method-capability gate (require_capability)
@@ -18,14 +18,14 @@ back-compat (``repro.models``, ``repro.optim``, the LM arch presets in
 callers should enter through this package.
 """
 from .config import (ConfigError, DataConfig, ExecConfig, MethodConfig,
-                     ObsConfig, PlanConfig, RunConfig)
+                     ObsConfig, PlanConfig, RunConfig, ServeConfig)
 from .executor import (EXECUTORS, ExecutorSpec, executor_matrix, get_executor,
                        register_executor, require_capability)
 from .session import ServeHandle, Session, run
 
 __all__ = [
     "ConfigError", "DataConfig", "PlanConfig", "MethodConfig", "ExecConfig",
-    "ObsConfig", "RunConfig",
+    "ObsConfig", "ServeConfig", "RunConfig",
     "EXECUTORS", "ExecutorSpec", "executor_matrix", "get_executor",
     "register_executor", "require_capability",
     "ServeHandle", "Session", "run",

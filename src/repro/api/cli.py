@@ -6,6 +6,7 @@
     python -m repro plan    --dataset yelp --scale 0.002 --rank 35
     python -m repro fit     --config run.json [--dryrun]
     python -m repro serve   --dataset yelp --scale 0.002 --queries 2048
+    python -m repro serve-daemon --dataset yelp --scale 0.002 --port 9300
     python -m repro dryrun  --workload cpals-yelp --mesh single
     python -m repro fit     --dataset yelp --trace-dir artifacts/trace
     python -m repro trace   artifacts/trace   # Table-III-style breakdown
@@ -145,6 +146,21 @@ def _add_config_args(p: argparse.ArgumentParser) -> None:
     g.add_argument("--events-buffer", type=int, default=None, metavar="N",
                    help="flight-recorder ring capacity (events kept for "
                         "crash dumps / events.jsonl; default 1024)")
+    g = p.add_argument_group("serve")
+    g.add_argument("--port", type=int, default=None, metavar="PORT",
+                   help="serve-daemon HTTP port (0 = ephemeral)")
+    g.add_argument("--tenants", nargs="+", default=None, metavar="ID",
+                   help="tenant ids to publish the fit under "
+                        "(default: default)")
+    g.add_argument("--serve-workers", type=int, default=None, metavar="N",
+                   help="batch-executing worker threads")
+    g.add_argument("--max-wait-ms", type=float, default=None, metavar="MS",
+                   help="batch coalescing window from the first request")
+    g.add_argument("--buckets", type=int, nargs="+", default=None,
+                   metavar="N", help="padded batch-size buckets "
+                                     "(strictly increasing)")
+    g.add_argument("--budget-mb", type=float, default=None, metavar="MB",
+                   help="registry resident-bytes LRU eviction budget")
 
 
 def config_from_args(args: argparse.Namespace) -> RunConfig:
@@ -166,7 +182,7 @@ def config_from_args(args: argparse.Namespace) -> RunConfig:
                 f"{type(base).__name__}")
     else:
         base = {}
-    for section in ("data", "plan", "method", "exec", "obs"):
+    for section in ("data", "plan", "method", "exec", "obs", "serve"):
         base.setdefault(section, {})
         if not isinstance(base[section], dict):
             # catch before flag overlay: put() below would TypeError on it
@@ -229,6 +245,14 @@ def config_from_args(args: argparse.Namespace) -> RunConfig:
         base["obs"]["http_port"] = args.http_port
     put("obs", "heartbeat_s", getattr(args, "heartbeat_s", None))
     put("obs", "events_buffer", getattr(args, "events_buffer", None))
+    put("serve", "port", getattr(args, "port", None))
+    if getattr(args, "tenants", None):
+        base["serve"]["tenants"] = tuple(args.tenants)
+    put("serve", "workers", getattr(args, "serve_workers", None))
+    put("serve", "max_wait_ms", getattr(args, "max_wait_ms", None))
+    if getattr(args, "buckets", None):
+        base["serve"]["buckets"] = tuple(args.buckets)
+    put("serve", "max_resident_mb", getattr(args, "budget_mb", None))
     return RunConfig.from_dict(base)
 
 
@@ -340,6 +364,36 @@ def cmd_serve(args) -> int:
     return 0
 
 
+def cmd_serve_daemon(args) -> int:
+    """Fit (or load) the configured decomposition, publish it under every
+    ``serve.tenants`` id, and serve the HTTP query API until
+    ``POST /v1/shutdown`` (or ``--duration-s``)."""
+    from repro.serve import ServeDaemon
+
+    from .session import Session
+
+    cfg = config_from_args(args)
+    sess = Session.from_config(cfg)
+    print(f"# serve-daemon: {cfg.summary()}")
+    try:
+        server = sess.decomp_server()  # fit + publish cfg.serve.tenants
+        daemon = ServeDaemon(server, port=cfg.serve.port or 0).start()
+        print(f"# serving {list(cfg.serve.tenants)} at {daemon.url}  "
+              f"(GET /healthz /metrics /v1/tenants "
+              f"/v1/top_k?tenant=&user=&k=; POST /v1/values_at "
+              f"/v1/shutdown)", flush=True)
+        try:
+            daemon.serve_until_shutdown(duration_s=args.duration_s)
+        finally:
+            daemon.stop()
+        stats = server.stats()
+        print(f"# shutdown: {stats['batches_executed']} batches executed, "
+              f"queue depth {stats['queue_depth']}")
+    finally:
+        sess.close()
+    return 0
+
+
 def cmd_trace(args) -> int:
     """Table-III-style per-routine breakdown of a recorded trace dir."""
     from repro.obs.report import trace_report
@@ -436,6 +490,15 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
             p.add_argument("--queries", type=int, default=2048)
             p.add_argument("--batch", type=int, default=256)
         p.set_defaults(fn=fn)
+
+    p = sub.add_parser(
+        "serve-daemon",
+        help="fit, publish under serve.tenants, and serve the HTTP query "
+             "API (repro.serve.DecompServer) until POST /v1/shutdown")
+    _add_config_args(p)
+    p.add_argument("--duration-s", type=float, default=None, metavar="S",
+                   help="exit after S seconds even without /v1/shutdown")
+    p.set_defaults(fn=cmd_serve_daemon)
 
     p = sub.add_parser(
         "trace",

@@ -1,6 +1,6 @@
 """Declarative run configuration — the one parameter surface for the stack.
 
-A decomposition run is five frozen dataclasses composed into a
+A decomposition run is six frozen dataclasses composed into a
 :class:`RunConfig`:
 
     RunConfig(
@@ -51,7 +51,7 @@ def _require(cond: bool, section: str, field: str, msg: str) -> None:
 
 
 # ---------------------------------------------------------------------------
-# the five sections
+# the sections
 # ---------------------------------------------------------------------------
 
 
@@ -356,6 +356,64 @@ class ObsConfig:
                  f"must be >= 1, got {self.events_buffer!r}")
 
 
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """The serving layer (``repro.serve``): continuous batching + tenancy.
+
+    ``buckets`` are the padded batch sizes the worker coalesces into
+    (strictly increasing; each bucket shape jits exactly once, and
+    anything larger than the last bucket is chunked).  ``max_wait_ms`` is
+    the coalescing window measured from the first request in a batch —
+    the latency a caller trades for batch fill.  ``workers`` is the
+    number of batch-executing threads.  ``tenants`` names the models
+    ``serve-daemon`` publishes from the session's fit; ``max_resident_mb``
+    is the registry's LRU eviction budget over all resident models.
+    ``port`` binds the daemon's HTTP frontend (0 = ephemeral, read back
+    from ``ServeDaemon.port``; None = library use, no HTTP)."""
+
+    _section = "serve"
+
+    buckets: tuple[int, ...] = (16, 64, 256)
+    max_wait_ms: float = 2.0
+    workers: int = 1
+    tenants: tuple[str, ...] = ("default",)
+    max_resident_mb: float = 256.0
+    port: Optional[int] = None
+
+    def __post_init__(self):
+        _canon_field(self, "buckets")
+        _canon_field(self, "tenants")
+        s = self._section
+        _require(len(self.buckets) > 0, s, "buckets",
+                 "need at least one batch bucket")
+        _require(all(isinstance(b, int) and b > 0 for b in self.buckets),
+                 s, "buckets",
+                 f"bucket sizes must be positive ints, got {self.buckets}")
+        _require(all(a < b for a, b in zip(self.buckets, self.buckets[1:])),
+                 s, "buckets",
+                 f"bucket sizes must be strictly increasing, "
+                 f"got {self.buckets}")
+        _require(self.max_wait_ms >= 0.0, s, "max_wait_ms",
+                 f"must be >= 0 (0 = no coalescing wait), "
+                 f"got {self.max_wait_ms}")
+        _require(isinstance(self.workers, int) and self.workers >= 1,
+                 s, "workers", f"must be >= 1, got {self.workers!r}")
+        _require(len(self.tenants) > 0, s, "tenants",
+                 "need at least one tenant id")
+        _require(all(isinstance(t, str) and t for t in self.tenants),
+                 s, "tenants",
+                 f"tenant ids must be non-empty strings, got {self.tenants}")
+        _require(len(set(self.tenants)) == len(self.tenants), s, "tenants",
+                 f"tenant ids must be unique, got {self.tenants}")
+        _require(self.max_resident_mb > 0, s, "max_resident_mb",
+                 f"eviction budget must be > 0, got {self.max_resident_mb}")
+        if self.port is not None:
+            _require(isinstance(self.port, int) and 0 <= self.port <= 65535,
+                     s, "port",
+                     f"must be a port in [0, 65535] (0 = ephemeral), "
+                     f"got {self.port!r}")
+
+
 # ---------------------------------------------------------------------------
 # composition + (de)serialization
 # ---------------------------------------------------------------------------
@@ -370,6 +428,7 @@ class RunConfig:
     method: MethodConfig = dataclasses.field(default_factory=MethodConfig)
     exec: ExecConfig = dataclasses.field(default_factory=ExecConfig)
     obs: ObsConfig = dataclasses.field(default_factory=ObsConfig)
+    serve: ServeConfig = dataclasses.field(default_factory=ServeConfig)
 
     def __post_init__(self):
         # the (method, executor) capability gate lives in exactly one place
@@ -423,7 +482,7 @@ class RunConfig:
 
 _SECTIONS = {"data": DataConfig, "plan": PlanConfig,
              "method": MethodConfig, "exec": ExecConfig,
-             "obs": ObsConfig}
+             "obs": ObsConfig, "serve": ServeConfig}
 
 
 def _build_section(cls, d: Any, *, path: str):

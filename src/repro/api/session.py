@@ -20,12 +20,14 @@ resumes from the latest complete step — kill-safe long decompositions.
 """
 from __future__ import annotations
 
+import time
 from contextlib import contextmanager
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.obs.metrics import get_registry
+from repro.obs.metrics import Histogram, get_registry
 
 from .config import RunConfig
 from .executor import get_executor, require_capability
@@ -51,6 +53,7 @@ class ServeHandle:
         self.decomp = decomp
         self.dims = dims
         self._qfn = jax.jit(decomp.values_at)
+        self._topk_fns = {}  # (user_mode, item_mode) -> jitted fn, k static
         self._tracer = tracer
 
     def query(self, coords) -> jax.Array:
@@ -60,6 +63,29 @@ class ServeHandle:
                                    batch=int(coords.shape[0])):
                 return self._qfn(coords)
         return self._qfn(coords)
+
+    def top_k_for_user(self, user: int, k: int, *, user_mode: int = 0,
+                       item_mode: int = 1):
+        """``(scores (k,), items (k,))`` — the k best items for one user,
+        scored against ALL items via the factor matrices (item ids in the
+        tensor's ORIGINAL label space).  The multi-tenant batching version
+        lives in :meth:`Session.decomp_server`; this is the direct
+        single-model path."""
+        fn = self._topk_fns.get((user_mode, item_mode))
+        if fn is None:
+            from repro.serve.queries import make_top_k_fn
+
+            fn = jax.jit(make_top_k_fn(self.decomp, user_mode=user_mode,
+                                       item_mode=item_mode),
+                         static_argnums=1)
+            self._topk_fns[(user_mode, item_mode)] = fn
+        users = jnp.asarray([int(user)], dtype=jnp.int32)
+        if self._tracer is not None:
+            with self._tracer.span("serve.top_k", k=int(k)):
+                scores, items = fn(users, int(k))
+        else:
+            scores, items = fn(users, int(k))
+        return scores[0], items[0]
 
     def benchmark(self, *, queries: int, batch: int, seed: int = 0) -> dict:
         """Timed random-coordinate query loop (the serving benchmark the
@@ -74,28 +100,25 @@ class ServeHandle:
         histogram: the ``latency_ms`` dict carries mean/p50/p90/p99 and
         the observations feed the ``serve.query_ms`` histogram in the
         metrics registry."""
-        import time
-
-        import numpy as np
-
-        from repro.obs.metrics import Histogram
-
         rng = np.random.default_rng(seed)
         n_batches = max(1, queries // batch)
+        # n_batches + 1 batches: batch 0 is a DEDICATED warmup/compile
+        # batch, never re-timed — re-timing it would make the first timed
+        # batch warm-cache biased relative to the rest
         coords = jnp.asarray(np.stack(
-            [rng.integers(0, d, (n_batches, batch)) for d in self.dims],
+            [rng.integers(0, d, (n_batches + 1, batch)) for d in self.dims],
             axis=-1).astype(np.int32))
         jax.block_until_ready(self.query(coords[0]))  # warmup/compile
         t0 = time.time()
         out = None
-        for b in range(n_batches):
+        for b in range(1, n_batches + 1):
             out = self.query(coords[b])
         jax.block_until_ready(out)
         serve_s = time.time() - t0
 
         hist = Histogram()
         registry_hist = get_registry().histogram("serve.query_ms")
-        for b in range(min(n_batches, _LATENCY_SAMPLE_BATCHES)):
+        for b in range(1, min(n_batches, _LATENCY_SAMPLE_BATCHES) + 1):
             t1 = time.perf_counter()
             jax.block_until_ready(self.query(coords[b]))
             dt_ms = (time.perf_counter() - t1) * 1e3
@@ -139,6 +162,7 @@ class Session:
         self._heartbeat = None
         self._stage_name = None
         self._ing = None
+        self._server = None
         self._plan = None
         self._plan_done = False
         self._result = None
@@ -215,6 +239,9 @@ class Session:
         the exposition socket closes).  Idempotent; the CLI calls it
         after fit/serve, and both threads are daemons so an unclosed
         session still exits cleanly."""
+        if self._server is not None:
+            self._server.close()
+            self._server = None
         if self._heartbeat is not None:
             self._heartbeat.stop()
             self._heartbeat = None
@@ -478,6 +505,23 @@ class Session:
             self._handle = ServeHandle(dec, tuple(dims),
                                        tracer=self.tracer())
         return self._handle
+
+    def decomp_server(self):
+        """The continuous-batching multi-tenant server
+        (:class:`repro.serve.DecompServer`, cached), configured from the
+        ``serve`` section with this session's fit published under every
+        ``serve.tenants`` id.  Runs fit if needed; ``close()`` drains and
+        stops it."""
+        if self._server is None:
+            from repro.serve import DecompServer
+
+            handle = self.serve_handle()  # fit + original-label dims
+            self._server = DecompServer.from_config(self.cfg.serve)
+            self._stage_name = "serve"
+            for tenant in self.cfg.serve.tenants:
+                self._server.publish(tenant, handle.decomp, handle.dims)
+            self._start_live()
+        return self._server
 
     # -- executor plumbing (consumed by repro.api.executor) ----------------
     def method_key(self):

@@ -1,14 +1,21 @@
-"""Serving launcher: batched prefill + decode with the per-arch KV/state
-caches, plus the decomposition-serving path for the paper's own CP-ALS
-workloads (plan-driven decompose, then batched reconstruction queries).
+"""Serving launcher: the decomposition-serving path for the paper's own
+CP-ALS workloads (plan-driven decompose, then batched reconstruction
+queries), plus the **Legacy LM substrate**'s token-serving loop (batched
+prefill + decode with the per-arch KV/state caches — kept for back-compat
+with the seed's LM archs, like ``repro.models``/``repro.optim``; see
+docs/architecture.md "Legacy LM substrate").
 
-  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --smoke \
-      --batch 4 --prompt-len 32 --gen 16
   PYTHONPATH=src python -m repro.launch.serve --arch cpals-yelp --smoke \
       --batch 256 --queries 2048
+  PYTHONPATH=src python -m repro.launch.serve --arch rwkv6-3b --smoke \
+      --batch 4 --prompt-len 32 --gen 16        # legacy LM path
 
-CPU-sized with --smoke; the production shapes are proven by the dry-run's
-serve_step / cpals cells.
+The decomposition path is the supported one — it drives
+:class:`repro.api.Session`, shares its RunConfig with ``python -m repro
+serve``, and the production serving layer on top of it is
+``repro.serve`` (``python -m repro serve-daemon``).  CPU-sized with
+--smoke; the production shapes are proven by the dry-run's serve_step /
+cpals cells.
 """
 from __future__ import annotations
 
@@ -27,6 +34,9 @@ from repro.models import Model
 
 def serve(arch: str, *, smoke: bool, batch: int, prompt_len: int, gen: int,
           seed: int = 0, greedy: bool = True) -> dict:
+    """**Legacy LM substrate**: token serving (prefill + decode) for the
+    seed's LM archs.  Not the decomposition path — that is
+    :func:`serve_cpd` here and ``repro.serve`` in production."""
     cfg = configs.get(arch)
     if smoke:
         cfg = configs.smoke_of(cfg)
@@ -154,7 +164,10 @@ def serve_cpd(workload: str, *, smoke: bool, batch: int, queries: int,
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True,
-                    choices=tuple(configs.ARCH_NAMES) + tuple(CPALS_DATASET))
+                    choices=tuple(configs.ARCH_NAMES) + tuple(CPALS_DATASET),
+                    help="cpals-<workload> = decomposition serving (the "
+                         "supported path); LM arch names = Legacy LM "
+                         "substrate token serving")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)

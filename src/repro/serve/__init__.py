@@ -1,0 +1,24 @@
+"""repro.serve — async continuous-batching, multi-tenant decomposition
+serving.
+
+The production-consumption half of the reproduction: fitted CP/Tucker
+decompositions become queryable models behind a batching server.
+
+    queries.py   query vocabulary (values_at, top_k) + bucketed padding
+    registry.py  multi-tenant residency: hot-swap, LRU byte-budget eviction
+    queue.py     request queue + coalescing worker threads (futures out)
+    server.py    DecompServer front door + ServeDaemon HTTP frontend
+"""
+from .queries import (QUERY_KINDS, bucket_for, make_score_fn, make_top_k_fn,
+                      pad_rows, resident_bytes)
+from .queue import BatchQueue
+from .registry import DEFAULT_BUCKETS, ModelRegistry, TenantEntry, TenantModel
+from .server import DecompServer, ServeDaemon
+
+__all__ = [
+    "QUERY_KINDS", "DEFAULT_BUCKETS",
+    "bucket_for", "pad_rows", "make_score_fn", "make_top_k_fn",
+    "resident_bytes",
+    "ModelRegistry", "TenantModel", "TenantEntry",
+    "BatchQueue", "DecompServer", "ServeDaemon",
+]

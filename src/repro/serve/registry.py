@@ -1,0 +1,258 @@
+"""Multi-tenant model registry: resident decompositions, hot-swap, LRU.
+
+A serving process holds MANY fitted decompositions — one per tenant — and
+re-fits replace them while queries are in flight.  The registry makes the
+three hard parts explicit:
+
+* **Hot swap is atomic handle replacement.**  ``publish(tenant, decomp)``
+  builds the new :class:`TenantModel` (jit caches and all) OUTSIDE the
+  registry lock, then swaps the entry in one dict assignment.  A worker
+  that already resolved the old entry keeps its reference and finishes on
+  the old handle; the next batch resolves the new one.  Nothing is ever
+  mutated in place.
+
+* **Per-bucket jit caches live with the model.**  ``TenantModel`` owns one
+  jitted ``values_at`` (compiled once per bucket shape) and one jitted
+  ``top_k`` per static k (compiled once per (bucket, k)).  The model
+  counts its own trace events (``compile_count`` — the wrapped function
+  body only runs while jax traces), which is how the tests pin
+  "never more than one variant per bucket" without monkeypatching jax.
+
+* **Eviction is an explicit byte budget.**  Every model's resident bytes
+  (factors + lambda/core) are accounted; when a publish pushes the total
+  over ``budget_bytes`` the least-recently-USED tenants are evicted until
+  it fits (the tenant just published is never the victim — publishing is
+  a use).  A single model larger than the whole budget stays resident:
+  serving nothing is worse than over-budget, and the metrics say so.
+
+Metrics (``repro.obs``): ``serve.registry.models`` /
+``serve.registry.resident_bytes`` gauges, ``serve.registry.swaps`` /
+``serve.registry.evictions`` counters.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import threading
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.obs.metrics import get_registry
+
+from .queries import (bucket_for, make_top_k_fn, pad_rows, resident_bytes)
+
+Array = jax.Array
+
+DEFAULT_BUCKETS = (16, 64, 256)
+
+
+class TenantModel:
+    """One resident decomposition with its per-bucket jit caches.
+
+    ``values_at(coords)`` and ``top_k(users, k)`` accept ANY batch size:
+    the batch is chunked at the largest bucket, each chunk zero-padded up
+    to its bucket, and results are sliced back — so the jitted functions
+    only ever see bucket shapes and each shape compiles exactly once
+    (``compile_count`` proves it).  Immutable once built: a re-fit builds
+    a new model and the registry swaps handles."""
+
+    def __init__(self, decomp, dims: tuple[int, ...], *,
+                 buckets: Sequence[int] = DEFAULT_BUCKETS,
+                 user_mode: int = 0, item_mode: int = 1):
+        self.decomp = decomp
+        self.dims = tuple(int(d) for d in dims)
+        self.buckets = tuple(sorted(int(b) for b in buckets))
+        self.user_mode = user_mode
+        self.item_mode = item_mode
+        self.nbytes = resident_bytes(decomp)
+        self.compile_count = {"values_at": 0, "top_k": 0}
+        # the scoring closure is built OUTSIDE any trace: its per-rank
+        # weights / contracted core must be concrete constants, not
+        # tracers staged by a jit in progress
+        self._top_k_raw = make_top_k_fn(decomp, user_mode=user_mode,
+                                        item_mode=item_mode)
+        self._values_fn = jax.jit(self._traced_values)
+        self._top_k_fn = jax.jit(self._traced_top_k, static_argnums=1)
+
+    # the wrapped bodies run in Python only while jax traces a new input
+    # signature, so these counters ARE the per-model compile counts
+    def _traced_values(self, coords: Array) -> Array:
+        self.compile_count["values_at"] += 1
+        return self.decomp.values_at(coords)
+
+    def _traced_top_k(self, users: Array, k: int):
+        self.compile_count["top_k"] += 1
+        return self._top_k_raw(users, k)
+
+    def _bucketed(self, x, fn, *fn_args):
+        """Chunk-at-max-bucket -> pad-to-bucket -> call -> slice; records
+        the real/padded fill ratio per jitted call.
+
+        All batching logistics — chunking, padding, result slicing and
+        re-assembly — happen HOST-side in numpy.  Only the fixed bucket
+        shapes ever reach the jitted functions: eager device ops on
+        batch-dependent shapes (``o[:take]``, odd-size concatenates) each
+        cost a one-off XLA compile, which is the tail latency bucketing
+        exists to kill.  Results come back as (synced) numpy arrays."""
+        n = int(x.shape[0])
+        fill = get_registry().histogram("serve.batch_fill")
+        if n in self.buckets:
+            # exact-bucket fast path (the common case under continuous
+            # batching): no pad, no slice
+            fill.observe(1.0)
+            return jax.tree_util.tree_map(np.asarray, fn(x, *fn_args))
+        outs = []
+        off = 0
+        while off < n:
+            take = min(n - off, self.buckets[-1])
+            b = bucket_for(take, self.buckets)
+            out = fn(pad_rows(x[off:off + take], b), *fn_args)
+            fill.observe(take / b)
+            outs.append(jax.tree_util.tree_map(
+                lambda o: np.asarray(o)[:take], out))
+            off += take
+        if len(outs) == 1:
+            return outs[0]
+        return jax.tree_util.tree_map(
+            lambda *xs: np.concatenate(xs, axis=0), *outs)
+
+    def values_at(self, coords):
+        """Reconstructed values (n,) as a numpy array."""
+        coords = np.asarray(coords, dtype=np.int32)
+        return self._bucketed(coords, self._values_fn)
+
+    def top_k(self, users, k: int):
+        """(scores (n, k), items (n, k)) — item ids in ORIGINAL labels."""
+        users = np.asarray(users, dtype=np.int32)
+        return self._bucketed(users, self._top_k_fn, int(k))
+
+    def warmup(self) -> None:
+        """Compile the smallest values_at bucket up front so the first
+        real query pays dispatch, not tracing."""
+        b = self.buckets[0]
+        order = len(self.dims)
+        jax.block_until_ready(
+            self._values_fn(jnp.zeros((b, order), dtype=jnp.int32)))
+
+
+@dataclasses.dataclass
+class TenantEntry:
+    """Registry slot: the immutable model plus the mutable bookkeeping the
+    registry updates under its own lock."""
+
+    tenant: str
+    model: TenantModel
+    generation: int
+    last_used: int = 0
+
+
+class ModelRegistry:
+    """Named resident :class:`TenantModel` handles with atomic hot-swap
+    and LRU byte-budget eviction."""
+
+    def __init__(self, *, budget_bytes: Optional[int] = None,
+                 buckets: Sequence[int] = DEFAULT_BUCKETS):
+        self.budget_bytes = budget_bytes
+        self.buckets = tuple(sorted(int(b) for b in buckets))
+        self._lock = threading.Lock()
+        self._entries: dict[str, TenantEntry] = {}
+        self._clock = itertools.count(1)
+        self.evicted: list[str] = []  # names only, for error messages
+
+    # -- publish / resolve -------------------------------------------------
+    def publish(self, tenant: str, decomp, dims: Optional[Sequence[int]] = None,
+                *, user_mode: int = 0, item_mode: int = 1) -> TenantEntry:
+        """Make ``decomp`` the tenant's serving model.  The model (and its
+        jit caches) is built before the lock is taken; the swap itself is
+        one assignment, so readers see either the old complete entry or
+        the new complete entry, never a half-built one."""
+        if dims is None:
+            dims = tuple(int(f.shape[0]) for f in decomp.factors)
+        model = TenantModel(decomp, tuple(dims), buckets=self.buckets,
+                            user_mode=user_mode, item_mode=item_mode)
+        with self._lock:
+            old = self._entries.get(tenant)
+            entry = TenantEntry(tenant=tenant, model=model,
+                                generation=(old.generation + 1) if old else 1,
+                                last_used=next(self._clock))
+            self._entries[tenant] = entry
+            if tenant in self.evicted:
+                self.evicted.remove(tenant)
+            if old is not None:
+                get_registry().counter("serve.registry.swaps").inc()
+            self._evict_over_budget(keep=tenant)
+            self._record_gauges()
+        return entry
+
+    def get(self, tenant: str) -> TenantEntry:
+        """Resolve a tenant (bumps its LRU clock).  Raises ``KeyError``
+        naming the resident set — and whether the tenant was evicted —
+        when absent."""
+        with self._lock:
+            entry = self._entries.get(tenant)
+            if entry is None:
+                state = ("evicted (over the resident-bytes budget)"
+                         if tenant in self.evicted else "not published")
+                raise KeyError(
+                    f"tenant {tenant!r} is {state}; resident: "
+                    f"{sorted(self._entries)}")
+            entry.last_used = next(self._clock)
+            return entry
+
+    def drop(self, tenant: str) -> bool:
+        with self._lock:
+            removed = self._entries.pop(tenant, None) is not None
+            self._record_gauges()
+        return removed
+
+    # -- accounting --------------------------------------------------------
+    def resident_bytes(self) -> int:
+        with self._lock:
+            return self._resident_bytes_locked()
+
+    def _resident_bytes_locked(self) -> int:
+        return sum(e.model.nbytes for e in self._entries.values())
+
+    def _evict_over_budget(self, *, keep: str) -> None:
+        if self.budget_bytes is None:
+            return
+        evictions = get_registry().counter("serve.registry.evictions")
+        while self._resident_bytes_locked() > self.budget_bytes:
+            victims = [e for t, e in self._entries.items() if t != keep]
+            if not victims:
+                # the kept model alone exceeds the budget: stay resident
+                # (serving nothing is worse); the resident_bytes gauge
+                # shows the overrun
+                return
+            victim = min(victims, key=lambda e: e.last_used)
+            del self._entries[victim.tenant]
+            self.evicted.append(victim.tenant)
+            evictions.inc()
+
+    def _record_gauges(self) -> None:
+        reg = get_registry()
+        reg.gauge("serve.registry.models").set(len(self._entries))
+        reg.gauge("serve.registry.resident_bytes").set(
+            self._resident_bytes_locked())
+
+    def tenants(self) -> dict[str, dict]:
+        """JSON-ready summary per resident tenant (the daemon's
+        ``/v1/tenants`` payload)."""
+        with self._lock:
+            return {t: {"generation": e.generation,
+                        "resident_bytes": e.model.nbytes,
+                        "dims": list(e.model.dims),
+                        "fit": float(getattr(e.model.decomp, "fit", float("nan"))),
+                        "buckets": list(e.model.buckets)}
+                    for t, e in sorted(self._entries.items())}
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def __contains__(self, tenant: str) -> bool:
+        with self._lock:
+            return tenant in self._entries

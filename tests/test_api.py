@@ -12,8 +12,8 @@ import numpy as np
 import pytest
 
 from repro.api import (ConfigError, DataConfig, ExecConfig, MethodConfig,
-                       PlanConfig, RunConfig, ServeHandle, Session,
-                       get_executor, require_capability, run)
+                       PlanConfig, RunConfig, ServeConfig, ServeHandle,
+                       Session, get_executor, require_capability, run)
 from conftest import exact_lowrank_tensor
 
 KEY = jax.random.PRNGKey(0)
@@ -79,6 +79,19 @@ def test_list_valued_fields_canonicalize_to_tuples():
     assert RunConfig.from_json(cfg.to_json()) == cfg
 
 
+def test_roundtrip_serve_section_preserves_tuples():
+    cfg = RunConfig(serve=ServeConfig(buckets=[8, 32, 128],
+                                      tenants=["acme", "globex"],
+                                      max_wait_ms=5.0, workers=2,
+                                      max_resident_mb=64.0, port=0))
+    assert cfg.serve.buckets == (8, 32, 128)  # lists canonicalize
+    assert cfg.serve.tenants == ("acme", "globex")
+    back = RunConfig.from_json(cfg.to_json())
+    assert back == cfg
+    assert back.serve.buckets == (8, 32, 128)
+    assert back.to_json() == cfg.to_json()
+
+
 def test_dict_valued_options_keep_identity():
     """Out-param options (the Table III ``timers`` dict) must keep their
     object identity through MethodConfig canonicalization."""
@@ -108,6 +121,15 @@ def test_unknown_key_rejected_with_path_and_suggestion():
     ("method", "tol", -0.1, r"method\.tol"),
     ("exec", "executor", "distt", r"exec\.executor.*'dist'"),
     ("exec", "checkpoint_every", 0, r"exec\.checkpoint_every"),
+    ("serve", "buckets", [64, 16, 256], r"serve\.buckets.*increasing"),
+    ("serve", "buckets", [], r"serve\.buckets"),
+    ("serve", "buckets", [0, 16], r"serve\.buckets.*positive"),
+    ("serve", "workers", 0, r"serve\.workers"),
+    ("serve", "max_wait_ms", -1.0, r"serve\.max_wait_ms"),
+    ("serve", "tenants", [], r"serve\.tenants"),
+    ("serve", "tenants", ["a", "a"], r"serve\.tenants.*unique"),
+    ("serve", "max_resident_mb", 0, r"serve\.max_resident_mb.*budget"),
+    ("serve", "port", 70000, r"serve\.port"),
 ])
 def test_validation_names_the_field(section, field, bad, match):
     with pytest.raises(ConfigError, match=match):
@@ -374,6 +396,55 @@ def test_serve_handle_is_cached():
     assert sess.serve_handle() is h1
     sess.fit(force=True)  # a re-fit invalidates the handle
     assert sess.serve_handle() is not h1
+
+
+def _serve_sessions_natural_vs_reordered(rank=5, niters=25):
+    """Two sessions over the SAME tensor, one ingested naturally and one
+    through degree_sort+compact — the serving surface must answer both in
+    the tensor's ORIGINAL label space."""
+    t = lowrank()
+    nat = Session.from_config(
+        RunConfig(method=MethodConfig(rank=rank, niters=niters)), tensor=t)
+    reo = Session.from_config(
+        RunConfig(data=DataConfig(reorder="degree_sort", compact=True),
+                  method=MethodConfig(rank=rank, niters=niters)), tensor=t)
+    return t, nat, reo
+
+
+def test_serve_labels_survive_reorder_values_at():
+    """Batched values_at from a reordered-ingest session answers in
+    ORIGINAL labels: same coordinate batch, (near-)same values as the
+    natural-order session, and both match the tensor."""
+    t, nat, reo = _serve_sessions_natural_vs_reordered()
+    coords = np.asarray(t.inds[:64])
+    got_nat = np.asarray(nat.serve_handle().query(coords))
+    got_reo = np.asarray(reo.serve_handle().query(coords))
+    np.testing.assert_allclose(got_reo, np.asarray(t.vals[:64]),
+                               rtol=0.05, atol=0.05)
+    np.testing.assert_allclose(got_reo, got_nat, rtol=0.1, atol=0.05)
+
+
+def test_serve_labels_survive_reorder_top_k():
+    """top_k_for_user item ids from a reordered-ingest session are
+    ORIGINAL labels: identical id set/order as the natural session (both
+    converge to the same ground truth) for every user, on the handle AND
+    through the batching DecompServer."""
+    from repro.serve import DecompServer
+
+    t, nat, reo = _serve_sessions_natural_vs_reordered()
+    k = 4
+    for user in range(t.dims[0]):
+        s_nat, i_nat = nat.serve_handle().top_k_for_user(user, k)
+        s_reo, i_reo = reo.serve_handle().top_k_for_user(user, k)
+        np.testing.assert_array_equal(np.asarray(i_reo), np.asarray(i_nat))
+        np.testing.assert_allclose(np.asarray(s_reo), np.asarray(s_nat),
+                                   rtol=0.05, atol=0.05)
+    with DecompServer(buckets=(8,), max_wait_ms=0.5) as srv:
+        srv.publish("reo", reo.serve_handle().decomp, reo.serve_handle().dims)
+        scores, items = srv.top_k_for_user("reo", 0, k=k)
+        _, ref_items = nat.serve_handle().top_k_for_user(0, k)
+        np.testing.assert_array_equal(np.asarray(items),
+                                      np.asarray(ref_items))
 
 
 def test_unknown_method_option_rejected_with_field_path():

@@ -1,0 +1,487 @@
+"""repro.serve: bucketed padding, top-k scoring math (CP + Tucker),
+registry hot-swap/eviction, continuous-batching queue semantics,
+compile-once-per-bucket, concurrent correctness under load, DecompServer
+front door, and the ServeDaemon HTTP surface."""
+import threading
+import time
+from concurrent.futures import wait
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import MethodConfig, RunConfig, ServeConfig, Session
+from repro.methods import fit as methods_fit
+from repro.obs.metrics import MetricsRegistry, scoped_registry
+from repro.serve import (BatchQueue, DecompServer, ModelRegistry, ServeDaemon,
+                         TenantModel, bucket_for, make_score_fn, pad_rows,
+                         resident_bytes)
+from conftest import exact_lowrank_tensor
+
+KEY = jax.random.PRNGKey(0)
+
+
+def lowrank(dims=(10, 9, 8), rank=3, key=KEY):
+    return exact_lowrank_tensor(dims, rank, key)
+
+
+@pytest.fixture(scope="module")
+def cp():
+    """One fitted CP decomposition shared by the module (fits are the
+    slow part; every consumer treats it as immutable)."""
+    return methods_fit(lowrank(), 4, niters=15, key=KEY)
+
+
+@pytest.fixture(scope="module")
+def tucker():
+    return methods_fit(lowrank(), 3, method="tucker_hooi", niters=10,
+                       key=KEY)
+
+
+# ---------------------------------------------------------------------------
+# bucketed padding
+# ---------------------------------------------------------------------------
+
+def test_bucket_for_picks_smallest_fitting():
+    assert bucket_for(1, (16, 64, 256)) == 16
+    assert bucket_for(16, (16, 64, 256)) == 16
+    assert bucket_for(17, (16, 64, 256)) == 64
+    assert bucket_for(256, (16, 64, 256)) == 256
+    with pytest.raises(ValueError, match="chunk before bucketing"):
+        bucket_for(257, (16, 64, 256))
+
+
+def test_pad_rows_zero_pads_and_noops_at_size():
+    x = np.ones((3, 2), dtype=np.float32)
+    padded = pad_rows(x, 8)
+    assert padded.shape == (8, 2)
+    assert isinstance(padded, np.ndarray)  # host-side: no eager device op
+    np.testing.assert_array_equal(padded[3:], 0.0)
+    assert pad_rows(x, 3) is x
+
+
+# ---------------------------------------------------------------------------
+# top-k scoring math vs dense reconstruction
+# ---------------------------------------------------------------------------
+
+def _dense_scores(dec, user_mode=0, item_mode=1):
+    """Reference: reconstruct the FULL tensor, sum out every mode except
+    user/item, read the matrix."""
+    order = len(dec.factors)
+    dims = [f.shape[0] for f in dec.factors]
+    grids = jnp.meshgrid(*[jnp.arange(d) for d in dims], indexing="ij")
+    inds = jnp.stack([g.reshape(-1) for g in grids], 1).astype(jnp.int32)
+    full = dec.values_at(inds).reshape(dims)
+    axes = tuple(m for m in range(order) if m not in (user_mode, item_mode))
+    mat = jnp.sum(full, axis=axes)
+    if user_mode > item_mode:
+        mat = mat.T
+    return np.asarray(mat)
+
+
+@pytest.mark.parametrize("kind", ["cp", "tucker"])
+def test_score_fn_matches_dense_marginal(kind, cp, tucker):
+    dec = cp if kind == "cp" else tucker
+    ref = _dense_scores(dec)
+    got = np.asarray(make_score_fn(dec)(jnp.arange(10)))
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_score_fn_nondefault_modes(cp):
+    ref = _dense_scores(cp, user_mode=2, item_mode=0)
+    got = np.asarray(make_score_fn(cp, user_mode=2, item_mode=0)(
+        jnp.arange(8)))
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_score_fn_rejects_bad_modes_and_types(cp):
+    with pytest.raises(ValueError, match="distinct modes"):
+        make_score_fn(cp, user_mode=1, item_mode=1)
+    with pytest.raises(ValueError, match="distinct modes"):
+        make_score_fn(cp, user_mode=0, item_mode=3)
+    with pytest.raises(TypeError, match="CP .* or Tucker"):
+        make_score_fn(object())
+
+
+def test_top_k_clamps_k_to_items(cp):
+    model = TenantModel(cp, (10, 9, 8), buckets=(4,))
+    scores, items = model.top_k(jnp.arange(2), 99)
+    assert scores.shape == (2, 9) and items.shape == (2, 9)
+
+
+def test_resident_bytes_counts_factors_and_aux(cp, tucker):
+    want = sum(np.asarray(f).nbytes for f in cp.factors) \
+        + np.asarray(cp.lmbda).nbytes
+    assert resident_bytes(cp) == want
+    want_t = sum(np.asarray(f).nbytes for f in tucker.factors) \
+        + np.asarray(tucker.core).nbytes
+    assert resident_bytes(tucker) == want_t
+
+
+# ---------------------------------------------------------------------------
+# TenantModel: compile-once-per-bucket
+# ---------------------------------------------------------------------------
+
+def test_values_at_compiles_once_per_bucket(cp):
+    t = lowrank()
+    model = TenantModel(cp, t.dims, buckets=(4, 16))
+    rng = np.random.default_rng(0)
+    for n in (1, 3, 4, 5, 16, 2, 40, 16, 7):
+        coords = np.stack([rng.integers(0, d, n) for d in t.dims],
+                          -1).astype(np.int32)
+        got = model.values_at(coords)
+        ref = cp.values_at(jnp.asarray(coords))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-6)
+    # sizes hit both buckets many times over; each jits exactly once
+    assert model.compile_count["values_at"] == 2
+
+
+def test_top_k_compiles_once_per_bucket_and_k(cp):
+    model = TenantModel(cp, (10, 9, 8), buckets=(4, 16))
+    for n in (1, 2, 4, 9, 16, 3):
+        model.top_k(jnp.arange(n), 3)
+    assert model.compile_count["top_k"] == 2  # buckets 4 and 16, one k
+    model.top_k(jnp.arange(2), 5)  # new static k -> one more variant
+    assert model.compile_count["top_k"] == 3
+
+
+def test_oversize_batch_chunks_at_largest_bucket(cp):
+    t = lowrank()
+    model = TenantModel(cp, t.dims, buckets=(4, 8))
+    coords = np.asarray(t.inds[:30])
+    got = model.values_at(coords)
+    assert got.shape == (30,)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(cp.values_at(t.inds[:30])),
+                               rtol=1e-5, atol=1e-6)
+    scores, items = model.top_k(jnp.arange(10) % 10, 3)
+    assert scores.shape == (10, 3)
+    assert model.compile_count["values_at"] <= 2
+
+
+# ---------------------------------------------------------------------------
+# ModelRegistry: hot-swap + LRU eviction
+# ---------------------------------------------------------------------------
+
+def test_registry_swap_is_atomic_handle_replacement(cp, tucker):
+    reg = ModelRegistry(buckets=(4,))
+    e1 = reg.publish("t", cp)
+    old_model = reg.get("t").model
+    e2 = reg.publish("t", tucker)
+    assert e2.generation == e1.generation + 1
+    assert reg.get("t").model is not old_model
+    # the old handle still answers — in-flight batches finish on it
+    assert old_model.values_at(np.zeros((1, 3), np.int32)).shape == (1,)
+
+
+def test_registry_unknown_tenant_names_residents(cp):
+    reg = ModelRegistry()
+    reg.publish("a", cp)
+    with pytest.raises(KeyError, match=r"not published.*'a'"):
+        reg.get("b")
+
+
+def test_registry_lru_eviction_respects_budget(cp):
+    one = resident_bytes(cp)
+    with scoped_registry():
+        reg = ModelRegistry(budget_bytes=2 * one, buckets=(4,))
+        reg.publish("a", cp)
+        reg.publish("b", cp)
+        reg.get("a")  # a is now more recently used than b
+        reg.publish("c", cp)  # over budget -> evict LRU = b
+        assert "a" in reg and "c" in reg and "b" not in reg
+        with pytest.raises(KeyError, match="evicted"):
+            reg.get("b")
+        assert reg.resident_bytes() == 2 * one
+        # the tenant just published is never the victim, even over budget
+        reg2 = ModelRegistry(budget_bytes=one // 2, buckets=(4,))
+        reg2.publish("only", cp)
+        assert "only" in reg2
+
+
+def test_registry_republish_after_eviction_clears_state(cp):
+    one = resident_bytes(cp)
+    reg = ModelRegistry(budget_bytes=one, buckets=(4,))
+    reg.publish("a", cp)
+    reg.publish("b", cp)  # evicts a
+    assert "a" not in reg
+    reg.publish("a", cp)  # back in (evicts b)
+    # eviction cleared a's slot, so this is a fresh publish, not a swap
+    assert "a" in reg and reg.get("a").generation == 1
+
+
+# ---------------------------------------------------------------------------
+# BatchQueue: coalescing, futures, failure delivery
+# ---------------------------------------------------------------------------
+
+def _queue(cp, **kw):
+    reg = ModelRegistry(buckets=kw.pop("buckets", (4, 16)))
+    reg.publish("t", cp)
+    return reg, BatchQueue(reg, buckets=reg.buckets, **kw)
+
+
+def test_queue_resolves_futures_with_correct_slices(cp):
+    t = lowrank()
+    reg, q = _queue(cp, max_wait_ms=5.0)
+    try:
+        futs = [q.submit("t", "values_at", np.asarray(t.inds[i:i + 3]))
+                for i in range(0, 30, 3)]
+        for i, f in enumerate(futs):
+            ref = cp.values_at(t.inds[3 * i:3 * i + 3])
+            np.testing.assert_allclose(np.asarray(f.result(timeout=10)),
+                                       np.asarray(ref), rtol=1e-5, atol=1e-6)
+    finally:
+        q.stop()
+
+
+def test_queue_coalesces_within_window(cp):
+    """Requests submitted while a worker waits out the window land in ONE
+    batch (fewer executed batches than submissions)."""
+    t = lowrank()
+    reg, q = _queue(cp, max_wait_ms=200.0)
+    try:
+        futs = [q.submit("t", "values_at", np.asarray(t.inds[i:i + 1]))
+                for i in range(8)]
+        wait(futs, timeout=10)
+        assert q.batches_executed < 8
+    finally:
+        q.stop()
+
+
+def test_queue_mixed_kinds_and_tenants_do_not_comingle(cp, tucker):
+    reg = ModelRegistry(buckets=(16,))
+    reg.publish("x", cp)
+    reg.publish("y", tucker)
+    q = BatchQueue(reg, buckets=(16,), max_wait_ms=50.0, workers=2)
+    try:
+        fv = q.submit("x", "values_at", np.zeros((2, 3), np.int32))
+        fk = q.submit("x", "top_k", np.arange(2), k=3)
+        fy = q.submit("y", "top_k", np.arange(2), k=3)
+        assert fv.result(timeout=10).shape == (2,)
+        sx, ix = fk.result(timeout=10)
+        sy, iy = fy.result(timeout=10)
+        assert ix.shape == (2, 3) and iy.shape == (2, 3)
+        # different models genuinely answered
+        assert not np.allclose(np.asarray(sx), np.asarray(sy))
+    finally:
+        q.stop()
+
+
+def test_queue_delivers_failures_via_futures(cp):
+    reg, q = _queue(cp, max_wait_ms=1.0)
+    try:
+        f = q.submit("nobody", "values_at", np.zeros((1, 3), np.int32))
+        with pytest.raises(KeyError, match="not published"):
+            f.result(timeout=10)
+    finally:
+        q.stop()
+
+
+def test_queue_submit_validation(cp):
+    reg, q = _queue(cp)
+    try:
+        with pytest.raises(ValueError, match="unknown query kind"):
+            q.submit("t", "frobnicate", np.zeros((1, 3), np.int32))
+        with pytest.raises(ValueError, match=r"\(n, order\)"):
+            q.submit("t", "values_at", np.zeros(3, np.int32))
+        with pytest.raises(ValueError, match="k >= 1"):
+            q.submit("t", "top_k", np.arange(2))
+    finally:
+        q.stop()
+    with pytest.raises(RuntimeError, match="stopped"):
+        q.submit("t", "values_at", np.zeros((1, 3), np.int32))
+
+
+def test_queue_stop_drains_pending(cp):
+    t = lowrank()
+    reg, q = _queue(cp, max_wait_ms=500.0)
+    futs = [q.submit("t", "values_at", np.asarray(t.inds[i:i + 2]))
+            for i in range(0, 20, 2)]
+    q.stop()  # must not strand the already-submitted futures
+    for f in futs:
+        assert f.result(timeout=1) is not None
+
+
+# ---------------------------------------------------------------------------
+# DecompServer: concurrency, hot-swap under load, metrics
+# ---------------------------------------------------------------------------
+
+def test_server_concurrent_clients_compile_once_per_bucket(cp):
+    """4 threads x mixed values_at/top_k: every result exact, and the
+    models never jit more than one variant per (bucket[, k]) shape."""
+    t = lowrank()
+    with scoped_registry():
+        with DecompServer(buckets=(4, 16), max_wait_ms=2.0,
+                          workers=2) as srv:
+            srv.publish("t", cp, t.dims)
+            ref_vals = np.asarray(cp.values_at(t.inds))
+            ref_scores, ref_items = (np.asarray(a) for a in
+                                     make_topk_ref(cp, 10, 3))
+            errors = []
+
+            def client(seed):
+                rng = np.random.default_rng(seed)
+                try:
+                    for _ in range(12):
+                        if rng.random() < 0.5:
+                            idx = rng.integers(0, t.nnz, rng.integers(1, 9))
+                            got = srv.values_at("t", np.asarray(t.inds)[idx])
+                            np.testing.assert_allclose(
+                                np.asarray(got), ref_vals[idx],
+                                rtol=1e-5, atol=1e-6)
+                        else:
+                            u = int(rng.integers(0, 10))
+                            scores, items = srv.top_k_for_user("t", u, k=3)
+                            np.testing.assert_array_equal(
+                                np.asarray(items), ref_items[u])
+                except Exception as e:  # surfaced below
+                    errors.append(e)
+
+            threads = [threading.Thread(target=client, args=(s,))
+                       for s in range(4)]
+            for th in threads:
+                th.start()
+            for th in threads:
+                th.join(timeout=60)
+            assert not errors, errors
+            model = srv.registry.get("t").model
+            assert model.compile_count["values_at"] <= 2  # one per bucket
+            assert model.compile_count["top_k"] <= 2      # one per bucket @ k=3
+
+
+def make_topk_ref(dec, n_users, k):
+    scores = make_score_fn(dec)(jnp.arange(n_users))
+    return jax.lax.top_k(scores, k)
+
+
+def test_server_hot_swap_drops_zero_inflight_queries(cp, tucker):
+    """Re-publishing a tenant while clients hammer it: every future
+    resolves (no drops, no exceptions), and results always come from one
+    complete model or the other."""
+    t = lowrank()
+    with DecompServer(buckets=(4, 16), max_wait_ms=1.0, workers=2) as srv:
+        srv.publish("t", cp, t.dims)
+        stop = threading.Event()
+        futs, errors = [], []
+
+        def client():
+            while not stop.is_set():
+                futs.append(srv.submit_values_at(
+                    "t", np.asarray(t.inds[:5])))
+                time.sleep(0.001)
+
+        threads = [threading.Thread(target=client) for _ in range(3)]
+        for th in threads:
+            th.start()
+        for swap_to in (tucker, cp, tucker):
+            time.sleep(0.05)
+            srv.publish("t", swap_to, t.dims)
+        time.sleep(0.05)
+        stop.set()
+        for th in threads:
+            th.join(timeout=30)
+        srv.close()  # drain
+        ref_a = np.asarray(cp.values_at(t.inds[:5]))
+        ref_b = np.asarray(tucker.values_at(t.inds[:5]))
+        assert len(futs) > 0
+        for f in futs:
+            got = np.asarray(f.result(timeout=10))  # zero drops
+            assert (np.allclose(got, ref_a, rtol=1e-4, atol=1e-5)
+                    or np.allclose(got, ref_b, rtol=1e-4, atol=1e-5))
+        assert srv.registry.get("t").generation == 4
+
+
+def test_server_emits_per_tenant_metrics(cp):
+    with scoped_registry() as reg:
+        with DecompServer(buckets=(4,), max_wait_ms=0.5) as srv:
+            srv.publish("acme", cp)
+            srv.values_at("acme", np.zeros((2, 3), np.int32))
+            srv.top_k("acme", np.arange(2), k=2)
+        snap = reg.snapshot()
+        assert snap["serve.acme.queries"]["value"] == 2.0
+        assert snap["serve.acme.query_ms"]["count"] == 2
+        assert snap["serve.batch_fill"]["count"] >= 2
+        assert 0.0 < snap["serve.batch_fill"]["mean"] <= 1.0
+        assert snap["serve.registry.models"]["value"] == 1.0
+        assert snap["serve.registry.resident_bytes"]["value"] \
+            == resident_bytes(cp)
+        assert snap["serve.qps"]["value"] > 0.0
+        assert "serve.queue.depth" in snap
+
+
+def test_server_from_config_and_session_integration():
+    t = lowrank()
+    cfg = RunConfig(method=MethodConfig(rank=4, niters=3),
+                    serve=ServeConfig(buckets=(8,), max_wait_ms=0.5,
+                                      tenants=("a", "b"),
+                                      max_resident_mb=64.0))
+    sess = Session.from_config(cfg, tensor=t)
+    try:
+        srv = sess.decomp_server()
+        assert sess.decomp_server() is srv  # cached like other stages
+        assert sorted(srv.tenants()) == ["a", "b"]
+        got = srv.values_at("b", np.asarray(t.inds[:6]))
+        ref = sess.serve_handle().query(np.asarray(t.inds[:6]))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=1e-6)
+        stats = srv.stats()
+        assert stats["batches_executed"] >= 1
+    finally:
+        sess.close()
+    with pytest.raises(RuntimeError, match="stopped"):
+        srv.submit_values_at("a", np.zeros((1, 3), np.int32))
+
+
+# ---------------------------------------------------------------------------
+# ServeDaemon HTTP surface
+# ---------------------------------------------------------------------------
+
+def test_daemon_http_endpoints(cp):
+    import json
+    import urllib.request
+
+    t = lowrank()
+    with scoped_registry():
+        with DecompServer(buckets=(4,), max_wait_ms=0.5) as srv:
+            srv.publish("web", cp, t.dims)
+            with ServeDaemon(srv, port=0) as daemon:
+                def get(path):
+                    return json.loads(urllib.request.urlopen(
+                        daemon.url + path, timeout=10).read())
+
+                health = get("/healthz")
+                assert health["status"] == "serving"
+                assert "web" in health["tenants"]
+                tenants = get("/v1/tenants")
+                assert tenants["web"]["dims"] == list(t.dims)
+                topk = get("/v1/top_k?tenant=web&user=1&k=3")
+                ref_s, ref_i = make_topk_ref(cp, 10, 3)
+                assert topk["items"] == [int(i) for i in ref_i[1]]
+                req = urllib.request.Request(
+                    daemon.url + "/v1/values_at",
+                    data=json.dumps(
+                        {"tenant": "web",
+                         "coords": np.asarray(t.inds[:3]).tolist()}).encode())
+                vals = json.loads(urllib.request.urlopen(
+                    req, timeout=10).read())
+                np.testing.assert_allclose(
+                    vals["values"], np.asarray(cp.values_at(t.inds[:3])),
+                    rtol=1e-5, atol=1e-6)
+                # prometheus exposition carries the per-tenant metrics
+                prom = urllib.request.urlopen(
+                    daemon.url + "/metrics", timeout=10).read().decode()
+                assert "serve_web_query_ms" in prom
+                assert "serve_registry_models" in prom
+                # unknown tenant -> 404 with the resident set named
+                with pytest.raises(urllib.error.HTTPError) as ei:
+                    urllib.request.urlopen(
+                        daemon.url + "/v1/top_k?tenant=ghost&user=0&k=2",
+                        timeout=10)
+                assert ei.value.code == 404
+                # clean scripted shutdown
+                sreq = urllib.request.Request(
+                    daemon.url + "/v1/shutdown", data=b"")
+                urllib.request.urlopen(sreq, timeout=10)
+                assert daemon.shutdown_requested.wait(timeout=5)
